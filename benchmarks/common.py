@@ -1,0 +1,77 @@
+"""Shared benchmark infrastructure: cached characterization, CSV emission."""
+
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import time
+
+import numpy as np
+
+from repro.core.characterization import CharacterizationTable, characterize
+from repro.data.camera import CameraConfig, SyntheticCamera
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/bench")
+CACHE = os.path.join(RESULTS_DIR, "_tables.pkl")
+
+
+def ensure_dir() -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+
+
+def camera_factory(dynamics: str, seed: int = 7, camera_id: str = "cam0"):
+    return lambda: SyntheticCamera(CameraConfig(
+        camera_id=camera_id, dynamics=dynamics, seed=seed))
+
+
+_TABLES: dict | None = None
+
+
+def get_table(dynamics: str, *, clip_len: int = 32, seed: int = 7
+              ) -> CharacterizationTable:
+    """Characterization tables are expensive (~20 s each); cache on disk."""
+    global _TABLES
+    ensure_dir()
+    if _TABLES is None:
+        if os.path.exists(CACHE):
+            with open(CACHE, "rb") as fh:
+                _TABLES = pickle.load(fh)
+        else:
+            _TABLES = {}
+    key = (dynamics, clip_len, seed)
+    if key not in _TABLES:
+        _TABLES[key] = characterize(camera_factory(dynamics, seed),
+                                    clip_len=clip_len)
+        with open(CACHE, "wb") as fh:
+            pickle.dump(_TABLES, fh)
+    return _TABLES[key]
+
+
+def emit(name: str, us_per_call: float, derived: str, payload: dict) -> None:
+    """CSV line (scaffold contract) + JSON artifact."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+    ensure_dir()
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as fh:
+        json.dump(payload, fh, indent=1, default=_tolist)
+
+
+def _tolist(o):
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    if isinstance(o, (np.floating, np.integer)):
+        return o.item()
+    return str(o)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.monotonic() - self.t0
+
+    @property
+    def us(self) -> float:
+        return self.seconds * 1e6

@@ -1,0 +1,199 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Hillclimb harness: measure a cell's roofline terms under config variants.
+
+Each experiment is hypothesis -> change (a dataclasses.replace on the arch
+config) -> re-lower -> re-analyze; results append to
+results/perf_iterations.jsonl, which EXPERIMENTS.md §Perf is built from.
+
+Usage: PYTHONPATH=src:. python -m benchmarks.hillclimb <experiment>
+       (see EXPERIMENTS for the registry)
+"""
+
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+
+from benchmarks.hlo_analysis import analyze_hlo
+from repro.configs import get_config
+from repro.configs.base import SHAPE_CELLS
+from repro.launch.mesh import V5E, make_production_mesh
+from repro.launch.steps import (build_prefill_step, build_serve_step,
+                                build_train_step)
+
+WIRE_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+LOG = "results/perf_iterations.jsonl"
+
+
+def measure(cfg, shape: str, *, multi_pod=False, grad_compress=None) -> dict:
+    cell = SHAPE_CELLS[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    builder = {"train": build_train_step, "prefill": build_prefill_step,
+               "decode": build_serve_step}[cell.kind]
+    kw = {"grad_compress": grad_compress} if (
+        cell.kind == "train" and grad_compress is not None) else {}
+    bundle = builder(cfg, cell, mesh, **kw)
+    t0 = time.time()
+    with mesh:
+        compiled = jax.jit(
+            bundle.fn, in_shardings=bundle.in_shardings,
+            out_shardings=bundle.out_shardings,
+            donate_argnums=bundle.donate_argnums
+        ).lower(*bundle.arg_structs).compile()
+    a = analyze_hlo(compiled.as_text())
+    mem = compiled.memory_analysis()
+    hbm = 2.0 * max(0.0, a.elem_bytes - a.f32_of_bf16_surface)
+    wire = sum(WIRE_FACTOR[k] * v for k, v in a.collective_bytes.items())
+    terms = {"compute": a.dot_flops / V5E.peak_flops_bf16,
+             "memory": hbm / V5E.hbm_bandwidth,
+             "collective": wire / V5E.ici_bandwidth}
+    return {
+        "terms_ms": {k: round(v * 1e3, 2) for k, v in terms.items()},
+        "bottleneck": max(terms, key=terms.get),
+        "step_bound_ms": round(max(terms.values()) * 1e3, 2),
+        "dot_flops": a.dot_flops,
+        "wire_gb": round(wire / 1e9, 2),
+        "collectives_by_kind_gb": {k: round(v / 1e9, 2)
+                                   for k, v in a.collective_bytes.items()},
+        "hbm_gb": round(hbm / 1e9, 1),
+        "mem_args_temp_gb": round((mem.argument_size_in_bytes
+                                   + mem.temp_size_in_bytes) / 1e9, 2),
+        "compile_s": round(time.time() - t0, 1),
+    }
+
+
+def record(experiment: str, arch: str, shape: str, hypothesis: str,
+           change: str, before: dict, after: dict, verdict: str) -> None:
+    os.makedirs("results", exist_ok=True)
+    with open(LOG, "a") as fh:
+        fh.write(json.dumps({
+            "experiment": experiment, "arch": arch, "shape": shape,
+            "hypothesis": hypothesis, "change": change,
+            "before": before, "after": after, "verdict": verdict,
+        }) + "\n")
+    print(f"[{experiment}] {verdict}")
+
+
+# -----------------------------------------------------------------------------
+# experiments
+# -----------------------------------------------------------------------------
+
+
+def phi3_prefill_sp() -> None:
+    """phi3-medium prefill: heads (40/10) don't divide model=16 -> GSPMD
+    computes attention with ~8x redundancy.  Hypothesis: sequence-parallel
+    attention (q S-sharded, attention weights fsdp-only) removes the
+    redundancy: compute term should drop ~8x toward llama3-8b-like levels
+    (napkin: phi3 prefill useful-flops ~ 2*14e9*1M/256 = 109 TF/dev ->
+    ~0.56 s compute)."""
+    cfg = get_config("phi3-medium-14b")
+    before = measure(cfg, "prefill_32k")
+    after = measure(dataclasses.replace(cfg, sequence_parallel=True),
+                    "prefill_32k")
+    ratio = before["terms_ms"]["compute"] / max(after["terms_ms"]["compute"], 1e-9)
+    record("phi3_prefill_sp", "phi3-medium-14b", "prefill_32k",
+           "indivisible heads (40H/10KV vs model=16) cause ~8x redundant "
+           "attention compute; SP shards the sequence instead",
+           "sequence_parallel=True (q S-sharded, attn weights fsdp-only)",
+           before, after,
+           f"{'CONFIRMED' if ratio > 2 else 'REFUTED'}: compute "
+           f"{before['terms_ms']['compute']} -> {after['terms_ms']['compute']}"
+           f" ms ({ratio:.1f}x)")
+
+
+def moonshot_train_tp() -> None:
+    """moonshot train: most collective-bound cell (EP dispatch + TP ARs).
+    Hypothesis: expert-TP (shard d_ff inside experts, experts replicated)
+    eliminates the EP dispatch resharding; with F=1408 -> 88/shard the MXU
+    tiles get thin but wire bytes should drop >2x."""
+    cfg = get_config("moonshot-v1-16b-a3b")
+    before = measure(cfg, "train_4k")
+    after = measure(dataclasses.replace(cfg, moe_parallel="tp"), "train_4k")
+    ratio = before["terms_ms"]["collective"] / max(
+        after["terms_ms"]["collective"], 1e-9)
+    record("moonshot_train_tp", "moonshot-v1-16b-a3b", "train_4k",
+           "EP dispatch reshards the token buffer across the model axis "
+           "every layer; expert-TP keeps tokens local",
+           'moe_parallel="ep" -> "tp"', before, after,
+           f"{'CONFIRMED' if ratio > 1.5 else 'REFUTED'}: collective "
+           f"{before['terms_ms']['collective']} -> "
+           f"{after['terms_ms']['collective']} ms ({ratio:.1f}x)")
+
+
+def llama3_train_sp() -> None:
+    """llama3 train: collective-bound on Megatron-TP activation all-reduces
+    (2 AR x [B,S,D] per layer fwd + bwd).  Hypothesis: sequence-parallel
+    activations turn each AR into RS+AG (half the wire bytes) and drop
+    activation memory by 16x between blocks."""
+    cfg = get_config("llama3-8b")
+    before = measure(cfg, "train_4k")
+    after = measure(dataclasses.replace(cfg, sequence_parallel=True),
+                    "train_4k")
+    ratio = before["terms_ms"]["collective"] / max(
+        after["terms_ms"]["collective"], 1e-9)
+    record("llama3_train_sp", "llama3-8b", "train_4k",
+           "TP activation all-reduces dominate; SP lowers them to RS+AG "
+           "(half wire) with S-sharded activations",
+           "sequence_parallel=True", before, after,
+           f"{'CONFIRMED' if ratio > 1.3 else 'REFUTED'}: collective "
+           f"{before['terms_ms']['collective']} -> "
+           f"{after['terms_ms']['collective']} ms ({ratio:.1f}x)")
+
+
+def llama3_train_zero3() -> None:
+    """Iteration 2 after SP was refuted (GSPMD added boundary all-gathers
+    without demoting the row-parallel ARs to reduce-scatters).  Hypothesis:
+    drop tensor parallelism entirely -- ZeRO-3 over all 256 devices.  The
+    per-activation ARs (254 x 0.5 GB) disappear; collectives become
+    per-layer weight all-gathers (~16 GB bf16 x 3 passes = 48 GB/dev) +
+    gradient reduce-scatter (~16 GB): napkin ~70-100 GB wire vs 634 GB."""
+    cfg = get_config("llama3-8b")
+    before = measure(cfg, "train_4k")
+    after = measure(dataclasses.replace(cfg, zero3=True), "train_4k")
+    ratio = before["terms_ms"]["collective"] / max(
+        after["terms_ms"]["collective"], 1e-9)
+    record("llama3_train_zero3", "llama3-8b", "train_4k",
+           "TP activation ARs dominate; ZeRO-3 (no TP, weights sharded over "
+           "all 256 devices) replaces them with per-layer weight AGs",
+           "zero3=True", before, after,
+           f"{'CONFIRMED' if ratio > 1.5 else 'REFUTED'}: collective "
+           f"{before['terms_ms']['collective']} -> "
+           f"{after['terms_ms']['collective']} ms ({ratio:.1f}x)")
+
+
+def moonshot_train_zero3() -> None:
+    """MoE variant of the same hypothesis for the most collective-bound
+    cell: EP dispatch + TP ARs vs ZeRO-3 weight AGs (16B params bf16 =
+    32 GB/dev-gather x ~3 passes ~ 96 GB; baseline measured 1.6 TB)."""
+    cfg = get_config("moonshot-v1-16b-a3b")
+    before = measure(cfg, "train_4k")
+    after = measure(dataclasses.replace(cfg, zero3=True), "train_4k")
+    ratio = before["terms_ms"]["collective"] / max(
+        after["terms_ms"]["collective"], 1e-9)
+    record("moonshot_train_zero3", "moonshot-v1-16b-a3b", "train_4k",
+           "EP dispatch resharding + TP ARs dominate; ZeRO-3 keeps tokens "
+           "device-local and gathers expert weights instead",
+           "zero3=True", before, after,
+           f"{'CONFIRMED' if ratio > 1.5 else 'REFUTED'}: collective "
+           f"{before['terms_ms']['collective']} -> "
+           f"{after['terms_ms']['collective']} ms ({ratio:.1f}x)")
+
+
+EXPERIMENTS = {
+    "phi3_prefill_sp": phi3_prefill_sp,
+    "moonshot_train_tp": moonshot_train_tp,
+    "llama3_train_sp": llama3_train_sp,
+    "llama3_train_zero3": llama3_train_zero3,
+    "moonshot_train_zero3": moonshot_train_zero3,
+}
+
+
+if __name__ == "__main__":
+    for name in (sys.argv[1:] or EXPERIMENTS):
+        EXPERIMENTS[name]()

@@ -1,0 +1,272 @@
+"""Loop-aware analysis of compiled (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop BODY once, so a
+scan-over-layers model under-reports FLOPs by ~L x and collective bytes by
+the trip count.  This module parses the HLO text into its computation graph,
+reads while-loop trip counts from ``backend_config known_trip_count`` (with a
+condition-constant fallback), and propagates execution multipliers from
+ENTRY -- yielding trip-corrected:
+
+  * dot FLOPs (2 x prod(output dims) x prod(contracting dims)), the MXU term
+  * collective bytes by kind, the ICI/DCN term
+  * elementwise byte-traffic estimate (output sizes of non-dot ops), a
+    lower-bound HBM-traffic term
+  * bf16->f32 "float normalization" convert volume (CPU-backend artifact,
+    subtracted in the TPU-adjusted memory estimate)
+
+Shapes in post-SPMD HLO are shard-local, so every number is PER DEVICE.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = ["analyze_hlo", "HLOAnalysis"]
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4,
+                "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# "<type> <op>(" where type is a tuple "(...)" (no nested parens in HLO
+# types) or a single token.
+_OP_RE = re.compile(r"^(\([^()]*\)|\S+)\s+([\w\-]+)\(")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\((.*)\)\s*->.*\{\s*$")
+_PARAM_RE = re.compile(r"([\w\.\-]+):\s*([^,()]+(?:\([^)]*\))?)")
+_CALL_ATTR = re.compile(r"(?:calls|to_apply|body|condition)=%([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+# Ops that are views / metadata / buffer plumbing: no HBM traffic of their
+# own.  (parameter & get-tuple-element of a while-carried tuple would
+# otherwise count the ENTIRE model state once per loop iteration.)
+_FREE_OPS = frozenset({
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "after-all", "reshape", "optimization-barrier", "partition-id",
+    "replica-id", "domain", "token",
+})
+
+
+def _shape_bytes_elems(type_str: str) -> tuple[int, int]:
+    """Total (elements, bytes) across every array shape in a type string."""
+    elems = bytes_ = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dtype]
+    return elems, bytes_
+
+
+def _dims_of(type_str: str) -> list[int] | None:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return [int(x) for x in m.group(2).split(",") if x]
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    dot_flops: float = 0.0
+    coll_bytes: dict = dataclasses.field(default_factory=dict)
+    elem_bytes: float = 0.0
+    f32_of_bf16_bytes: float = 0.0
+    whiles: list = dataclasses.field(default_factory=list)   # (body, cond, trip)
+    calls: list = dataclasses.field(default_factory=list)
+
+
+def _parse(hlo: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    current: _Comp | None = None
+    symbols: dict[str, str] = {}     # per-computation: %name -> type string
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        hm = _HEADER_RE.match(line)
+        if hm:
+            current = _Comp(name=hm.group(1))
+            comps[current.name] = current
+            symbols = {}
+            for pname, ptype in _PARAM_RE.findall(hm.group(2)):
+                symbols[pname] = ptype
+            continue
+        if current is None:
+            continue
+        if " = " not in line:
+            continue
+        lhs, rhs = line.split(" = ", 1)
+        om = _OP_RE.match(rhs)
+        if not om:
+            continue
+        out_type, op = om.groups()
+        result_name = lhs.lstrip("%").rstrip()
+        symbols[result_name] = out_type
+        args_str = rhs[om.end():]
+
+        if op == "dot":
+            dims_out = _dims_of(out_type)
+            # lhs operand name -> its recorded type
+            am = re.match(r"%([\w\.\-]+)", args_str)
+            csize = 1
+            if am and dims_out is not None:
+                lhs_type = symbols.get(am.group(1), "")
+                lhs_dims = _dims_of(lhs_type)
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                if lhs_dims and cm:
+                    for ci in (int(x) for x in cm.group(1).split(",") if x):
+                        if ci < len(lhs_dims):
+                            csize *= lhs_dims[ci]
+            if dims_out is not None:
+                out_n = 1
+                for d in dims_out:
+                    out_n *= d
+                current.dot_flops += 2.0 * out_n * csize
+            continue
+        if op == "while":
+            attrs = dict(re.findall(r"(body|condition)=%([\w\.\-]+)", line))
+            tm = _TRIP_RE.search(line)
+            trip = int(tm.group(1)) if tm else None
+            if "body" in attrs:
+                current.whiles.append((attrs["body"],
+                                       attrs.get("condition"), trip))
+            continue
+        matched_coll = False
+        for kind in _COLLECTIVES:
+            if op == kind or op == kind + "-start":
+                _, b = _shape_bytes_elems(out_type)
+                current.coll_bytes[kind] = current.coll_bytes.get(kind, 0) + b
+                matched_coll = True
+                break
+            if op == kind + "-done":
+                matched_coll = True
+                break
+        if matched_coll:
+            continue
+        # calls into sub-computations (fusion / call / reduce / conditional...)
+        is_fusion = op in ("fusion", "reduce", "map", "scatter", "sort",
+                           "reduce-window", "select-and-scatter")
+        for callee in _CALL_ATTR.findall(line):
+            current.calls.append((callee, is_fusion))
+        bm = _BRANCHES.search(line)
+        if bm:
+            current.calls.extend(
+                (b.strip().lstrip("%"), False) for b in bm.group(1).split(","))
+        if op in _FREE_OPS:
+            continue
+        if op in ("dynamic-update-slice", "dynamic_update_slice"):
+            # in-place update: traffic = the written slice, not the buffer
+            names = re.findall(r"%([\w\.\-]+)", args_str)
+            upd_type = symbols.get(names[1], "") if len(names) > 1 else ""
+            _, b = _shape_bytes_elems(upd_type)
+            current.elem_bytes += b
+            continue
+        _, b = _shape_bytes_elems(out_type)
+        current.elem_bytes += b
+        if op == "convert" and out_type.startswith("f32"):
+            am = re.match(r"%([\w\.\-]+)", args_str)
+            if am and symbols.get(am.group(1), "").startswith("bf16"):
+                current.f32_of_bf16_bytes += b
+        elif op == "fusion" and "convert" in line and "bf16" in line \
+                and out_type.startswith("f32"):
+            # wrapped_convert fusions
+            if re.search(r"wrapped_convert", line):
+                current.f32_of_bf16_bytes += b
+    return comps
+
+
+def _fallback_trip(cond_name: str | None, comps: dict[str, _Comp],
+                   texts: dict[str, str]) -> int:
+    if cond_name is None:
+        return 1
+    best = 1
+    for m in re.finditer(r"constant\((\d+)\)", texts.get(cond_name, "")):
+        best = max(best, int(m.group(1)))
+    return best
+
+
+def _comp_texts(hlo: str) -> dict[str, str]:
+    texts: dict[str, str] = {}
+    current, buf = None, []
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        hm = _HEADER_RE.match(line)
+        if hm:
+            if current:
+                texts[current] = "\n".join(buf)
+            current, buf = hm.group(1), []
+        elif current:
+            buf.append(line)
+    if current:
+        texts[current] = "\n".join(buf)
+    return texts
+
+
+@dataclasses.dataclass
+class HLOAnalysis:
+    dot_flops: float
+    collective_bytes: dict
+    elem_bytes: float              # surface traffic (fusion boundaries), trip-corrected
+    f32_of_bf16_bytes: float       # trip-corrected convert TRAFFIC (CPU artifact)
+    f32_of_bf16_surface: float     # surface-multiplier convert traffic
+    f32_of_bf16_resident: float    # once-counted convert RESIDENCY estimate
+    trip_counts: dict
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def analyze_hlo(hlo: str) -> HLOAnalysis:
+    comps = _parse(hlo)
+    texts = _comp_texts(hlo)
+    em = re.search(r"^ENTRY\s+%([\w\.\-]+)", hlo, re.M)
+    entry = em.group(1) if em else next(iter(comps))
+
+    mult: dict[str, float] = defaultdict(float)          # full reachability
+    surf: dict[str, float] = defaultdict(float)          # stops at fusions
+    trip_counts: dict[str, int] = {}
+
+    def visit(name: str, m: float, s: float, depth: int = 0) -> None:
+        comp = comps.get(name)
+        if comp is None or m <= 0 or depth > 64:
+            return
+        mult[name] += m
+        surf[name] += s
+        for callee, is_fusion in comp.calls:
+            # fusion internals execute (dots count) but their elementwise
+            # intermediates never touch HBM (surface multiplier 0)
+            visit(callee, m, 0.0 if is_fusion else s, depth + 1)
+        for body, cond, trip in comp.whiles:
+            if trip is None:
+                trip = _fallback_trip(cond, comps, texts)
+            trip_counts[body] = trip
+            visit(body, m * trip, s * trip, depth + 1)
+            if cond:
+                visit(cond, m * (trip + 1), 0.0, depth + 1)
+
+    visit(entry, 1.0, 1.0)
+
+    dot = sum(c.dot_flops * mult[c.name] for c in comps.values())
+    coll: dict[str, float] = defaultdict(float)
+    for c in comps.values():
+        for kind, b in c.coll_bytes.items():
+            coll[kind] += b * mult[c.name]
+    elem = sum(c.elem_bytes * surf[c.name] for c in comps.values())
+    f32bf16 = sum(c.f32_of_bf16_bytes * mult[c.name] for c in comps.values())
+    f32surf = sum(c.f32_of_bf16_bytes * surf[c.name] for c in comps.values())
+    f32res = sum(c.f32_of_bf16_bytes * (1.0 if mult[c.name] > 0 else 0.0)
+                 for c in comps.values())
+    return HLOAnalysis(dot_flops=dot, collective_bytes=dict(coll),
+                       elem_bytes=elem, f32_of_bf16_bytes=f32bf16,
+                       f32_of_bf16_surface=f32surf,
+                       f32_of_bf16_resident=f32res,
+                       trip_counts=trip_counts)

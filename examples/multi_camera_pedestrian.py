@@ -1,0 +1,92 @@
+"""End-to-end IoT-Edge machine vision: cameras -> Mez -> detector -> F1.
+
+The paper's headline experiment (Section 5.1) as a runnable script: five
+cameras stream complex scenes under interference; the subscriber runs the
+pedestrian detector on DELIVERED (quality-adapted) frames and we measure the
+application-level normalized F1 against ground truth -- demonstrating the
+latency/accuracy trade the controller actually made.
+
+Run:  PYTHONPATH=src python examples/multi_camera_pedestrian.py
+"""
+
+import numpy as np
+
+from repro.configs.mez_edge import CONFIG as EDGE
+from repro.core.api import SubscribeSpec
+from repro.core.broker import MezSystem
+from repro.core.channel import calibrated_channel
+from repro.core.characterization import characterize, fit_latency_regression
+from repro.core import detector as det
+from repro.core import knobs as K
+from repro.data.camera import CameraConfig, SyntheticCamera
+
+
+def main() -> None:
+    table = characterize(
+        lambda: SyntheticCamera(CameraConfig(dynamics="complex",
+                                             seed=EDGE.seed)),
+        clip_len=16)
+    channel = calibrated_channel(seed=3, workload="dukemtmc")
+    system = MezSystem(channel)
+    truth: dict[float, np.ndarray] = {}
+    sources = {}
+    for i in range(EDGE.num_cameras):
+        cam = system.add_camera(f"cam{i}")
+        src = SyntheticCamera(CameraConfig(camera_id=f"cam{i}",
+                                           dynamics="complex", seed=EDGE.seed))
+        sources[f"cam{i}"] = src
+        cam.background = src.background
+        sizes = np.linspace(table.sizes_sorted[0], table.sizes_sorted[-1], 16)
+        reg = fit_latency_regression(
+            sizes, channel.regression_points(sizes, n=EDGE.num_cameras))
+        cam.set_target(EDGE.latency_target, EDGE.accuracy_target, table, reg)
+        for ts, frame, gt in src.stream(40):
+            cam.publish(ts, frame)
+            if i == 0:
+                truth[round(ts, 6)] = gt
+
+    # subscriber: detect pedestrians on delivered frames
+    bg = sources["cam0"].background
+    h, w = bg.shape[:2]
+    results, baseline = [], []
+    lats = []
+    for d in system.edge.subscribe(SubscribeSpec(
+            "app0", "cam0", 0.0, 8.0, EDGE.latency_target,
+            EDGE.accuracy_target)):
+        gt = truth.get(round(d.timestamp, 6))
+        if gt is None:
+            continue
+        if d.frame is None:
+            results.append((gt, np.zeros((0, 4), np.float32)))
+            continue
+        lats.append(d.latency.total)
+        # the subscriber's background model follows the degraded stream
+        if d.knob_index >= 0:
+            bg_t = K.transform_frame(bg, table.settings[d.knob_index])
+        else:
+            bg_t = bg
+        boxes = det.detect(np.asarray(d.frame), bg_t, scale_to=(h, w))
+        results.append((gt, boxes))
+        baseline.append((gt, det.detect(
+            sources["cam0"].background * 0 + 0, bg, scale_to=(h, w))))
+
+    # baseline F1: detector on the ORIGINAL frames
+    src = SyntheticCamera(CameraConfig(camera_id="cam0", dynamics="complex",
+                                       seed=EDGE.seed))
+    base = []
+    for ts, frame, gt in src.stream(40):
+        base.append((gt, det.detect(frame, bg, scale_to=(h, w))))
+
+    f1 = det.normalized_f1(results, base)
+    lat = np.asarray(lats)
+    print(f"delivered {len(lats)} frames under DukeMTMC-scale interference")
+    print(f"  settled p95 latency: {np.percentile(lat[10:], 95)*1e3:.0f} ms "
+          f"(bound {EDGE.latency_target*1e3:.0f} ms)")
+    print(f"  application normalized F1: {f1*100:.1f}% "
+          f"(bound {EDGE.accuracy_target*100:.0f}%)")
+    print(f"  accuracy loss: {(1-f1)*100:.1f}% "
+          f"(paper reports <= 4.2% worst case)")
+
+
+if __name__ == "__main__":
+    main()

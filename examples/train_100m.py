@@ -1,0 +1,61 @@
+"""End-to-end training driver: a ~100M-parameter qwen3-family model trained
+for a few hundred steps on the synthetic token stream, with checkpointing,
+failure injection + recovery, and (optionally) compressed gradient transport.
+
+This is the (b) deliverable's end-to-end driver.  On this CPU container a
+~100M model at batch 8 x seq 256 runs a step in a few seconds; pass --steps
+200 for the full run or keep the default quick profile.
+
+Run:  PYTHONPATH=src python examples/train_100m.py [--steps 200]
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+
+
+def build_100m_config():
+    """qwen3 wiring scaled to ~100M params (12L x 512d x 8H, 32k vocab)."""
+    base = get_config("qwen3-1.7b")
+    return dataclasses.replace(
+        base, name="qwen3-100m", num_layers=12, d_model=512, num_heads=8,
+        num_kv_heads=4, head_dim=64, d_ff=1536, vocab_size=32000,
+        qk_norm=True, tie_embeddings=True, param_dtype="float32",
+        compute_dtype="float32", remat="none", train_microbatches=1,
+        attention_chunk=128)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)   # ~45 s/step on 1 CPU core;
+                                                   # use --steps 200+ on real HW
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt_100m")
+    ap.add_argument("--grad-bits", type=int, default=16)
+    ap.add_argument("--inject-failure-at", type=int, default=-1)
+    args = ap.parse_args()
+
+    import repro.configs as C
+    cfg = build_100m_config()
+    C.ARCHS[cfg.name] = cfg    # register for the launcher
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name}  ~{n_params/1e6:.0f}M params  "
+          f"devices: {len(jax.devices())}")
+
+    from repro.launch.train import train
+    out = train(cfg.name, steps=args.steps, batch=args.batch, seq=args.seq,
+                reduced=False, checkpoint_dir=args.ckpt, checkpoint_every=20,
+                grad_bits=args.grad_bits,
+                inject_failure_at=args.inject_failure_at, log_every=10)
+    print(f"loss: {out['first_loss']:.3f} -> {out['final_loss']:.3f} over "
+          f"{out['steps']} steps ({out['wall_s']:.0f}s, "
+          f"{out['wall_s']/max(out['steps'],1):.2f}s/step)")
+    assert out["final_loss"] < out["first_loss"], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,238 @@
+"""Config system: model configs, shape cells, dtype policies.
+
+One ``ModelConfig`` dataclass covers every assigned architecture family
+(dense / MoE / SSM / hybrid / VLM / enc-dec); family-specific fields are
+ignored by families that don't use them.  Each arch file in this package
+exports ``CONFIG`` (the exact published configuration) and the registry in
+``repro.configs`` maps ``--arch`` ids to them.
+
+``reduced()`` derives the smoke-test configuration (same family & wiring,
+tiny dims) used by per-arch CPU tests; the full configs are exercised only
+via the dry-run (ShapeDtypeStruct, no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = ["ModelConfig", "ShapeCell", "SHAPE_CELLS", "dtype_of"]
+
+_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+           "float16": jnp.float16}
+
+
+def dtype_of(name: str):
+    return _DTYPES[name]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+
+    # attention
+    qk_norm: bool = False
+    rope_theta: float = 1.0e4
+    mrope_sections: tuple[int, int, int] | None = None   # qwen2-vl M-RoPE
+    attention_impl: str = "chunked"  # naive | chunked | pallas
+    attention_chunk: int = 512
+
+    # MoE
+    num_experts: int = 0
+    num_experts_per_token: int = 0
+    num_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+    # SSM (Mamba2 / zamba2 backbone)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_conv: int = 4
+
+    # hybrid (zamba2): a SHARED full-attention block applied every
+    # ``shared_attn_period`` backbone layers, with per-invocation LoRA.
+    shared_attn_period: int = 0
+    lora_rank: int = 0
+
+    # RWKV6
+    rwkv_decay_lora: int = 64        # rank of the data-dependent decay MLP
+    rwkv_mix_lora: int = 32          # rank of the token-shift mix MLPs
+
+    # enc-dec (seamless)
+    is_encoder_decoder: bool = False
+    num_decoder_layers: int = 0
+
+    # numerics / runtime
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    norm_type: str = "rms"           # rms | layer
+    act: str = "swiglu"              # swiglu | gelu | relu_sq
+    tie_embeddings: bool = False
+    remat: str = "none"              # none | full | dots
+    scan_layers: bool = True
+
+    # sharding hints (consumed by repro.sharding.partition)
+    fsdp: bool = True                # shard params over the data axis too
+    moe_parallel: str = "ep"         # ep (experts over model) | tp
+    # gradient accumulation: split the global batch into this many
+    # microbatches per train step (activation memory ~ 1/M)
+    train_microbatches: int = 1
+    # Megatron-SP-style sequence parallelism: activations between blocks are
+    # sharded over (model) on the SEQUENCE dim.  XLA then lowers the TP
+    # all-reduces into reduce-scatter + all-gather pairs (half the wire
+    # bytes) and per-device activation memory drops by the model-axis size.
+    # Also the escape hatch for archs whose head counts don't divide the
+    # model axis (phi3: 40H/10KV vs 16): attention runs context-parallel
+    # (q sequence-sharded) instead of head-sharded-with-redundancy.
+    sequence_parallel: bool = False
+    # ZeRO-3 mode: NO tensor parallelism -- weights/optimizer shard over ALL
+    # mesh axes (pod x data x model) on their d_model dim and the batch
+    # shards over all axes too.  Collectives become per-layer weight
+    # all-gathers + gradient reduce-scatters (no per-activation ARs).
+    zero3: bool = False
+
+    # modality frontend stub (vlm/audio): #stub-embedding positions
+    frontend_tokens: int = 0
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 256 so the vocab dim always shards
+        over the model axis (Megatron-style; padded logit columns are masked
+        to -inf in the loss/serve paths)."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic backbones only (SSM / hybrid)."""
+        return self.family in ("ssm", "hybrid")
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test configuration: same family/wiring, tiny dims."""
+        kv = max(1, min(self.num_kv_heads, 2))
+        heads = max(kv * 2, 4)
+        mrope = (2, 3, 3) if self.mrope_sections is not None else None  # half=8
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            mrope_sections=mrope,
+            num_layers=min(self.num_layers, 2 * max(1, self.shared_attn_period)
+                           if self.shared_attn_period else 2),
+            num_decoder_layers=min(self.num_decoder_layers, 2),
+            d_model=64,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=16,
+            d_ff=96,
+            vocab_size=512,
+            num_experts=min(self.num_experts, 8) if self.num_experts else 0,
+            num_experts_per_token=(min(self.num_experts_per_token, 2)
+                                   if self.num_experts_per_token else 0),
+            num_shared_experts=min(self.num_shared_experts, 1),
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_headdim=16 if self.ssm_state else self.ssm_headdim,
+            lora_rank=min(self.lora_rank, 4),
+            rwkv_decay_lora=8,
+            rwkv_mix_lora=4,
+            attention_chunk=32,
+            frontend_tokens=min(self.frontend_tokens, 16),
+            param_dtype="float32",
+            compute_dtype="float32",
+        )
+
+    # -- parameter counting (for MODEL_FLOPS = 6 N D in the roofline) ----------
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding included; approximate for
+        exotic families but consistent with the implementations here)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        h, kh, hd = self.num_heads, self.num_kv_heads, self.head_dim
+        attn = d * h * hd + 2 * d * kh * hd + h * hd * d
+        if self.act == "swiglu":
+            mlp = 3 * d * f
+        else:
+            mlp = 2 * d * f
+        per_layer_dense = attn + mlp + 2 * d
+        if self.family == "moe":
+            expert = 3 * d * f if self.act == "swiglu" else 2 * d * f
+            moe = self.num_experts * expert + d * self.num_experts
+            moe += self.num_shared_experts * expert
+            per_layer = attn + moe + 2 * d
+            total = self.num_layers * per_layer
+        elif self.family == "ssm":       # rwkv6
+            d_in = d
+            tm = (4 * d * d_in          # r,k,v,g   (w is lora-only)
+                  + d * hd              # output proj is d x d below; approx
+                  )
+            tm = 5 * d * d              # r,k,v,g,o
+            tm += 5 * self.rwkv_mix_lora * 2 * d + self.rwkv_decay_lora * 2 * d
+            cm = 2 * d * f
+            per_layer = tm + cm + 2 * d
+            total = self.num_layers * per_layer
+        elif self.family == "hybrid":    # zamba2: mamba2 backbone + shared attn
+            d_in = d * self.ssm_expand
+            nheads = d_in // self.ssm_headdim
+            mamba = (d * (2 * d_in + 2 * self.ssm_state + nheads)  # in_proj
+                     + d_in * d                                    # out_proj
+                     + self.ssm_conv * (d_in + 2 * self.ssm_state)
+                     + 2 * nheads)                                 # A, D
+            per_layer = mamba + 2 * d
+            total = self.num_layers * per_layer
+            n_inv = self.num_layers // max(1, self.shared_attn_period)
+            shared = attn + mlp + 2 * d
+            lora = n_inv * self.lora_rank * 2 * d * 4
+            total += shared + lora
+        else:
+            total = self.num_layers * per_layer_dense
+        if self.is_encoder_decoder:
+            # decoder layers add cross attention
+            total += self.num_decoder_layers * (per_layer_dense + attn + d)
+        total += v * d                        # embeddings
+        if not self.tie_embeddings:
+            total += v * d                    # lm head
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed experts count)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        expert = 3 * d * f if self.act == "swiglu" else 2 * d * f
+        inactive = (self.num_experts - self.num_experts_per_token) * expert
+        return int(self.param_count() - self.num_layers * inactive)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str        # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPE_CELLS = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}

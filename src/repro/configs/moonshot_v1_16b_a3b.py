@@ -1,0 +1,30 @@
+"""moonshot-v1-16b-a3b [moe]: 48L d_model=2048 16H (GQA kv=16) d_ff=1408
+vocab=163840, MoE 64e top-6 -- kimi/moonlight fine-grained experts.
+[hf:moonshotai/Moonlight-16B-A3B; hf]
+
+Moonlight follows the DeepSeek-V3 recipe: fine-grained experts (d_ff 1408)
+with 2 shared experts alongside the 64 routed ones.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    vocab_size=163840,
+    num_experts=64,
+    num_experts_per_token=6,
+    num_shared_experts=2,
+    rope_theta=50000.0,
+    act="swiglu",
+    remat="full",
+    train_microbatches=8,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    moe_parallel="ep",
+)

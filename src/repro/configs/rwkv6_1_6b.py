@@ -1,0 +1,24 @@
+"""rwkv6-1.6b [ssm]: 24L d_model=2048 (attn-free) d_ff=7168 vocab=65536
+-- Finch: data-dependent decay.  [arXiv:2404.05892; unverified]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,            # wkv heads: d_model / 64
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=7168,
+    vocab_size=65536,
+    rwkv_decay_lora=64,
+    rwkv_mix_lora=32,
+    act="relu_sq",           # rwkv channel-mix uses squared relu
+    norm_type="layer",
+    remat="full",
+    train_microbatches=4,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

@@ -1,0 +1,33 @@
+"""seamless-m4t-large-v2 [audio]: 24L d_model=1024 16H (GQA kv=16) d_ff=8192
+vocab=256206 -- enc-dec, multimodal.  [arXiv:2308.11596; hf]
+
+Encoder-decoder: 24 encoder layers over STUB audio-frame embeddings
+(``input_specs()`` provides [B, S_enc, d_model] precomputed frames) + 24
+decoder layers (causal self-attn + cross-attn) over text tokens.  For the
+LM shape cells, seq_len is split evenly between encoder frames and decoder
+tokens for training; prefill lowers the encoder + decoder prefill; decode
+lowers one decoder step against cached encoder output of length seq_len.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    num_layers=24,               # encoder layers
+    num_decoder_layers=24,
+    is_encoder_decoder=True,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    rope_theta=10000.0,
+    act="gelu",
+    norm_type="layer",
+    frontend_tokens=0,           # encoder input IS the stub embedding stream
+    remat="full",
+    train_microbatches=8,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

@@ -1,0 +1,28 @@
+"""Mez core: the paper's contribution (brokers, log, latency controller) plus
+the TPU-native extension (controller-driven approximate collectives)."""
+
+from repro.core.api import (BrokerDown, DeliveredFrame, LatencyBreakdown,
+                            MessagingSystem, RPCTimeout, Status, SubscribeSpec)
+from repro.core.channel import ChannelConfig, WirelessChannel, calibrated_channel
+from repro.core.characterization import (CharacterizationTable,
+                                         LatencyRegression, characterize,
+                                         fit_latency_regression)
+from repro.core.controller import (ControllerConfig, ControllerState,
+                                   JaxControllerTables, LatencyController,
+                                   controller_init, controller_step)
+from repro.core.knobs import KnobSetting, apply_knobs, enumerate_settings, wire_size
+from repro.core.log import (FrameLog, HostLog, LogSegmentStore, frame_log_append,
+                            frame_log_init, frame_log_point_query,
+                            frame_log_range_query)
+
+__all__ = [
+    "BrokerDown", "DeliveredFrame", "LatencyBreakdown", "MessagingSystem",
+    "RPCTimeout", "Status", "SubscribeSpec", "ChannelConfig", "WirelessChannel",
+    "calibrated_channel", "CharacterizationTable", "LatencyRegression",
+    "characterize", "fit_latency_regression", "ControllerConfig",
+    "ControllerState", "JaxControllerTables", "LatencyController",
+    "controller_init", "controller_step", "KnobSetting", "apply_knobs",
+    "enumerate_settings", "wire_size", "FrameLog", "HostLog", "LogSegmentStore",
+    "frame_log_append", "frame_log_init", "frame_log_point_query",
+    "frame_log_range_query",
+]

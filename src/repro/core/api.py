@@ -1,0 +1,86 @@
+"""The Mez API (paper Section 3.1, Fig. 7) - five calls:
+
+    Connect(url) -> ID
+    Publish(imageStream)
+    GetCameraInfo() -> list[cameraIDs]
+    Subscribe(applicationID, cameraID, tStart, tStop, latency, accuracy)
+        -> imageStream
+    Unsubscribe(applicationID, cameraID) -> status
+
+Data model (Section 3.2): key-value pairs, key = frame timestamp, value =
+frame, chronological order, at-most-once delivery (resend is an application-
+level decision).
+
+This module defines the wire-level records and the abstract interface both
+Mez and the NATS-like baseline implement, so benchmarks can swap systems.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Iterator, Protocol
+
+import numpy as np
+
+__all__ = ["DeliveredFrame", "SubscribeSpec", "RPCTimeout", "BrokerDown",
+           "MessagingSystem", "Status"]
+
+
+class RPCTimeout(TimeoutError):
+    """An RPC exceeded its deadline (the paper's failure-detection signal)."""
+
+
+class BrokerDown(RuntimeError):
+    """Raised by a crashed component when invoked (manifests as RPCTimeout at
+    the caller after the deadline)."""
+
+
+class Status(enum.Enum):
+    OK = "ok"
+    FAIL = "fail"
+    INFEASIBLE = "infeasible"     # latency/accuracy bounds can't both be met
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyBreakdown:
+    """Per-frame component latencies, seconds (paper Fig. 16)."""
+    publish_api: float = 0.0
+    controller: float = 0.0        # knob decision + frame modification
+    log_copy: float = 0.0          # camera-node log -> transmit buffer
+    network: float = 0.0           # wireless transfer
+    broker_processing: float = 0.0 # edge-side append + dispatch
+    subscribe_api: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return (self.publish_api + self.controller + self.log_copy
+                + self.network + self.broker_processing + self.subscribe_api)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeliveredFrame:
+    camera_id: str
+    timestamp: float
+    frame: np.ndarray | None       # None => dropped (at-most-once + knob5)
+    wire_bytes: int
+    latency: LatencyBreakdown
+    knob_index: int                # -1 = unmodified
+    infeasible: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class SubscribeSpec:
+    application_id: str
+    camera_id: str
+    t_start: float
+    t_stop: float                  # may be in the future (paper Section 3.1)
+    latency: float                 # upper bound, seconds
+    accuracy: float                # lower bound, normalized F1
+
+
+class MessagingSystem(Protocol):
+    def connect(self, url: str) -> str: ...
+    def get_camera_info(self) -> list[str]: ...
+    def subscribe(self, spec: SubscribeSpec) -> Iterator[DeliveredFrame]: ...
+    def unsubscribe(self, application_id: str, camera_id: str) -> Status: ...

@@ -1,0 +1,332 @@
+"""Mez brokers (paper Section 4.1) + the NATS-like baseline (Section 5.2).
+
+Topology (paper Fig. 8): one ``CamBroker`` per IoT camera node (owns the
+node's in-memory log and the latency controller), one ``EdgeBroker`` on the
+edge server (owns one replicated log per registered camera and implements the
+subscriber-facing API).  Frames move camera-log -> edge-log *on demand* --
+nothing crosses the wireless channel until a subscriber asks (this limits
+channel interference and saves camera-node power).
+
+Simulation model: the system runs single-process on a virtual clock.  Network
+latency comes from ``WirelessChannel`` (calibrated to the paper's testbed);
+controller/knob overheads are the *measured* knob pipeline cost models; broker
+processing costs are small constants.  All components are deterministic given
+seeds, which makes the controller's step response (paper Fig. 11) exactly
+reproducible.
+
+Fault tolerance (Section 4.4): crash flags on each component; RPCs against a
+crashed component raise ``RPCTimeout`` after their deadline (detection is
+piggybacked on streaming traffic -- no separate heartbeats); recovery
+reconstructs logs from the CRC-checked ``LogSegmentStore``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.api import (BrokerDown, DeliveredFrame, LatencyBreakdown,
+                            RPCTimeout, Status, SubscribeSpec)
+from repro.core.channel import WirelessChannel
+from repro.core.characterization import CharacterizationTable, LatencyRegression
+from repro.core.controller import ControllerConfig, LatencyController
+from repro.core.knobs import apply_knobs, wire_size
+from repro.core.log import HostLog, LogSegmentStore
+
+__all__ = ["CamBroker", "EdgeBroker", "NatsLikeSystem", "MezSystem"]
+
+# Broker-side fixed costs (seconds) -- small constants in the paper's Fig. 16
+# breakdown ("all processing delays inside the messaging system").
+PUBLISH_API_COST = 0.4e-3
+SUBSCRIBE_API_COST = 0.6e-3
+BROKER_PROC_COST = 0.9e-3
+LOG_COPY_COST_PER_MB = 8.0e-3      # frame copy between logs, per
+                                   # workload-equivalent MB (paper
+                                   # Fig. 16: ~half the controller
+                                   # time is the log copy)
+RPC_DEADLINE = 0.5                 # seconds of virtual time
+
+
+class CamBroker:
+    """Broker + log + controller on one IoT camera node."""
+
+    def __init__(self, camera_id: str, channel: WirelessChannel, *,
+                 log_capacity: int = 2048, distance_m: float = 6.0,
+                 fps: float = 5.0, store: LogSegmentStore | None = None):
+        self.camera_id = camera_id
+        self.channel = channel
+        self.distance_m = distance_m
+        self.fps = fps
+        self.log = HostLog(log_capacity, topic=camera_id)
+        self.controller: LatencyController | None = None
+        self.store = store
+        self.crashed = False
+        self._last_sent: np.ndarray | None = None
+        self.background: np.ndarray | None = None
+        self.infeasible_reported = 0
+
+    # -- internal APIs (paper Fig. 9) -------------------------------------------
+    def set_target(self, latency: float, accuracy: float,
+                   table: CharacterizationTable,
+                   regression: LatencyRegression,
+                   config: ControllerConfig | None = None) -> None:
+        if self.crashed:
+            raise BrokerDown(self.camera_id)
+        cfg = config or ControllerConfig(latency_target=latency,
+                                         accuracy_target=accuracy)
+        cfg = dataclasses.replace(cfg, latency_target=latency,
+                                  accuracy_target=accuracy)
+        self.controller = LatencyController(cfg, table, regression)
+
+    # -- Publish (camera -> camera-node log) -------------------------------------
+    def publish(self, timestamp: float, frame: np.ndarray) -> bool:
+        if self.crashed:
+            raise BrokerDown(self.camera_id)
+        return self.log.append(timestamp, frame)
+
+    # -- on-demand transfer (camera log -> edge, through controller + channel) ---
+    def fetch(self, t_start: float, t_stop: float, *,
+              latency_feedback: float | None = None,
+              controlled: bool = True,
+              max_frames: int | None = None) -> list[DeliveredFrame]:
+        """Serve the frames in [t_start, t_stop] across the wireless channel.
+
+        ``latency_feedback`` is the subscriber-observed p95 latency of the
+        previous window -- the controller's sensor input.  ``max_frames``
+        bounds the batch so the subscriber's control loop samples latency at
+        its configured interval (paper: "the network latency is measured
+        again at the next sampling interval").
+        """
+        if self.crashed:
+            raise BrokerDown(self.camera_id)
+        out: list[DeliveredFrame] = []
+        knob_idx = -1
+        controller_cost = 0.0
+        setting = None
+        infeasible = False
+        if controlled and self.controller is not None and latency_feedback is not None:
+            decision = self.controller.update(latency_feedback)
+            infeasible = not decision.feasible
+            if infeasible:
+                self.infeasible_reported += 1
+            setting = decision.setting
+            knob_idx = decision.setting_index
+        elif controlled and self.controller is not None:
+            setting = self.controller.current_setting
+            knob_idx = self.controller._current
+
+        for ts, frame in self.log.range_query(t_start, t_stop):
+            if max_frames is not None and len(out) >= max_frames:
+                break
+            if setting is not None:
+                r = apply_knobs(frame, setting, background=self.background,
+                                last_sent=self._last_sent)
+                controller_cost = r.overhead_ms * 1e-3
+                if r.frame is None:
+                    out.append(DeliveredFrame(
+                        self.camera_id, ts, None, 0,
+                        LatencyBreakdown(controller=controller_cost),
+                        knob_idx, infeasible))
+                    continue
+                self._last_sent = frame
+                payload, nbytes = r.frame, r.wire_bytes
+            else:
+                payload, nbytes = frame, wire_size(frame)
+            net = self.channel.transfer(nbytes, fps=self.fps,
+                                        distance_m=self.distance_m)
+            copy = LOG_COPY_COST_PER_MB * (
+                self.channel.scaled_bytes(payload.nbytes) / 1e6)
+            out.append(DeliveredFrame(
+                self.camera_id, ts, payload, nbytes,
+                LatencyBreakdown(publish_api=PUBLISH_API_COST,
+                                 controller=controller_cost,
+                                 log_copy=copy, network=net),
+                knob_idx, infeasible))
+        return out
+
+    # -- fault tolerance -----------------------------------------------------------
+    def crash(self) -> None:
+        self.crashed = True
+
+    def persist(self) -> None:
+        if self.store is not None:
+            self.store.persist(self.log)
+
+    def recover(self) -> None:
+        """Reboot: reconstruct the log from CRC-valid on-disk segments."""
+        if self.store is not None:
+            restored = self.store.recover(self.camera_id)
+            if restored is not None:
+                self.log = restored
+        self.crashed = False
+        self._last_sent = None
+
+
+class EdgeBroker:
+    """Edge-server broker: camera registry + replicated logs + subscriptions."""
+
+    def __init__(self, *, log_capacity: int = 4096,
+                 store: LogSegmentStore | None = None):
+        self._cams: dict[str, CamBroker] = {}
+        self.replicas: dict[str, HostLog] = {}
+        self._subs: dict[tuple[str, str], SubscribeSpec] = {}
+        self._ids = itertools.count()
+        self.log_capacity = log_capacity
+        self.store = store
+        self.crashed = False
+
+    # -- Mez API -------------------------------------------------------------------
+    def connect(self, url: str) -> str:
+        if self.crashed:
+            raise RPCTimeout("EdgeBroker down")
+        return f"client-{next(self._ids)}"
+
+    def register(self, cam: CamBroker) -> None:
+        """Internal API for IoT camera nodes (paper Section 4.1)."""
+        if self.crashed:
+            raise RPCTimeout("EdgeBroker down")
+        self._cams[cam.camera_id] = cam
+        self.replicas[cam.camera_id] = HostLog(self.log_capacity,
+                                               topic=cam.camera_id)
+        cam.channel.activate(cam.camera_id)
+
+    def unregister(self, camera_id: str) -> None:
+        cam = self._cams.pop(camera_id, None)
+        if cam is not None:
+            cam.channel.deactivate(camera_id)
+
+    def get_camera_info(self) -> list[str]:
+        if self.crashed:
+            raise RPCTimeout("EdgeBroker down")
+        return sorted(self._cams)
+
+    def subscribe(self, spec: SubscribeSpec, *,
+                  controlled: bool = True,
+                  feedback_window: int = 8,
+                  fetch_window: int = 2) -> Iterator[DeliveredFrame]:
+        """Streaming subscription: on-demand transfer + controller feedback.
+
+        Yields frames as they become available in [t_start, t_stop].  The
+        subscriber-observed p95 latency over the last ``feedback_window``
+        frames is fed back to the camera node's controller each fetch; each
+        fetch is capped at ``fetch_window`` frames so the control loop
+        samples at its interval rather than bulk-draining the camera log.
+        """
+        if self.crashed:
+            raise RPCTimeout("EdgeBroker down")
+        cam = self._cams.get(spec.camera_id)
+        if cam is None:
+            raise RPCTimeout(f"unknown camera {spec.camera_id}")
+        self._subs[(spec.application_id, spec.camera_id)] = spec
+        replica = self.replicas[spec.camera_id]
+        window: list[float] = []
+        cursor = spec.t_start
+        while (spec.application_id, spec.camera_id) in self._subs:
+            feedback = (float(np.percentile(window, 95)) if window else None)
+            try:
+                frames = cam.fetch(cursor, spec.t_stop,
+                                   latency_feedback=feedback,
+                                   controlled=controlled,
+                                   max_frames=fetch_window)
+            except BrokerDown as e:
+                raise RPCTimeout(str(e)) from e
+            if not frames:
+                break
+            for f in frames:
+                cursor = max(cursor, np.nextafter(f.timestamp, np.inf))
+                lat = dataclasses.replace(
+                    f.latency,
+                    broker_processing=BROKER_PROC_COST,
+                    subscribe_api=SUBSCRIBE_API_COST)
+                g = dataclasses.replace(f, latency=lat)
+                if g.frame is not None:
+                    replica.append(g.timestamp, g.frame)
+                    window.append(g.latency.total)
+                    window[:] = window[-feedback_window:]
+                yield g
+            if cursor > spec.t_stop:
+                break
+
+    def unsubscribe(self, application_id: str, camera_id: str) -> Status:
+        if self.crashed:
+            raise RPCTimeout("EdgeBroker down")
+        return (Status.OK if self._subs.pop((application_id, camera_id), None)
+                else Status.FAIL)
+
+    # -- fault tolerance --------------------------------------------------------------
+    def crash(self) -> None:
+        self.crashed = True
+
+    def persist(self) -> None:
+        if self.store is not None:
+            for log in self.replicas.values():
+                self.store.persist(log)
+
+    def recover(self) -> None:
+        if self.store is not None:
+            for cid in list(self.replicas):
+                restored = self.store.recover(cid)
+                if restored is not None:
+                    self.replicas[cid] = restored
+        self.crashed = False
+
+
+class MezSystem:
+    """Convenience facade wiring cameras + brokers + controller (the thing
+    benchmarks instantiate)."""
+
+    def __init__(self, channel: WirelessChannel, *,
+                 store: LogSegmentStore | None = None):
+        self.channel = channel
+        self.edge = EdgeBroker(store=store)
+        self.cams: dict[str, CamBroker] = {}
+
+    def add_camera(self, camera_id: str, *, distance_m: float = 6.0,
+                   fps: float = 5.0) -> CamBroker:
+        cam = CamBroker(camera_id, self.channel, distance_m=distance_m,
+                        fps=fps, store=self.edge.store)
+        self.cams[camera_id] = cam
+        self.edge.register(cam)
+        return cam
+
+
+class NatsLikeSystem:
+    """The NATS baseline (paper Section 5.2): low-latency general pub-sub,
+    NO latency control, NO storage layer, 1 MB message size limit."""
+
+    MESSAGE_LIMIT = 1_000_000  # bytes
+
+    def __init__(self, channel: WirelessChannel):
+        self.channel = channel
+        self._cams: dict[str, dict] = {}
+        self.rejected_oversize = 0
+
+    def add_camera(self, camera_id: str, *, distance_m: float = 6.0,
+                   fps: float = 5.0) -> None:
+        self._cams[camera_id] = {"distance": distance_m, "fps": fps}
+        self.channel.activate(camera_id)
+
+    def get_camera_info(self) -> list[str]:
+        return sorted(self._cams)
+
+    def deliver(self, camera_id: str, timestamp: float, frame: np.ndarray
+                ) -> DeliveredFrame:
+        """Publish + fan out one frame, unmodified."""
+        info = self._cams[camera_id]
+        nbytes = wire_size(frame)
+        if self.channel.scaled_bytes(nbytes) > self.MESSAGE_LIMIT:
+            # Paper: "Since NATS has a 1MB message size limit, DukeMTMC frames
+            # cannot be sent/received using NATS."
+            self.rejected_oversize += 1
+            raise ValueError(
+                f"NATS message size limit exceeded: {nbytes} > 1MB")
+        net = self.channel.transfer(nbytes, fps=info["fps"],
+                                    distance_m=info["distance"])
+        lat = LatencyBreakdown(publish_api=PUBLISH_API_COST * 0.5,
+                               network=net,
+                               broker_processing=BROKER_PROC_COST * 0.4,
+                               subscribe_api=SUBSCRIBE_API_COST * 0.5)
+        return DeliveredFrame(camera_id, timestamp, frame, nbytes, lat, -1)

@@ -1,0 +1,202 @@
+"""Offline characterization (paper Sections 2.3-2.4) -> controller tables.
+
+The controller (Algorithm 1) consumes three artifacts, all built here:
+
+  1. ``LatencyRegression``   latency ~= a * wire_size + b   (paper Fig. 5:
+     "approximately linear variation with video frame size").
+  2. size -> best achievable accuracy   (paper: Binary Search Tree keyed by
+     image size).  TPU/NumPy adaptation: a sorted size array + prefix-max of
+     accuracy, queried with searchsorted -- the same O(log n) point query,
+     vectorizable, and usable inside jit.
+  3. accuracy -> knob setting           (paper: hash table).  Here: the argmax
+     index carried alongside the prefix-max, so lookup 2 is O(1).
+
+``characterize()`` sweeps the knob grid over a calibration clip from a
+``SyntheticCamera``, measuring *actual* wire sizes (deflate) and *actual*
+normalized F1 (blob detector vs. ground truth), mirroring the paper's offline
+measurement campaign ("assumed to be available from prior characterization").
+Settings with normalized F1 < min_accuracy are excluded, as the paper excludes
+combos under 90%.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import detector as det
+from repro.core import knobs as K
+
+__all__ = ["LatencyRegression", "CharacterizationTable", "characterize",
+           "fit_latency_regression"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyRegression:
+    """latency_seconds = slope * wire_bytes + intercept."""
+    slope: float
+    intercept: float
+
+    def predict(self, wire_bytes: float) -> float:
+        return self.slope * wire_bytes + self.intercept
+
+    def invert(self, latency_s: float) -> float:
+        """The paper's ``RegressionModel(latencyTarget)`` -> nominal size."""
+        return max(0.0, (latency_s - self.intercept) / max(self.slope, 1e-12))
+
+
+def fit_latency_regression(sizes: np.ndarray, latencies: np.ndarray
+                           ) -> LatencyRegression:
+    sizes = np.asarray(sizes, np.float64)
+    lats = np.asarray(latencies, np.float64)
+    a, b = np.polyfit(sizes, lats, 1)
+    return LatencyRegression(float(a), float(b))
+
+
+@dataclasses.dataclass
+class CharacterizationTable:
+    """The two lookup tables of Algorithm 1, in sorted-array form.
+
+    sizes_sorted[i]   : wire size of the i-th smallest characterized setting
+    best_acc[i]       : best accuracy achievable with wire size <= sizes_sorted[i]
+    best_idx[i]       : index into ``settings`` achieving best_acc[i]
+    settings          : the characterized knob settings (knob4 excluded by default)
+    acc_by_setting    : accuracy of each setting
+    size_by_setting   : median wire size of each setting
+    """
+    settings: tuple[K.KnobSetting, ...]
+    sizes_sorted: np.ndarray
+    best_acc: np.ndarray
+    best_idx: np.ndarray
+    acc_by_setting: np.ndarray
+    size_by_setting: np.ndarray
+
+    def query_size(self, wire_bytes: float) -> tuple[float, int]:
+        """size -> (best achievable accuracy, knob-setting index).
+
+        Paper step 2: BST search keyed by image size.  Returns the best
+        accuracy among settings whose size fits within ``wire_bytes``.
+        """
+        pos = int(np.searchsorted(self.sizes_sorted, wire_bytes, side="right")) - 1
+        if pos < 0:
+            return 0.0, -1
+        return float(self.best_acc[pos]), int(self.best_idx[pos])
+
+    def setting_for(self, idx: int) -> K.KnobSetting:
+        return self.settings[idx]
+
+    # -- jit-ready views ---------------------------------------------------------
+    def as_arrays(self) -> dict[str, np.ndarray]:
+        return {
+            "sizes_sorted": self.sizes_sorted.astype(np.float32),
+            "best_acc": self.best_acc.astype(np.float32),
+            "best_idx": self.best_idx.astype(np.int32),
+        }
+
+
+def characterize(camera_factory, *, clip_len: int = 24,
+                 min_accuracy: float = 0.90,
+                 include_artifact: bool = False,
+                 detector_thresh: float = 28.0) -> CharacterizationTable:
+    """Sweep the knob grid on a calibration clip; build the tables.
+
+    ``camera_factory()`` must return a fresh, identically-seeded
+    ``SyntheticCamera`` so every knob setting sees the same clip.
+
+    Fast path: knob5 (frame differencing) only *drops* frames -- it never
+    changes surviving pixels -- so per-frame detections are computed once per
+    (resolution, colorspace, blur[, artifact]) combo and reused across all
+    diff thresholds; per-threshold drop patterns are computed once on the raw
+    stream.  This turns an O(|grid| * clip) detector sweep into
+    O(|grid|/n_diff * clip), matching how the paper's own campaign would be
+    run (differencing is a transport decision, not an image transform).
+    """
+    cam = camera_factory()
+    bg = cam.background
+    clip = [cam.next_frame() for _ in range(clip_len)]
+    h, w = bg.shape[:2]
+    baseline = []
+    for _, frame, gt in clip:
+        boxes = det.detect(frame, bg, thresh=detector_thresh, scale_to=(h, w))
+        baseline.append((gt, boxes))
+
+    settings = K.enumerate_settings(include_artifact=include_artifact)
+
+    # -- drop patterns per diff threshold (depends only on the raw stream) ----
+    drop_patterns: dict[int, np.ndarray] = {}
+    for di, thresh in enumerate(K.DIFF_THRESHOLDS):
+        drops = np.zeros(clip_len, bool)
+        last_sent = None
+        for fi, (_, frame, _) in enumerate(clip):
+            if K.frame_difference(frame, last_sent, thresh):
+                drops[fi] = True
+            else:
+                last_sent = frame
+        drop_patterns[di] = drops
+
+    # -- per-transform detections (diff dimension factored out) ---------------
+    cache: dict[tuple[int, int, int, int], tuple[list[np.ndarray], np.ndarray]] = {}
+
+    def transform_results(s: K.KnobSetting):
+        key = (s.resolution, s.colorspace, s.blur, s.artifact)
+        if key in cache:
+            return cache[key]
+        tkey = K.KnobSetting(s.resolution, s.colorspace, s.blur, s.artifact, 0)
+        bg_t = K.transform_frame(bg, tkey)   # subscriber's degraded background
+        dets: list[np.ndarray] = []
+        wires = np.zeros(clip_len)
+        for fi, (_, frame, _) in enumerate(clip):
+            r = K.apply_knobs(frame, dataclasses.replace(tkey, diff=0),
+                              background=bg, last_sent=None)
+            assert r.frame is not None
+            wires[fi] = r.wire_bytes
+            dets.append(det.detect(r.frame, bg_t, thresh=detector_thresh,
+                                   scale_to=(h, w)))
+        cache[key] = (dets, wires)
+        return cache[key]
+
+    sizes = np.zeros(len(settings))
+    accs = np.zeros(len(settings))
+    for si, setting in enumerate(settings):
+        dets, wires = transform_results(setting)
+        drops = drop_patterns[setting.diff]
+        results = []
+        kept_wires = []
+        for fi, (_, _, gt) in enumerate(clip):
+            if drops[fi]:
+                results.append((gt, np.zeros((0, 4), np.float32)))
+            else:
+                results.append((gt, dets[fi]))
+                kept_wires.append(wires[fi])
+        sizes[si] = float(np.median(kept_wires)) if kept_wires else 0.0
+        accs[si] = det.normalized_f1(results, baseline)
+
+    keep = (accs >= min_accuracy) & (sizes > 0)
+    settings_kept = tuple(s for s, k in zip(settings, keep) if k)
+    sizes_k = sizes[keep]
+    accs_k = accs[keep]
+
+    order = np.argsort(sizes_k, kind="stable")
+    sizes_sorted = sizes_k[order]
+    accs_sorted = accs_k[order]
+    idx_sorted = np.arange(len(settings_kept))[order]
+
+    # prefix max of accuracy + the setting achieving it
+    best_acc = np.empty_like(accs_sorted)
+    best_idx = np.empty(len(accs_sorted), np.int64)
+    run_best, run_idx = -1.0, -1
+    for i, (a, j) in enumerate(zip(accs_sorted, idx_sorted)):
+        if a > run_best:
+            run_best, run_idx = a, j
+        best_acc[i] = run_best
+        best_idx[i] = run_idx
+
+    return CharacterizationTable(
+        settings=settings_kept,
+        sizes_sorted=sizes_sorted,
+        best_acc=best_acc,
+        best_idx=best_idx,
+        acc_by_setting=accs_k,
+        size_by_setting=sizes_k,
+    )

@@ -1,0 +1,233 @@
+"""The Mez network latency controller (paper Section 4.2, Algorithm 1).
+
+Two implementations with identical control law:
+
+``LatencyController``  -- host-side, lives next to the CamBroker (the paper's
+                          deployment: a microservice on the IoT camera node).
+``controller_step``    -- pure-JAX, jittable (lax-only control flow).  This is
+                          the paper's future-work item "integrating the
+                          controller as a part of the CamBroker" taken to its
+                          TPU-native conclusion: the controller can run inside
+                          a compiled step, where it drives the approximate-
+                          collective knob (core/approx_comm.py).
+
+Control law (Algorithm 1):
+
+    nominal   = Regression^-1(latency_target)              # bytes
+    error     = latency_sampled - latency_target           # seconds
+    size      = nominal + K1 * error + K2 * integral(error)
+    accuracy, knob = Table.query(size)                     # BST + hash lookups
+    if accuracy >= accuracy_target: apply knob
+    else: report infeasible (application decides: relax or fail)
+
+K1, K2 < 0: positive latency error shrinks the requested size.  Gains are
+auto-scaled from the regression slope so they are expressed in natural units
+("how many bytes does one second of error buy").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.characterization import CharacterizationTable, LatencyRegression
+from repro.core.knobs import KnobSetting
+
+__all__ = ["ControllerConfig", "ControlDecision", "LatencyController",
+           "JaxControllerTables", "ControllerState", "controller_init",
+           "controller_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    latency_target: float            # seconds (paper: 100 ms)
+    accuracy_target: float           # normalized F1 floor (paper: 0.95-0.96)
+    error_threshold: float = 0.010   # seconds; inside the band = no action
+    alpha_p: float = 0.8             # K1 = -alpha_p / slope
+    alpha_i: float = 0.25            # K2 = -alpha_i / slope
+    integral_clip: float = 1.0       # anti-windup, seconds*samples
+    relax: bool = True               # also act when latency is far BELOW target
+                                     # (paper's Alg. 1 is one-sided; relaxation
+                                     # restores quality after interference ends)
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlDecision:
+    feasible: bool
+    setting: KnobSetting | None
+    setting_index: int
+    predicted_accuracy: float
+    requested_size: float
+    error: float
+    acted: bool
+
+
+class LatencyController:
+    """Host-side PI controller (one per IoT camera node; no central control,
+    so camera nodes scale independently -- paper Section 4.2)."""
+
+    def __init__(self, config: ControllerConfig, table: CharacterizationTable,
+                 regression: LatencyRegression):
+        self.config = config
+        self.table = table
+        self.regression = regression
+        self.integral = 0.0
+        self.k1 = -config.alpha_p / max(regression.slope, 1e-12)
+        self.k2 = -config.alpha_i / max(regression.slope, 1e-12)
+        self._nominal = regression.invert(config.latency_target)
+        # Algorithm 1: the starting operating point is the nominal size the
+        # regression model predicts for the latency target (not full quality).
+        _, idx = self.table.query_size(
+            float(np.clip(self._nominal, self.table.sizes_sorted[0],
+                          self.table.sizes_sorted[-1])))
+        self._current = int(idx)
+
+    def set_target(self, latency_target: float, accuracy_target: float) -> None:
+        """The CamBroker's internal SetTarget API (paper Fig. 9)."""
+        self.config = dataclasses.replace(
+            self.config, latency_target=latency_target,
+            accuracy_target=accuracy_target)
+        self._nominal = self.regression.invert(latency_target)
+        self.integral = 0.0
+
+    def update(self, latency_sampled: float) -> ControlDecision:
+        cfg = self.config
+        error = latency_sampled - cfg.latency_target
+        act = error > cfg.error_threshold or (
+            cfg.relax and error < -cfg.error_threshold)
+        if not act:
+            # inside the band: hold the current setting
+            idx = self._current
+            acc = float(self.table.acc_by_setting[idx]) if idx >= 0 else 0.0
+            return ControlDecision(idx >= 0, self.table.setting_for(idx) if idx >= 0
+                                   else None, idx, acc, self._nominal, error, False)
+        self.integral = float(np.clip(self.integral + error,
+                                      -cfg.integral_clip, cfg.integral_clip))
+        size = self._nominal + self.k1 * error + self.k2 * self.integral
+        size = float(np.clip(size, self.table.sizes_sorted[0],
+                             self.table.sizes_sorted[-1]))
+        accuracy, idx = self.table.query_size(size)
+        if accuracy >= cfg.accuracy_target and idx >= 0:
+            self._current = idx
+            return ControlDecision(True, self.table.setting_for(idx), idx,
+                                   accuracy, size, error, True)
+        # Paper: "If the application requested latency and accuracy are
+        # infeasible, the application is notified.  At this point, the
+        # application has to decide whether to continue operation with
+        # relaxed latency/accuracy requirements, or notify the system
+        # operator of failure."  We notify (feasible=False) AND return the
+        # best-accuracy setting within the size budget so a subscriber that
+        # chooses "continue relaxed" degrades gracefully instead of
+        # reverting to raw frames.
+        if idx >= 0:
+            self._current = idx
+        return ControlDecision(False,
+                               self.table.setting_for(idx) if idx >= 0 else None,
+                               idx, accuracy, size, error, True)
+
+    @property
+    def current_setting(self) -> KnobSetting | None:
+        return self.table.setting_for(self._current) if self._current >= 0 else None
+
+
+# =============================================================================
+# Jittable controller
+# =============================================================================
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class JaxControllerTables:
+    """Characterization tables as device arrays (sorted by size)."""
+    sizes_sorted: jax.Array   # f32[n]
+    best_acc: jax.Array       # f32[n]
+    best_idx: jax.Array       # i32[n]
+
+    def tree_flatten(self):
+        return ((self.sizes_sorted, self.best_acc, self.best_idx), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def from_table(cls, table: CharacterizationTable) -> "JaxControllerTables":
+        a = table.as_arrays()
+        return cls(jnp.asarray(a["sizes_sorted"]), jnp.asarray(a["best_acc"]),
+                   jnp.asarray(a["best_idx"]))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ControllerState:
+    integral: jax.Array       # f32[]
+    current_idx: jax.Array    # i32[]
+    feasible: jax.Array       # bool[]
+    last_error: jax.Array     # f32[]
+
+    def tree_flatten(self):
+        return ((self.integral, self.current_idx, self.feasible,
+                 self.last_error), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def controller_init(tables: JaxControllerTables) -> ControllerState:
+    n = tables.best_idx.shape[0]
+    return ControllerState(
+        integral=jnp.zeros((), jnp.float32),
+        current_idx=tables.best_idx[n - 1].astype(jnp.int32),
+        feasible=jnp.ones((), bool),
+        last_error=jnp.zeros((), jnp.float32),
+    )
+
+
+def controller_step(state: ControllerState, latency_sampled: jax.Array,
+                    tables: JaxControllerTables, *,
+                    latency_target: float, accuracy_target: float,
+                    slope: float, intercept: float,
+                    error_threshold: float = 0.010, alpha_p: float = 0.8,
+                    alpha_i: float = 0.25, integral_clip: float = 1.0,
+                    relax: bool = True) -> tuple[ControllerState, jax.Array]:
+    """One PI update, fully traceable.  Returns (new_state, knob_index).
+
+    knob_index is an i32 scalar indexing the characterized settings; -1 when
+    no feasible setting exists (the compiled consumer falls back to the
+    highest-fidelity payload and flags infeasibility, matching the paper's
+    "notify the application" semantics).
+    """
+    lat = jnp.asarray(latency_sampled, jnp.float32)
+    error = lat - latency_target
+    act = error > error_threshold
+    if relax:
+        act = act | (error < -error_threshold)
+
+    k1 = -alpha_p / max(slope, 1e-12)
+    k2 = -alpha_i / max(slope, 1e-12)
+    nominal = max(0.0, (latency_target - intercept) / max(slope, 1e-12))
+
+    new_integral = jnp.clip(state.integral + error, -integral_clip, integral_clip)
+    integral = jnp.where(act, new_integral, state.integral)
+
+    size = nominal + k1 * error + k2 * integral
+    size = jnp.clip(size, tables.sizes_sorted[0], tables.sizes_sorted[-1])
+    pos = jnp.searchsorted(tables.sizes_sorted, size, side="right") - 1
+    pos = jnp.clip(pos, 0, tables.sizes_sorted.shape[0] - 1)
+    accuracy = tables.best_acc[pos]
+    idx = tables.best_idx[pos]
+
+    ok = accuracy >= accuracy_target
+    new_idx = jnp.where(act, jnp.where(ok, idx, -1), state.current_idx)
+    new_feasible = jnp.where(act, ok, state.feasible)
+    new_state = ControllerState(
+        integral=integral,
+        current_idx=new_idx.astype(jnp.int32),
+        feasible=new_feasible,
+        last_error=error,
+    )
+    return new_state, new_state.current_idx

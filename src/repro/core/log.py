@@ -1,0 +1,413 @@
+"""Mez in-memory log (paper Section 4.3).
+
+Append-only, time-ordered circular buffer of <timestamp, frame> pairs with:
+
+  * single-writer / multi-reader semantics,
+  * segment-granular read-write locking (reads from many segments proceed
+    concurrently; exactly one segment is active for writes),
+  * O(log n) point queries (binary search over timestamps) and range queries
+    (two binary searches),
+  * rejection of out-of-order appends (timestamp <= last entry),
+  * wrap-around overwrite of the oldest entries when capacity is exceeded,
+  * background persistence with per-segment CRC32 purely for crash recovery
+    (never on the read/write critical path), paper Section 4.4.
+
+Two implementations share the semantics:
+
+``HostLog``   -- host-side (NumPy payloads, threading locks): the broker layer.
+``FrameLog``  -- device-side (pure-JAX, functional): a fixed-capacity ring of
+                 equal-shaped tensors + timestamp index, usable inside jit.
+                 This is the TPU adaptation: the "log" lives in HBM next to
+                 the model, and point/range queries are ``searchsorted``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+import zlib
+from typing import Iterator, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["HostLog", "FrameLog", "frame_log_init", "frame_log_append",
+           "frame_log_point_query", "frame_log_range_query", "LogSegmentStore"]
+
+
+# =============================================================================
+# Host-side log (broker substrate)
+# =============================================================================
+
+
+class _RWLock:
+    """Writer-preferring read-write lock (no stdlib equivalent)."""
+
+    def __init__(self) -> None:
+        self._cond = threading.Condition()
+        self._readers = 0
+        self._writer = False
+        self._writers_waiting = 0
+
+    def acquire_read(self) -> None:
+        with self._cond:
+            while self._writer or self._writers_waiting:
+                self._cond.wait()
+            self._readers += 1
+
+    def release_read(self) -> None:
+        with self._cond:
+            self._readers -= 1
+            if self._readers == 0:
+                self._cond.notify_all()
+
+    def acquire_write(self) -> None:
+        with self._cond:
+            self._writers_waiting += 1
+            while self._writer or self._readers:
+                self._cond.wait()
+            self._writers_waiting -= 1
+            self._writer = True
+
+    def release_write(self) -> None:
+        with self._cond:
+            self._writer = False
+            self._cond.notify_all()
+
+
+@dataclasses.dataclass
+class _Entry:
+    timestamp: float
+    frame: np.ndarray
+    meta: dict
+
+
+class HostLog:
+    """The paper's in-memory log, host side.
+
+    Capacity is given in *entries*; the paper sizes it in bytes (1 GB ~ 7 min
+    at 500 kB / 5 fps) -- callers convert.  Segmentation: the ring is divided
+    into ``num_segments`` contiguous segments, each with its own RW lock.
+    The writer only ever holds the lock of the segment it appends into, so
+    readers of other segments never block (paper: "reads can occur from many
+    segments concurrently, while only one segment is active for write").
+    """
+
+    def __init__(self, capacity: int, *, num_segments: int = 8, topic: str = ""):
+        if capacity < num_segments:
+            num_segments = max(1, capacity)
+        self.capacity = int(capacity)
+        self.num_segments = int(num_segments)
+        self.topic = topic
+        self._entries: list[_Entry | None] = [None] * self.capacity
+        self._head = 0          # next write position
+        self._count = 0         # number of live entries
+        self._last_ts = -np.inf
+        self._seg_locks = [_RWLock() for _ in range(self.num_segments)]
+        self._meta_lock = threading.Lock()
+        self.appends = 0
+        self.rejects = 0
+
+    # -- geometry ---------------------------------------------------------------
+    def _segment_of(self, idx: int) -> int:
+        return (idx * self.num_segments) // self.capacity
+
+    def __len__(self) -> int:
+        return self._count
+
+    @property
+    def last_timestamp(self) -> float:
+        return self._last_ts
+
+    # -- write path -------------------------------------------------------------
+    def append(self, timestamp: float, frame: np.ndarray, **meta) -> bool:
+        """Append one frame.  Returns False (rejected) if out of order."""
+        with self._meta_lock:
+            if timestamp <= self._last_ts:
+                self.rejects += 1
+                return False
+            idx = self._head
+            seg = self._segment_of(idx)
+        lock = self._seg_locks[seg]
+        lock.acquire_write()
+        try:
+            self._entries[idx] = _Entry(timestamp, frame, dict(meta))
+        finally:
+            lock.release_write()
+        with self._meta_lock:
+            self._head = (idx + 1) % self.capacity
+            self._count = min(self._count + 1, self.capacity)
+            self._last_ts = timestamp
+            self.appends += 1
+        return True
+
+    # -- read path ---------------------------------------------------------------
+    def _ordered_indices(self) -> list[int]:
+        """Indices of live entries in increasing timestamp order."""
+        if self._count < self.capacity:
+            return list(range(self._count))
+        return [(self._head + i) % self.capacity for i in range(self.capacity)]
+
+    def _timestamps(self, order: Sequence[int]) -> np.ndarray:
+        return np.asarray([self._entries[i].timestamp for i in order])
+
+    def _read_entry(self, idx: int) -> _Entry:
+        seg = self._segment_of(idx)
+        lock = self._seg_locks[seg]
+        lock.acquire_read()
+        try:
+            entry = self._entries[idx]
+        finally:
+            lock.release_read()
+        assert entry is not None
+        return entry
+
+    def point_query(self, timestamp: float) -> tuple[float, np.ndarray] | None:
+        """Newest entry with ts <= timestamp (binary search), or None."""
+        with self._meta_lock:
+            order = self._ordered_indices()
+        if not order:
+            return None
+        ts = self._timestamps(order)
+        pos = int(np.searchsorted(ts, timestamp, side="right")) - 1
+        if pos < 0:
+            return None
+        entry = self._read_entry(order[pos])
+        return entry.timestamp, entry.frame
+
+    def range_query(self, t_start: float, t_stop: float) -> Iterator[tuple[float, np.ndarray]]:
+        """All entries with t_start <= ts <= t_stop, in time order.
+
+        Paper: "Range queries are ... supported by querying the starting and
+        ending timestamp, returning the video frames corresponding to an
+        interval that includes the requested time range."
+        """
+        with self._meta_lock:
+            order = self._ordered_indices()
+        if not order:
+            return
+        ts = self._timestamps(order)
+        lo = int(np.searchsorted(ts, t_start, side="left"))
+        hi = int(np.searchsorted(ts, t_stop, side="right"))
+        for i in range(lo, hi):
+            entry = self._read_entry(order[i])
+            yield entry.timestamp, entry.frame
+
+    def tail(self, k: int) -> list[tuple[float, np.ndarray]]:
+        with self._meta_lock:
+            order = self._ordered_indices()
+        out = []
+        for i in order[-k:]:
+            e = self._read_entry(i)
+            out.append((e.timestamp, e.frame))
+        return out
+
+    def snapshot(self) -> list[tuple[float, np.ndarray]]:
+        return self.tail(self._count)
+
+
+# =============================================================================
+# Persistence with per-segment CRC (paper Section 4.4)
+# =============================================================================
+
+
+class LogSegmentStore:
+    """Durable store for log segments with CRC32 integrity.
+
+    Layout: ``<root>/<topic>/seg_<n>.npz`` + ``seg_<n>.crc`` (hex CRC of the
+    npz bytes) + ``MANIFEST.json``.  Writes are atomic (tmp + rename).
+    Partially-written / corrupted segments are detected by CRC mismatch and
+    discarded on recovery, exactly as the paper prescribes.
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _topic_dir(self, topic: str) -> str:
+        d = os.path.join(self.root, topic)
+        os.makedirs(d, exist_ok=True)
+        return d
+
+    def persist(self, log: HostLog, *, segment_entries: int = 64) -> int:
+        """Persist the current snapshot as CRC'd segments; returns #segments."""
+        snap = log.snapshot()
+        d = self._topic_dir(log.topic or "default")
+        manifest = {"topic": log.topic, "segments": [], "capacity": log.capacity,
+                    "num_segments": log.num_segments}
+        nseg = 0
+        for s in range(0, len(snap), segment_entries):
+            chunk = snap[s : s + segment_entries]
+            ts = np.asarray([t for t, _ in chunk])
+            frames = np.stack([f for _, f in chunk]) if chunk else np.zeros((0,))
+            tmp = os.path.join(d, f".seg_{nseg}.npz.tmp")
+            final = os.path.join(d, f"seg_{nseg}.npz")
+            with open(tmp, "wb") as fh:
+                np.savez(fh, timestamps=ts, frames=frames)
+            with open(tmp, "rb") as fh:
+                crc = zlib.crc32(fh.read()) & 0xFFFFFFFF
+            os.replace(tmp, final)
+            with open(os.path.join(d, f"seg_{nseg}.crc"), "w") as fh:
+                fh.write(f"{crc:08x}")
+            manifest["segments"].append({"file": f"seg_{nseg}.npz", "crc": f"{crc:08x}",
+                                         "n": len(chunk)})
+            nseg += 1
+        tmp_m = os.path.join(d, ".MANIFEST.json.tmp")
+        with open(tmp_m, "w") as fh:
+            json.dump(manifest, fh)
+        os.replace(tmp_m, os.path.join(d, "MANIFEST.json"))
+        return nseg
+
+    def recover(self, topic: str) -> HostLog | None:
+        """Rebuild a HostLog from disk, discarding CRC-mismatched segments."""
+        d = os.path.join(self.root, topic or "default")
+        mpath = os.path.join(d, "MANIFEST.json")
+        if not os.path.exists(mpath):
+            return None
+        with open(mpath) as fh:
+            manifest = json.load(fh)
+        log = HostLog(manifest["capacity"], num_segments=manifest["num_segments"],
+                      topic=manifest["topic"])
+        for seg in manifest["segments"]:
+            path = os.path.join(d, seg["file"])
+            if not os.path.exists(path):
+                continue  # partially written: discard
+            with open(path, "rb") as fh:
+                raw = fh.read()
+            if f"{zlib.crc32(raw) & 0xFFFFFFFF:08x}" != seg["crc"]:
+                continue  # corrupted: discard (paper Section 4.4)
+            with np.load(path) as data:
+                ts, frames = data["timestamps"], data["frames"]
+            for t, f in zip(ts, frames):
+                log.append(float(t), np.asarray(f))
+        return log
+
+    def corrupt_segment(self, topic: str, seg_index: int) -> None:
+        """Test helper: flip bytes in a segment to emulate a torn write."""
+        path = os.path.join(self.root, topic or "default", f"seg_{seg_index}.npz")
+        with open(path, "r+b") as fh:
+            fh.seek(16)
+            b = fh.read(1)
+            fh.seek(16)
+            fh.write(bytes([b[0] ^ 0xFF]))
+
+
+# =============================================================================
+# Device-side log (pure JAX, functional) -- the TPU adaptation
+# =============================================================================
+
+# A FrameLog is a pytree:
+#   timestamps : f32[capacity]  (monotone in ring order; -inf = empty slot)
+#   payload    : dtype[capacity, *frame_shape]
+#   head       : i32[]          (next write slot)
+#   count      : i32[]          (live entries, <= capacity)
+#   last_ts    : f32[]
+#
+# Ring order: oldest entry lives at (head - count) mod capacity.  Queries
+# materialize the time-ordered view with jnp.roll + searchsorted; all ops are
+# jit/vmap-compatible and allocation-free after init.
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FrameLog:
+    timestamps: jax.Array
+    payload: jax.Array
+    head: jax.Array
+    count: jax.Array
+    last_ts: jax.Array
+    rejects: jax.Array
+
+    def tree_flatten(self):
+        return ((self.timestamps, self.payload, self.head, self.count,
+                 self.last_ts, self.rejects), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def capacity(self) -> int:
+        return self.timestamps.shape[0]
+
+
+def frame_log_init(capacity: int, frame_shape: tuple[int, ...],
+                   dtype=jnp.uint8) -> FrameLog:
+    return FrameLog(
+        timestamps=jnp.full((capacity,), -jnp.inf, dtype=jnp.float32),
+        payload=jnp.zeros((capacity, *frame_shape), dtype=dtype),
+        head=jnp.zeros((), dtype=jnp.int32),
+        count=jnp.zeros((), dtype=jnp.int32),
+        last_ts=jnp.full((), -jnp.inf, dtype=jnp.float32),
+        rejects=jnp.zeros((), dtype=jnp.int32),
+    )
+
+
+def frame_log_append(log: FrameLog, timestamp: jax.Array, frame: jax.Array) -> FrameLog:
+    """Functional append; out-of-order appends are rejected (no-op + counter)."""
+    ts = jnp.asarray(timestamp, jnp.float32)
+    ok = ts > log.last_ts
+    idx = log.head
+    new_timestamps = jnp.where(ok, log.timestamps.at[idx].set(ts), log.timestamps)
+    new_payload = jnp.where(
+        ok,
+        log.payload.at[idx].set(frame.astype(log.payload.dtype)),
+        log.payload,
+    )
+    return FrameLog(
+        timestamps=new_timestamps,
+        payload=new_payload,
+        head=jnp.where(ok, (idx + 1) % log.capacity, idx),
+        count=jnp.where(ok, jnp.minimum(log.count + 1, log.capacity), log.count),
+        last_ts=jnp.where(ok, ts, log.last_ts),
+        rejects=log.rejects + jnp.where(ok, 0, 1).astype(jnp.int32),
+    )
+
+
+def _ordered_view(log: FrameLog) -> tuple[jax.Array, jax.Array]:
+    """Timestamps in time order + the gather indices producing that order."""
+    cap = log.capacity
+    start = (log.head - log.count) % cap
+    idx = (start + jnp.arange(cap)) % cap          # oldest .. newest, then empties
+    ts = log.timestamps[idx]
+    # Mark empty slots (+inf) so searchsorted never lands past live entries.
+    live = jnp.arange(cap) < log.count
+    ts = jnp.where(live, ts, jnp.inf)
+    return ts, idx
+
+
+def frame_log_point_query(log: FrameLog, timestamp: jax.Array
+                          ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Newest entry with ts <= timestamp.
+
+    Returns (found, ts, frame); if not found, ts = -inf and frame = slot 0's
+    payload (callers must gate on ``found``).  This is the paper's BST point
+    query, TPU-adapted: ``searchsorted`` over a sorted array is the same
+    O(log n) with vectorizable memory access.
+    """
+    ts, idx = _ordered_view(log)
+    pos = jnp.searchsorted(ts, jnp.asarray(timestamp, jnp.float32), side="right") - 1
+    found = pos >= 0
+    safe = jnp.clip(pos, 0, log.capacity - 1)
+    slot = idx[safe]
+    return found, jnp.where(found, ts[safe], -jnp.inf), log.payload[slot]
+
+
+def frame_log_range_query(log: FrameLog, t_start: jax.Array, t_stop: jax.Array,
+                          max_results: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Entries with t_start <= ts <= t_stop, oldest first, fixed-size output.
+
+    Returns (valid_mask[max_results], ts[max_results], frames[max_results,...]).
+    Fixed-size because jit requires static shapes; ``max_results`` plays the
+    role of the subscriber's fetch window.
+    """
+    ts, idx = _ordered_view(log)
+    lo = jnp.searchsorted(ts, jnp.asarray(t_start, jnp.float32), side="left")
+    hi = jnp.searchsorted(ts, jnp.asarray(t_stop, jnp.float32), side="right")
+    offs = lo + jnp.arange(max_results)
+    valid = offs < hi
+    safe = jnp.clip(offs, 0, log.capacity - 1)
+    return valid, jnp.where(valid, ts[safe], -jnp.inf), log.payload[idx[safe]]

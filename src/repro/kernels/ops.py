@@ -1,0 +1,55 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode so every test
+validates the actual kernel body; on TPU they compile through Mosaic.  Model
+code imports from here (``attention_impl="pallas"`` paths).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import decode_attention as _decode
+from repro.kernels import flash_attention as _flash
+from repro.kernels import frame_knobs as _knobs
+from repro.kernels import linear_scan as _scan
+from repro.kernels import quantize as _quant
+
+__all__ = ["flash_attention", "decode_attention", "wkv_linear_scan",
+           "quantize_blocks", "dequantize_blocks", "frame_knobs", "INTERPRET"]
+
+INTERPRET = jax.default_backend() == "cpu"
+
+
+def flash_attention(q, k, v, *, causal=True, scale=None, block_q=256,
+                    block_k=512):
+    return _flash.flash_attention(q, k, v, causal=causal, scale=scale,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=INTERPRET)
+
+
+def decode_attention(q, k_cache, v_cache, length, *, scale=None, block_k=512):
+    return _decode.decode_attention(q, k_cache, v_cache, length, scale=scale,
+                                    block_k=block_k, interpret=INTERPRET)
+
+
+def wkv_linear_scan(r, k, v, logw, u, *, block_t=64):
+    return _scan.wkv_linear_scan(r, k, v, logw, u, block_t=block_t,
+                                 interpret=INTERPRET)
+
+
+def quantize_blocks(x, *, block=(256, 512), bits=8):
+    return _quant.quantize_blocks(x, block=block, bits=bits,
+                                  interpret=INTERPRET)
+
+
+def dequantize_blocks(q, scales, *, block=(256, 512), out_dtype=None):
+    import jax.numpy as jnp
+    return _quant.dequantize_blocks(q, scales, block=block,
+                                    out_dtype=out_dtype or jnp.float32,
+                                    interpret=INTERPRET)
+
+
+def frame_knobs(frames, prev, *, blur_k=5, pixel_delta=8.0):
+    return _knobs.frame_knobs(frames, prev, blur_k=blur_k,
+                              pixel_delta=pixel_delta, interpret=INTERPRET)

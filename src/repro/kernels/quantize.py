@@ -1,0 +1,82 @@
+"""Block-quantization Pallas kernels (the approximate-collective payload).
+
+Symmetric per-block quantization: each (BM, BN) tile gets one fp32 scale =
+absmax / qmax; values round to int8 (qmax=127) or int4-range int8 (qmax=7,
+transport packs two per byte).  This is the Mez "colorspace knob" for tensor
+payloads: the controller picks the bit-width, these kernels sit on the
+critical path of every compressed cross-pod all-reduce.
+
+TPU design: tiles are (BM, BN) = (256, 512) by default -- large enough to
+amortize the two-pass absmax+quantize over one VMEM residency, lane-aligned
+(last dim multiple of 128).  Grid = (M/BM, N/BN); absmax reduction and the
+round happen entirely in VMEM/VREGs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["quantize_blocks", "dequantize_blocks"]
+
+
+def _quantize_kernel(x_ref, q_ref, s_ref, *, qmax: float):
+    x = x_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(absmax / qmax, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
+    q_ref[...] = q
+    s_ref[0, 0] = scale
+
+
+def _dequantize_kernel(q_ref, s_ref, x_ref, *, out_dtype):
+    q = q_ref[...].astype(jnp.float32)
+    x_ref[...] = (q * s_ref[0, 0]).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "bits", "interpret"))
+def quantize_blocks(x: jax.Array, *, block: tuple[int, int] = (256, 512),
+                    bits: int = 8, interpret: bool = False
+                    ) -> tuple[jax.Array, jax.Array]:
+    """x: [M, N] -> (int8 [M, N], scales f32 [M/BM, N/BN]).
+
+    M, N must be multiples of the block shape (callers pad; the collective
+    payloads are weight/grad matrices with friendly shapes).
+    """
+    m, n = x.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    assert m % bm == 0 and n % bn == 0, (x.shape, block)
+    qmax = {8: 127.0, 4: 7.0}[bits]
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_quantize_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+                   pl.BlockSpec((1, 1), lambda i, j: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((m, n), jnp.int8),
+                   jax.ShapeDtypeStruct(grid, jnp.float32)],
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "out_dtype", "interpret"))
+def dequantize_blocks(q: jax.Array, scales: jax.Array, *,
+                      block: tuple[int, int] = (256, 512),
+                      out_dtype=jnp.float32, interpret: bool = False
+                      ) -> jax.Array:
+    m, n = q.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    assert scales.shape == (m // bm, n // bn), (q.shape, scales.shape, block)
+    return pl.pallas_call(
+        functools.partial(_dequantize_kernel, out_dtype=out_dtype),
+        grid=scales.shape,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+                  pl.BlockSpec((1, 1), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(q, scales)

@@ -1,0 +1,205 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without real hardware:
+``jax.jit(step, in_shardings, out_shardings).lower(*structs).compile()``
+must succeed on the single-pod (16, 16) mesh AND the 2-pod (2, 16, 16) mesh
+for every assigned architecture x input shape.  Records per cell:
+
+  * memory_analysis(): per-device argument/output/temp bytes (proves it fits)
+  * cost_analysis(): HLO FLOPs + bytes accessed (roofline numerator)
+  * collective bytes by op kind, parsed from the compiled HLO text
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+     collective-permute)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--mesh single|multi|both] [--out results/dryrun]
+
+Results are written incrementally to <out>/<arch>__<shape>__<mesh>.json so
+interrupted runs resume cheaply (--force recomputes).
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, cells_for, get_config, skipped_cells_for
+from repro.configs.base import SHAPE_CELLS
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (build_prefill_step, build_serve_step,
+                                build_train_step)
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+                "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op, by kind.
+
+    HLO lines look like:
+      %ar = bf16[256,896]{1,0} all-reduce(bf16[256,896]{1,0} %x), ...
+    The output shape equals the moved payload for all-reduce / all-to-all /
+    collective-permute; for all-gather it's the gathered (post) size and for
+    reduce-scatter the pre-reduce operand is the moved payload -- we record
+    output bytes per kind and apply per-kind wire factors in the roofline.
+    """
+    out = {k: {"bytes": 0, "count": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.lstrip()
+        eq = s.find(" = ")
+        if eq < 0:
+            continue
+        rhs = s[eq + 3:]
+        for kind in _COLLECTIVES:
+            # match the op name right after the result type
+            m = re.match(r"^(\([^)]*\)|[\w\[\],{}:#\s]*?)\s*" + kind + r"(-start|-done)?\(",
+                         rhs)
+            if m:
+                if m.group(2) == "-done":
+                    break  # counted at -start
+                out[kind]["bytes"] += _shape_bytes(m.group(1))
+                out[kind]["count"] += 1
+                break
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str) -> dict:
+    cfg = get_config(arch)
+    cell = SHAPE_CELLS[shape]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    if cell.kind == "train":
+        bundle = build_train_step(cfg, cell, mesh)
+    elif cell.kind == "prefill":
+        bundle = build_prefill_step(cfg, cell, mesh)
+    else:
+        bundle = build_serve_step(cfg, cell, mesh)
+
+    with mesh:
+        jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                         out_shardings=bundle.out_shardings,
+                         donate_argnums=bundle.donate_argnums)
+        lowered = jitted.lower(*bundle.arg_structs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+
+    result = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind,
+        "devices": int(np.prod(list(mesh.shape.values()))),
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        },
+        "cost": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+            "transcendentals": cost.get("transcendentals"),
+        },
+        "collectives": coll,
+        "hlo_lines": hlo.count("\n"),
+    }
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = [args.arch] if args.arch else list(ARCHS)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        shapes = cells_for(arch)
+        if args.shape:
+            shapes = [args.shape] if args.shape in shapes else []
+        for skip, why in skipped_cells_for(arch).items():
+            if args.shape in (None, skip):
+                print(f"SKIP {arch} x {skip}: {why}")
+                n_skip += 1
+        for shape in shapes:
+            for mesh_kind in meshes:
+                tag = f"{arch}__{shape}__{mesh_kind}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    with open(path) as fh:
+                        prev = json.load(fh)
+                    if prev.get("ok"):
+                        print(f"CACHED {tag}")
+                        n_ok += 1
+                        continue
+                print(f"RUN {tag} ...", flush=True)
+                try:
+                    result = run_cell(arch, shape, mesh_kind)
+                    n_ok += 1
+                except Exception as e:  # noqa: BLE001 - report, keep going
+                    result = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                              "ok": False, "error": repr(e),
+                              "traceback": traceback.format_exc()[-4000:]}
+                    n_fail += 1
+                    print(f"FAIL {tag}: {e!r}")
+                with open(path, "w") as fh:
+                    json.dump(result, fh, indent=1)
+                if result.get("ok"):
+                    mem = result["memory"]
+                    per_dev = (mem["argument_bytes"] or 0) + (mem["temp_bytes"] or 0)
+                    print(f"  ok: compile={result['compile_s']}s "
+                          f"flops={result['cost']['flops']:.3e} "
+                          f"args+temp/dev={per_dev/1e9:.2f}GB "
+                          f"coll={ {k: round(v['bytes']/1e6,1) for k, v in result['collectives'].items() if v['bytes']} }",
+                          flush=True)
+    print(f"\ndry-run: {n_ok} ok, {n_fail} failed, {n_skip} skipped")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,182 @@
+"""Step functions lowered by the dry-run / executed by train.py & serve.py.
+
+  train_step(params, opt_state, batch)        -> (params, opt_state, metrics)
+  prefill_step(params, batch, cache)          -> (logits, cache)
+  serve_step(params, tokens, cache)           -> (logits, cache)
+
+Each builder closes over the ModelConfig and returns a pure function plus the
+(in_shardings, out_shardings) trees for jax.jit, derived from
+repro.sharding.partition.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models.registry import (DECODE_SLACK, Model, build_model,
+                                   cache_spec, input_specs)
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.sharding import partition
+from repro.sharding import api as shard_api
+
+__all__ = ["build_train_step", "build_prefill_step", "build_serve_step",
+           "StepBundle"]
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything the launcher/dry-run needs for one (arch, cell) step."""
+    fn: Callable
+    in_shardings: Any
+    out_shardings: Any
+    arg_structs: tuple       # ShapeDtypeStructs to lower with
+    donate_argnums: tuple = ()
+
+
+def _named(specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _param_structs(model: Model):
+    return jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0)))
+
+
+def build_train_step(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                     opt: AdamWConfig | None = None,
+                     grad_compress: Callable | None = None) -> StepBundle:
+    """Full training step: loss -> grads -> (optional cross-pod compressed
+    reduction) -> AdamW.  ``grad_compress`` hooks the Mez approximate
+    collective (core/approx_comm) into the gradient path."""
+    shard_api.activate(mesh, zero3=cfg.zero3)
+    model = build_model(cfg)
+    opt = opt or AdamWConfig()
+
+    # Adaptive microbatch count: each microbatch must still shard evenly over
+    # the DP axes (B/M % dp == 0), otherwise GSPMD replicates activations.
+    import numpy as np
+    dp_names = ("pod", "data", "model") if cfg.zero3 else ("pod", "data")
+    dp_size = int(np.prod([mesh.shape[a] for a in dp_names
+                           if a in mesh.axis_names]))
+    microbatches = max(1, cfg.train_microbatches)
+    while microbatches > 1 and (
+            cell.global_batch % microbatches != 0
+            or (cell.global_batch // microbatches) % dp_size != 0):
+        microbatches -= 1
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+        else:
+            # gradient accumulation: scan over microbatches (activation
+            # memory ~ 1/M; grads accumulate in fp32, sharded like params)
+            mb = jax.tree_util.tree_map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]),
+                batch)
+
+            def one(carry, mbatch):
+                loss_sum, acc = carry
+                l, g = jax.value_and_grad(model.loss_fn)(params, mbatch)
+                acc = jax.tree_util.tree_map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+                return (loss_sum + l, acc), None
+
+            acc0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads), _ = jax.lax.scan(
+                one, (jnp.zeros((), jnp.float32), acc0), mb)
+            loss = loss_sum / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+        if grad_compress is not None:
+            grads = grad_compress(grads)
+        new_params, new_opt = adamw_update(opt, params, grads, opt_state)
+        metrics = {"loss": loss.astype(jnp.float32)}
+        return new_params, new_opt, metrics
+
+    p_struct = _param_structs(model)
+    o_struct = jax.eval_shape(lambda: init_opt_state(p_struct))
+    b_struct = input_specs(cfg, cell)["batch"]
+
+    p_specs = partition.param_specs(p_struct, cfg, mesh)
+    o_specs = {"m": p_specs, "v": p_specs, "count": P()}
+    b_specs = partition.batch_specs(b_struct, cfg, mesh, cell)
+
+    in_sh = (_named(p_specs, mesh), _named(o_specs, mesh), _named(b_specs, mesh))
+    out_sh = (_named(p_specs, mesh), _named(o_specs, mesh),
+              _named({"loss": P()}, mesh))
+    return StepBundle(fn=train_step, in_shardings=in_sh, out_shardings=out_sh,
+                      arg_structs=(p_struct, o_struct, b_struct),
+                      donate_argnums=(0, 1))
+
+
+def build_prefill_step(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh
+                       ) -> StepBundle:
+    shard_api.activate(mesh, zero3=cfg.zero3)
+    model = build_model(cfg)
+
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    p_struct = _param_structs(model)
+    b_struct = input_specs(cfg, cell)["batch"]
+    c_struct = cache_spec(cfg, cell.global_batch, cell.seq_len)
+
+    p_specs = partition.param_specs(p_struct, cfg, mesh)
+    b_specs = partition.batch_specs(b_struct, cfg, mesh, cell)
+    c_specs = partition.cache_specs(c_struct, cfg, mesh, cell)
+    logits_struct, cache_out = jax.eval_shape(prefill_step, p_struct, b_struct,
+                                              c_struct)
+    l_spec = _logits_spec(logits_struct, cfg, mesh)
+
+    in_sh = (_named(p_specs, mesh), _named(b_specs, mesh), _named(c_specs, mesh))
+    out_sh = (_named(l_spec, mesh), _named(c_specs, mesh))
+    return StepBundle(fn=prefill_step, in_shardings=in_sh, out_shardings=out_sh,
+                      arg_structs=(p_struct, b_struct, c_struct),
+                      donate_argnums=(2,))
+
+
+def build_serve_step(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh
+                     ) -> StepBundle:
+    shard_api.activate(mesh, zero3=cfg.zero3)
+    model = build_model(cfg)
+
+    def serve_step(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+
+    p_struct = _param_structs(model)
+    specs = input_specs(cfg, cell)
+    t_struct, c_struct = specs["tokens"], specs["cache"]
+
+    p_specs = partition.param_specs(p_struct, cfg, mesh)
+    t_specs = partition.batch_specs({"tokens": t_struct}, cfg, mesh,
+                                    cell)["tokens"]
+    c_specs = partition.cache_specs(c_struct, cfg, mesh, cell)
+    logits_struct, _ = jax.eval_shape(serve_step, p_struct, t_struct, c_struct)
+    l_spec = _logits_spec(logits_struct, cfg, mesh)
+
+    in_sh = (_named(p_specs, mesh), _named(t_specs, mesh), _named(c_specs, mesh))
+    out_sh = (_named(l_spec, mesh), _named(c_specs, mesh))
+    return StepBundle(fn=serve_step, in_shardings=in_sh, out_shardings=out_sh,
+                      arg_structs=(p_struct, t_struct, c_struct),
+                      donate_argnums=(2,))
+
+
+def _logits_spec(logits_struct, cfg: ModelConfig, mesh: Mesh):
+    b, s, v = logits_struct.shape
+    names = ("pod", "data", "model") if cfg.zero3 else ("pod", "data")
+    dp = tuple(n for n in names if n in mesh.axis_names)
+    import numpy as np
+    bspec = dp if b % int(np.prod([mesh.shape[a] for a in dp])) == 0 else None
+    vspec = ("model" if not cfg.zero3 and v % mesh.shape["model"] == 0
+             else None)
+    return P(bspec, None, vspec)

@@ -1,0 +1,166 @@
+"""Attention: GQA with RoPE/M-RoPE, qk-norm, three interchangeable impls.
+
+Implementations (selected by ``impl``):
+
+  naive        full [S, S] score matrix.  Reference semantics; O(S^2) memory.
+  chunked      blockwise online-softmax over KV chunks (lax.scan; the jnp
+               "flash attention").  O(S * chunk) memory -- required for the
+               32k prefill cells, and the dry-run stand-in for the Pallas
+               kernel (Mosaic cannot lower to the CPU backend).
+  pallas       repro.kernels flash kernel (TPU target; interpret mode on CPU).
+
+GQA is computed GROUPED throughout (q reshaped to [B,S,KH,G,D]); KV is never
+physically repeated -- materializing the repeat costs G x cache memory and,
+for decode, G x HBM traffic on the bandwidth-critical path.  Score matmuls
+take bf16 operands with fp32 accumulation (preferred_element_type) instead of
+casting KV to fp32, so no fp32 copy of a 32k-500k cache ever exists.
+
+Decode path: ``decode_attention`` computes one-query attention against a KV
+cache laid out [B, S_max, KH, D]; masking by cache length.  The cache's
+sequence axis is shardable (flash-decode: GSPMD lowers the masked softmax to
+partial-max/partial-sum collectives over the sequence shards).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+__all__ = ["gqa_attention", "decode_attention", "repeat_kv"]
+
+NEG_INF = -2.3819763e38  # large negative for masking, bf16-safe
+
+
+def repeat_kv(k: jax.Array, num_q_heads: int) -> jax.Array:
+    """[B, S, KH, D] -> [B, S, QH, D] by group broadcast (TEST/ORACLE USE:
+    the model paths below never materialize this)."""
+    b, s, kh, d = k.shape
+    groups = num_q_heads // kh
+    if groups == 1:
+        return k
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, kh, groups, d))
+    return k.reshape(b, s, num_q_heads, d)
+
+
+def _group_q(q: jax.Array, kh: int) -> jax.Array:
+    b, s, qh, d = q.shape
+    return q.reshape(b, s, kh, qh // kh, d)
+
+
+def _naive_attention(q, k, v, *, causal: bool, scale: float) -> jax.Array:
+    # q: [B, Sq, KH, G, D], k/v: [B, Sk, KH, D]
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qpos = jnp.arange(sq)[:, None]
+        kpos = jnp.arange(sk)[None, :]
+        s = jnp.where((qpos >= kpos)[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out
+
+
+def _chunked_attention(q, k, v, *, causal: bool, scale: float,
+                       chunk: int = 512) -> jax.Array:
+    """Blockwise online-softmax attention (memory O(Sq * chunk)).
+
+    q: [B, Sq, KH, G, D]; k/v: [B, Sk, KH, D].
+    """
+    b, sq, kh, g, d = q.shape
+    sk = k.shape[1]
+    chunk = min(chunk, sk)
+    n_chunks = (sk + chunk - 1) // chunk
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, kh, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, kh, d).transpose(1, 0, 2, 3, 4)
+
+    qpos = jnp.arange(sq)[:, None]
+
+    def body(carry, inputs):
+        m, l, acc = carry                # [B,KH,G,Sq], same, [B,Sq,KH,G,D]
+        ci, (kb, vb) = inputs
+        s = jnp.einsum("bqkgd,bskd->bkgqs", q, kb,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = ci * chunk + jnp.arange(chunk)[None, :]
+        mask = kpos < sk
+        if causal:
+            mask = mask & (qpos >= kpos)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        upd = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(vb.dtype), vb,
+                         preferred_element_type=jnp.float32)
+        acc_new = acc * alpha.transpose(0, 3, 1, 2)[..., None] + upd
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, sq, kh, g, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (jnp.arange(n_chunks), (kc, vc)))
+    out = acc / jnp.maximum(l, 1e-37).transpose(0, 3, 1, 2)[..., None]
+    return out
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, impl: str = "chunked",
+                  chunk: int = 512, scale: float | None = None) -> jax.Array:
+    """Grouped-query attention.  q: [B,S,QH,D]; k/v: [B,S,KH,D]."""
+    b, sq, qh, d = q.shape
+    kh = k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal, scale=scale)
+    qg = _group_q(q, kh)
+    if impl == "naive":
+        out = _naive_attention(qg, k, v, causal=causal, scale=scale)
+    elif impl == "chunked":
+        out = _chunked_attention(qg, k, v, causal=causal, scale=scale,
+                                 chunk=chunk)
+    else:
+        raise ValueError(f"unknown attention impl {impl!r}")
+    return out.reshape(b, sq, qh, d).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: jax.Array, *, impl: str = "jnp",
+                     scale: float | None = None) -> jax.Array:
+    """Single-token attention against a KV cache.
+
+    q: [B, 1, QH, D]; caches: [B, S_max, KH, D]; length: i32[] or i32[B]
+    (#valid cache entries).  Memory-bound: reads the whole cache once, in its
+    native dtype (no fp32 copy, no GQA repeat).
+    """
+    b, sq, qh, d = q.shape
+    kh = k_cache.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.decode_attention(q, k_cache, v_cache, length, scale=scale)
+    qg = _group_q(q, kh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    smax = k_cache.shape[1]
+    pos = jnp.arange(smax)
+    valid = pos[None, :] < jnp.reshape(length, (-1, 1))      # [B or 1, S]
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, qh, d).astype(q.dtype)
+
+
+def qk_norm_heads(q: jax.Array, k: jax.Array, q_scale: jax.Array,
+                  k_scale: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-head RMS norm of q and k (Qwen3 style), applied pre-RoPE."""
+    return rms_norm(q, q_scale), rms_norm(k, k_scale)

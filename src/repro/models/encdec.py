@@ -1,0 +1,312 @@
+"""Encoder-decoder transformer (seamless-m4t family).
+
+Encoder: bidirectional self-attention over STUB audio-frame embeddings
+([B, S_enc, D] provided by input_specs -- the modality frontend is out of
+scope per the assignment).  Decoder: causal self-attention + cross-attention
+over the encoder output, text token embeddings in/out.
+
+Shape-cell semantics (see configs/seamless_m4t_large_v2.py):
+  train:   enc_len = dec_len = seq_len // 2
+  prefill: encoder over seq_len frames + decoder prefill of dec_len tokens
+  decode:  one decoder step; cross-attention reads cached encoder output of
+           length seq_len; self-attention reads the decoder KV cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, dtype_of
+from repro.models.attention import decode_attention, gqa_attention
+from repro.models.layers import (apply_rope, gelu_mlp, init_linear, init_norm,
+                                 layer_norm, mask_padded_vocab, rope)
+from repro.sharding.api import shard
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "prefill",
+           "decode_step", "EncDecCache"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EncDecCache:
+    enc_out: jax.Array      # [B, S_enc, D]
+    self_k: jax.Array       # [L, B, S_max, KH, HD]
+    self_v: jax.Array
+    cross_k: jax.Array      # [L, B, S_enc, KH, HD] (precomputed from enc_out)
+    cross_v: jax.Array
+    length: jax.Array
+
+    def tree_flatten(self):
+        return ((self.enc_out, self.self_k, self.self_v, self.cross_k,
+                 self.cross_v, self.length), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _norm(x, p):
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def _init_attn(keys, d, qh, kh, hd, dtype) -> dict:
+    return {
+        "wq": init_linear(keys[0], d, qh * hd, dtype=dtype),
+        "wk": init_linear(keys[1], d, kh * hd, dtype=dtype),
+        "wv": init_linear(keys[2], d, kh * hd, dtype=dtype),
+        "wo": init_linear(keys[3], qh * hd, d, dtype=dtype),
+    }
+
+
+def _init_enc_layer(key, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    return {
+        "attn_norm": init_norm(d, with_bias=True),
+        "mlp_norm": init_norm(d, with_bias=True),
+        "attn": _init_attn(ks[:4], d, cfg.num_heads, cfg.num_kv_heads,
+                           cfg.head_dim, dtype),
+        "w_up": init_linear(ks[4], d, cfg.d_ff, dtype=dtype),
+        "w_down": init_linear(ks[5], cfg.d_ff, d, dtype=dtype),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 12)
+    d = cfg.d_model
+    return {
+        "self_norm": init_norm(d, with_bias=True),
+        "cross_norm": init_norm(d, with_bias=True),
+        "mlp_norm": init_norm(d, with_bias=True),
+        "self_attn": _init_attn(ks[:4], d, cfg.num_heads, cfg.num_kv_heads,
+                                cfg.head_dim, dtype),
+        "cross_attn": _init_attn(ks[4:8], d, cfg.num_heads, cfg.num_kv_heads,
+                                 cfg.head_dim, dtype),
+        "w_up": init_linear(ks[8], d, cfg.d_ff, dtype=dtype),
+        "w_down": init_linear(ks[9], cfg.d_ff, d, dtype=dtype),
+    }
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    dtype = dtype_of(cfg.param_dtype)
+    n_enc, n_dec = cfg.num_layers, cfg.num_decoder_layers
+    keys = jax.random.split(key, 4)
+    enc_keys = jax.random.split(keys[0], n_enc)
+    dec_keys = jax.random.split(keys[1], n_dec)
+    return {
+        "embed": init_linear(keys[2], cfg.padded_vocab, cfg.d_model,
+                             dtype=dtype, scale=0.02),
+        "encoder": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(enc_keys),
+        "decoder": jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(dec_keys),
+        "enc_norm": init_norm(cfg.d_model, with_bias=True),
+        "dec_norm": init_norm(cfg.d_model, with_bias=True),
+        "lm_head": init_linear(keys[3], cfg.d_model, cfg.padded_vocab,
+                               dtype=dtype),
+    }
+
+
+# -----------------------------------------------------------------------------
+# attention helpers
+# -----------------------------------------------------------------------------
+
+
+def _proj_qkv(p, xq, xkv, cfg):
+    b, sq, _ = xq.shape
+    skv = xkv.shape[1]
+    qh, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (xq @ p["wq"]).reshape(b, sq, qh, hd)
+    k = (xkv @ p["wk"]).reshape(b, skv, kh, hd)
+    v = (xkv @ p["wv"]).reshape(b, skv, kh, hd)
+    return q, k, v
+
+
+def _attn(p, xq, xkv, cfg, *, causal, cos=None, sin=None):
+    q, k, v = _proj_qkv(p, xq, xkv, cfg)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    out = gqa_attention(q, k, v, causal=causal, impl=cfg.attention_impl,
+                        chunk=cfg.attention_chunk)
+    b, sq = xq.shape[:2]
+    return out.reshape(b, sq, -1) @ p["wo"]
+
+
+# -----------------------------------------------------------------------------
+# encoder / decoder stacks
+# -----------------------------------------------------------------------------
+
+
+def encode(params: dict, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = frames.astype(dtype_of(cfg.compute_dtype))
+    b, s, _ = h.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    cos, sin = rope(pos, cfg.head_dim, theta=cfg.rope_theta)
+
+    def body(h, layer_p):
+        x = _norm(h, layer_p["attn_norm"])
+        h = h + _attn(layer_p["attn"], x, x, cfg, causal=False,
+                      cos=cos, sin=sin)
+        x = _norm(h, layer_p["mlp_norm"])
+        h = h + gelu_mlp(x, layer_p["w_up"], layer_p["w_down"])
+        return shard(h, "dp", None, None), None
+
+    h = shard(h, "dp", None, None)
+    if cfg.remat in ("full", "dots"):
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["encoder"])
+    return _norm(h, params["enc_norm"])
+
+
+def decode_stack(params: dict, tokens: jax.Array, enc_out: jax.Array,
+                 cfg: ModelConfig) -> jax.Array:
+    h = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))
+    b, s, _ = h.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    cos, sin = rope(pos, cfg.head_dim, theta=cfg.rope_theta)
+
+    def body(h, layer_p):
+        x = _norm(h, layer_p["self_norm"])
+        h = h + _attn(layer_p["self_attn"], x, x, cfg, causal=True,
+                      cos=cos, sin=sin)
+        x = _norm(h, layer_p["cross_norm"])
+        h = h + _attn(layer_p["cross_attn"], x, enc_out, cfg, causal=False)
+        x = _norm(h, layer_p["mlp_norm"])
+        h = h + gelu_mlp(x, layer_p["w_up"], layer_p["w_down"])
+        return shard(h, "dp", None, None), None
+
+    h = shard(h, "dp", None, None)
+    if cfg.remat in ("full", "dots"):
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["decoder"])
+    return _norm(h, params["dec_norm"])
+
+
+# -----------------------------------------------------------------------------
+# model API
+# -----------------------------------------------------------------------------
+
+
+def forward(params: dict, batch: dict, cfg: ModelConfig
+            ) -> tuple[jax.Array, jax.Array]:
+    enc_out = encode(params, batch["embeds"], cfg)
+    h = decode_stack(params, batch["tokens"], enc_out, cfg)
+    logits = shard(h @ params["lm_head"].astype(h.dtype), "dp", None, "model")
+    return mask_padded_vocab(logits, cfg.vocab_size), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
+    logits, _ = forward(params, batch, cfg)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               enc_len: int = 0, dtype=None) -> EncDecCache:
+    dtype = dtype or dtype_of(cfg.param_dtype)
+    l = cfg.num_decoder_layers
+    kh, hd = cfg.num_kv_heads, cfg.head_dim
+    return EncDecCache(
+        enc_out=jnp.zeros((batch, enc_len, cfg.d_model), dtype),
+        self_k=jnp.zeros((l, batch, max_len, kh, hd), dtype),
+        self_v=jnp.zeros((l, batch, max_len, kh, hd), dtype),
+        cross_k=jnp.zeros((l, batch, enc_len, kh, hd), dtype),
+        cross_v=jnp.zeros((l, batch, enc_len, kh, hd), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def prefill(params: dict, batch: dict, cfg: ModelConfig, cache: EncDecCache
+            ) -> tuple[jax.Array, EncDecCache]:
+    """Encode the (stub) audio frames, precompute cross-attention KV, and
+    prefill the decoder over ``batch["tokens"]``."""
+    enc_out = encode(params, batch["embeds"], cfg)
+    b = enc_out.shape[0]
+    kh, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def cross_kv(layer_p):
+        k = (enc_out @ layer_p["cross_attn"]["wk"]).reshape(b, -1, kh, hd)
+        v = (enc_out @ layer_p["cross_attn"]["wv"]).reshape(b, -1, kh, hd)
+        return k.astype(cache.cross_k.dtype), v.astype(cache.cross_v.dtype)
+
+    cross_k, cross_v = jax.vmap(cross_kv)(params["decoder"])
+
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    h = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))
+    pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    cos, sin = rope(pos, cfg.head_dim, theta=cfg.rope_theta)
+
+    def body(h, xs):
+        layer_p, sk, sv = xs
+        x = _norm(h, layer_p["self_norm"])
+        q, k, v = _proj_qkv(layer_p["self_attn"], x, x, cfg)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        sk = jax.lax.dynamic_update_slice(sk, k.astype(sk.dtype), (0, 0, 0, 0))
+        sv = jax.lax.dynamic_update_slice(sv, v.astype(sv.dtype), (0, 0, 0, 0))
+        out = gqa_attention(q, k, v, causal=True, impl=cfg.attention_impl,
+                            chunk=cfg.attention_chunk)
+        h = h + out.reshape(b, s, -1) @ layer_p["self_attn"]["wo"]
+        x = _norm(h, layer_p["cross_norm"])
+        h = h + _attn(layer_p["cross_attn"], x, enc_out, cfg, causal=False)
+        x = _norm(h, layer_p["mlp_norm"])
+        h = h + gelu_mlp(x, layer_p["w_up"], layer_p["w_down"])
+        return shard(h, "dp", None, None), (sk, sv)
+
+    h = shard(h, "dp", None, None)
+    h, (self_k, self_v) = jax.lax.scan(body, h, (params["decoder"],
+                                                 cache.self_k, cache.self_v))
+    h = _norm(h[:, -1:], params["dec_norm"])
+    logits = mask_padded_vocab(h @ params["lm_head"].astype(h.dtype),
+                               cfg.vocab_size)
+    return logits, EncDecCache(enc_out=enc_out, self_k=self_k, self_v=self_v,
+                               cross_k=cross_k, cross_v=cross_v,
+                               length=jnp.asarray(s, jnp.int32))
+
+
+def decode_step(params: dict, tokens: jax.Array, cfg: ModelConfig,
+                cache: EncDecCache) -> tuple[jax.Array, EncDecCache]:
+    b, s = tokens.shape
+    h = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))
+    pos = jnp.broadcast_to(cache.length[None, None], (b, s))
+    cos, sin = rope(pos, cfg.head_dim, theta=cfg.rope_theta)
+    enc_len = cache.enc_out.shape[1]
+
+    def body(h, xs):
+        layer_p, sk, sv, ck, cv = xs
+        x = _norm(h, layer_p["self_norm"])
+        q, k, v = _proj_qkv(layer_p["self_attn"], x, x, cfg)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        sk = jax.lax.dynamic_update_slice(sk, k.astype(sk.dtype),
+                                          (0, cache.length, 0, 0))
+        sv = jax.lax.dynamic_update_slice(sv, v.astype(sv.dtype),
+                                          (0, cache.length, 0, 0))
+        out = decode_attention(q, sk, sv, cache.length + s)
+        h = h + out.reshape(b, s, -1) @ layer_p["self_attn"]["wo"]
+        # cross attention against the full cached encoder KV
+        x = _norm(h, layer_p["cross_norm"])
+        qc = (x @ layer_p["cross_attn"]["wq"]).reshape(
+            b, s, cfg.num_heads, cfg.head_dim)
+        out = decode_attention(qc, ck, cv, jnp.asarray(enc_len, jnp.int32))
+        h = h + out.reshape(b, s, -1) @ layer_p["cross_attn"]["wo"]
+        x = _norm(h, layer_p["mlp_norm"])
+        h = h + gelu_mlp(x, layer_p["w_up"], layer_p["w_down"])
+        return h, (sk, sv)
+
+    h, (self_k, self_v) = jax.lax.scan(
+        body, h, (params["decoder"], cache.self_k, cache.self_v,
+                  cache.cross_k, cache.cross_v))
+    h = _norm(h, params["dec_norm"])
+    logits = mask_padded_vocab(h @ params["lm_head"].astype(h.dtype),
+                               cfg.vocab_size)
+    return logits, EncDecCache(enc_out=cache.enc_out, self_k=self_k,
+                               self_v=self_v, cross_k=cache.cross_k,
+                               cross_v=cache.cross_v,
+                               length=cache.length + s)

@@ -1,0 +1,172 @@
+"""Foundational model layers: norms, activations, embeddings, RoPE/M-RoPE.
+
+All layers are pure functions over parameter pytrees (plain dicts), with
+explicit init functions.  Parameter layout conventions:
+
+  * weights are stored transposed for row-major activations: y = x @ W,
+    W: [d_in, d_out]
+  * per-layer parameter stacks for scan-over-layers carry a leading [L, ...]
+    axis (built by ``stack_layers``)
+  * dtype policy: ``param_dtype`` for storage, ``compute_dtype`` for matmuls
+    (norms/softmax always accumulate in fp32)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["rms_norm", "layer_norm", "swiglu", "gelu_mlp", "rope", "apply_rope",
+           "mrope_frequencies", "init_linear", "init_norm", "stack_layers",
+           "DTypePolicy", "mask_padded_vocab"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+
+    def cast(self, x: jax.Array) -> jax.Array:
+        return x.astype(self.compute_dtype)
+
+
+# -----------------------------------------------------------------------------
+# Norms
+# -----------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               *, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def init_norm(d: int, *, with_bias: bool = False, dtype=jnp.float32) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if with_bias:
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# -----------------------------------------------------------------------------
+# MLPs
+# -----------------------------------------------------------------------------
+
+
+def init_linear(key: jax.Array, d_in: int, d_out: int, *,
+                dtype=jnp.float32, scale: float | None = None) -> jax.Array:
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    """SwiGLU FFN: (silu(x W_g) * (x W_u)) W_d."""
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def gelu_mlp(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
+             b_up: jax.Array | None = None,
+             b_down: jax.Array | None = None) -> jax.Array:
+    h = x @ w_up
+    if b_up is not None:
+        h = h + b_up
+    h = jax.nn.gelu(h)
+    h = h @ w_down
+    if b_down is not None:
+        h = h + b_down
+    return h
+
+
+# -----------------------------------------------------------------------------
+# Rotary position embeddings (RoPE + multimodal M-RoPE)
+# -----------------------------------------------------------------------------
+
+
+def rope(positions: jax.Array, head_dim: int, *, theta: float = 10000.0
+         ) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for positions [...] -> [..., head_dim/2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate head vectors.  x: [..., S, H, D]; cos/sin: [..., S, D/2].
+
+    Uses the split-halves convention (LLaMA): (x1, x2) -> (x1 c - x2 s,
+    x2 c + x1 s).
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # broadcast over heads
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_frequencies(positions: jax.Array, head_dim: int,
+                      sections: tuple[int, int, int],
+                      *, theta: float = 10000.0) -> tuple[jax.Array, jax.Array]:
+    """Multimodal RoPE (Qwen2-VL): the head_dim/2 frequency slots are split
+    into (temporal, height, width) sections, each rotated by its own position
+    stream.
+
+    positions: [3, ...pos-shape] (t/h/w position ids; text tokens carry the
+    same id in all three streams, image patches their grid coordinates).
+    Returns cos/sin of shape [...pos-shape, head_dim/2].
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [3, ..., half]
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts.append(angles[i, ..., start:start + sec])
+        start += sec
+    merged = jnp.concatenate(parts, axis=-1)
+    return jnp.cos(merged), jnp.sin(merged)
+
+
+# -----------------------------------------------------------------------------
+# Utilities
+# -----------------------------------------------------------------------------
+
+
+def stack_layers(layer_params: list) -> dict:
+    """Stack per-layer pytrees into a single [L, ...] pytree for lax.scan."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layer_params)
+
+
+def mask_padded_vocab(logits: jax.Array, real_vocab: int) -> jax.Array:
+    """Set logits of padded vocab columns (>= real_vocab) to -inf.
+
+    The embedding/lm_head tables are padded to a multiple of 256 so the
+    vocab dim shards over the model axis; padded columns must never win
+    softmax/argmax.
+    """
+    v = logits.shape[-1]
+    if v == real_vocab:
+        return logits
+    col = jnp.arange(v)
+    neg = jnp.asarray(-2.3819763e38, logits.dtype)
+    return jnp.where(col[None, None, :] < real_vocab, logits, neg)

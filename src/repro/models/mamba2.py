@@ -1,0 +1,199 @@
+"""Mamba-2 (SSD) mixer layer [arXiv:2405.21060], chunked scan formulation.
+
+Layer: in_proj -> (z gate | x | B | C | dt) -> causal depthwise conv over
+(x,B,C) -> SSD recurrence -> gated RMSNorm -> out_proj.
+
+SSD with scalar-per-head decay A and shared (n_groups=1) B/C:
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t * (B_t outer x_t)      h: [P, N]
+    y_t = C_t . h_t + D x_t
+
+computed chunk-parallel: within a chunk of length Q the output splits into an
+intra-chunk term (a masked [Q, Q] decay-weighted matmul -- MXU-friendly) and
+an inter-chunk term from the carried state; chunks are lax.scan'ed.  This is
+the jnp reference/dry-run path; `repro.kernels.linear_scan` is the Pallas
+equivalent for the inner recurrence.
+
+Shapes: x [B,S,H,P] (H=d_inner/headdim P), B/C [B,S,N], dt [B,S,H], A [H].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import init_linear, rms_norm
+
+__all__ = ["init_mamba2", "mamba2_forward", "mamba2_decode_step", "Mamba2State",
+           "ssd_chunked"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Mamba2State:
+    ssm: jax.Array        # [B, H, P, N]
+    conv: jax.Array       # [B, K-1, conv_channels]
+
+    def tree_flatten(self):
+        return ((self.ssm, self.conv), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    d_inner = cfg.d_model * cfg.ssm_expand
+    nheads = d_inner // cfg.ssm_headdim
+    return d_inner, nheads, cfg.ssm_headdim, cfg.ssm_state
+
+
+def init_mamba2(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_inner, nheads, p_dim, n = _dims(cfg)
+    conv_ch = d_inner + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": init_linear(ks[0], d, 2 * d_inner + 2 * n + nheads,
+                               dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), jnp.float32)
+                   * (1.0 / cfg.ssm_conv)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": init_linear(ks[2], d_inner, d, dtype=dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.  x: [B,S,C], w: [K,C].  Returns (y, tail)."""
+    k = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i][None, None] for i in range(k))
+    tail = xp[:, -(k - 1):] if k > 1 else jnp.zeros(
+        (x.shape[0], 0, x.shape[2]), x.dtype)
+    return jax.nn.silu(y + b[None, None]), tail
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
+                A: jax.Array, D: jax.Array, *, chunk: int = 128,
+                h0: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Chunk-parallel SSD.  x [B,S,H,P], dt [B,S,H], B/C [B,S,N], A [H].
+
+    Returns (y [B,S,H,P], final state [B,H,P,N]).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nchunks = s // q
+
+    xq = x.reshape(b, nchunks, q, h, p).transpose(1, 0, 2, 3, 4)
+    dtq = dt.reshape(b, nchunks, q, h).transpose(1, 0, 2, 3)
+    Bq = B.reshape(b, nchunks, q, n).transpose(1, 0, 2, 3)
+    Cq = C.reshape(b, nchunks, q, n).transpose(1, 0, 2, 3)
+
+    mask = jnp.tril(jnp.ones((q, q), bool))                  # s' <= t
+
+    @jax.checkpoint
+    def body(hprev, xs):
+        xb, dtb, Bb, Cb = xs                                 # [B,q,...]
+        a = dtb * A[None, None, :]                           # [B,q,H], negative
+        cum = jnp.cumsum(a, axis=1)                          # [B,q,H]
+        # intra-chunk.  Mask the EXPONENT before exp (double-where): the
+        # upper triangle has positive exponents that overflow to inf, and
+        # inf * 0 in the backward of a post-exp mask poisons every gradient.
+        expo = cum[:, :, None, :] - cum[:, None, :, :]       # [B,q,q,H]
+        expo = jnp.where(mask[None, :, :, None], expo, -jnp.inf)
+        L = jnp.exp(expo)
+        CB = jnp.einsum("bqn,bsn->bqs", Cb.astype(jnp.float32),
+                        Bb.astype(jnp.float32))              # [B,q,q]
+        scores = CB[..., None] * L * dtb[:, None, :, :]      # [B,q,s',H]
+        y = jnp.einsum("bqsh,bshp->bqhp", scores,
+                       xb.astype(jnp.float32))
+        # inter-chunk (incoming state)
+        y = y + jnp.einsum("bqn,bqh,bhpn->bqhp", Cb.astype(jnp.float32),
+                           jnp.exp(cum), hprev)
+        # state update
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)            # [B,q,H]
+        dB = (decay_end * dtb)[..., None] * Bb[:, :, None, :]  # [B,q,H,N]
+        hnew = (jnp.exp(cum[:, -1])[:, :, None, None] * hprev
+                + jnp.einsum("bqhn,bqhp->bhpn", dB, xb.astype(jnp.float32)))
+        return hnew, y
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    hfinal, yq = jax.lax.scan(body, h0, (xq, dtq, Bq, Cq))
+    y = yq.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    y = y + D[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), hfinal
+
+
+def _split_proj(zxbcdt: jax.Array, cfg: ModelConfig):
+    d_inner, nheads, p_dim, n = _dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : 2 * d_inner + 2 * n]
+    dt = zxbcdt[..., 2 * d_inner + 2 * n :]
+    return z, xbc, dt
+
+
+def mamba2_forward(params: dict, h: jax.Array, cfg: ModelConfig, *,
+                   state: Mamba2State | None = None, chunk: int = 128
+                   ) -> tuple[jax.Array, Mamba2State]:
+    """Full-sequence mixer.  h: [B,S,D] -> (out [B,S,D], final state)."""
+    b, s, _ = h.shape
+    d_inner, nheads, p_dim, n = _dims(cfg)
+    zxbcdt = h @ params["in_proj"]
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+    conv_prev = state.conv if state is not None else None
+    xbc, conv_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                  conv_prev)
+    x = xbc[..., :d_inner].reshape(b, s, nheads, p_dim)
+    B = xbc[..., d_inner : d_inner + n]
+    C = xbc[..., d_inner + n :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None])
+    A = -jnp.exp(params["A_log"])
+    h0 = state.ssm if state is not None else None
+    y, hfinal = ssd_chunked(x, dt, B, C, A, params["D"],
+                            chunk=min(chunk, s), h0=h0)
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_scale"])
+    return y @ params["out_proj"], Mamba2State(ssm=hfinal, conv=conv_tail)
+
+
+def mamba2_decode_step(params: dict, h: jax.Array, cfg: ModelConfig,
+                       state: Mamba2State) -> tuple[jax.Array, Mamba2State]:
+    """Single-token step.  h: [B,1,D]."""
+    b, s, _ = h.shape
+    assert s == 1
+    d_inner, nheads, p_dim, n = _dims(cfg)
+    zxbcdt = h @ params["in_proj"]
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+    xbc, conv_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                  state.conv)
+    x = xbc[..., :d_inner].reshape(b, nheads, p_dim)
+    B = xbc[:, 0, d_inner : d_inner + n]
+    C = xbc[:, 0, d_inner + n :]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + params["dt_bias"][None])          # [B,H]
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A[None])                            # [B,H]
+    x32 = x.astype(jnp.float32)
+    hnew = (decay[:, :, None, None] * state.ssm
+            + (dt[..., None, None] * x32[..., None])
+            * B[:, None, None, :].astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", C.astype(jnp.float32), hnew)
+    y = y + params["D"][None, :, None] * x32
+    y = y.reshape(b, 1, d_inner).astype(h.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_scale"])
+    return y @ params["out_proj"], Mamba2State(ssm=hnew, conv=conv_tail)

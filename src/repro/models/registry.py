@@ -1,0 +1,147 @@
+"""Architecture registry: family -> model module + input_specs per shape cell.
+
+``Model`` is a uniform facade over the family modules (transformer / rwkv6 /
+zamba2 / encdec): init_params, loss_fn, prefill, decode_step, init_cache.
+
+``input_specs(cfg, cell)`` builds jax.ShapeDtypeStruct stand-ins for every
+model input of a shape cell -- weak-type-correct, shardable, no device
+allocation -- consumed by the multi-pod dry-run.  ``make_batch`` builds the
+concrete (random) equivalents for smoke tests and real training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from types import ModuleType
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeCell, dtype_of
+from repro.models import encdec, rwkv6, transformer, zamba2
+
+__all__ = ["Model", "build_model", "input_specs", "make_batch",
+           "cache_spec", "DECODE_SLACK"]
+
+# Extra KV-cache slots past seq_len for decode cells.  256 keeps S_max
+# divisible by every mesh-axis combination (model=16, data*model=256) so the
+# cache's sequence dim always shards cleanly (flash-decode SP).
+DECODE_SLACK = 256
+
+_FAMILY_MODULES: dict[str, ModuleType] = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": rwkv6,
+    "hybrid": zamba2,
+    "audio": encdec,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    module: ModuleType
+
+    def init_params(self, key: jax.Array):
+        return self.module.init_params(key, self.cfg)
+
+    def loss_fn(self, params, batch):
+        return self.module.loss_fn(params, batch, self.cfg)
+
+    def forward(self, params, batch):
+        return self.module.forward(params, batch, self.cfg)
+
+    def init_cache(self, batch: int, max_len: int, **kw):
+        return self.module.init_cache(self.cfg, batch, max_len, **kw)
+
+    def prefill(self, params, batch, cache):
+        return self.module.prefill(params, batch, self.cfg, cache)
+
+    def decode_step(self, params, tokens, cache):
+        return self.module.decode_step(params, tokens, self.cfg, cache)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family not in _FAMILY_MODULES:
+        raise KeyError(f"unknown family {cfg.family!r}")
+    return Model(cfg=cfg, module=_FAMILY_MODULES[cfg.family])
+
+
+# -----------------------------------------------------------------------------
+# input specs per shape cell
+# -----------------------------------------------------------------------------
+
+
+def _batch_structs(cfg: ModelConfig, b: int, s: int, *, train: bool) -> dict:
+    """Token/embed/label structs for one step over [b, s] sequences."""
+    compute = dtype_of(cfg.compute_dtype)
+    specs: dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "vlm":
+        p = cfg.frontend_tokens
+        s_text = max(1, s - p)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+        specs["patch_embeds"] = jax.ShapeDtypeStruct((b, p, cfg.d_model),
+                                                     compute)
+        if train:
+            specs["labels"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+    elif cfg.family == "audio":
+        s_enc = s // 2 if train else s
+        s_dec = s - s_enc if train else max(1, s // 8)
+        specs["embeds"] = jax.ShapeDtypeStruct((b, s_enc, cfg.d_model),
+                                               compute)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s_dec), jnp.int32)
+        if train:
+            specs["labels"] = jax.ShapeDtypeStruct((b, s_dec), jnp.int32)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if train:
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return specs
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStructs for the inputs of this (arch, cell)'s step function.
+
+    train cells   -> {"batch": {...}}                       (train_step)
+    prefill cells -> {"batch": {...}}                       (prefill_step)
+    decode cells  -> {"tokens": [B,1], "cache": <pytree>}   (serve_step)
+    """
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        return {"batch": _batch_structs(cfg, b, s, train=True)}
+    if cell.kind == "prefill":
+        return {"batch": _batch_structs(cfg, b, s, train=False)}
+    if cell.kind == "decode":
+        cache = cache_spec(cfg, b, s)
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                "cache": cache}
+    raise ValueError(cell.kind)
+
+
+def cache_spec(cfg: ModelConfig, b: int, s: int):
+    """ShapeDtypeStruct pytree matching init_cache(cfg, b, s+SLACK)."""
+    model = build_model(cfg)
+    shapes = jax.eval_shape(
+        lambda: model.init_cache(b, s + DECODE_SLACK,
+                                 **({"enc_len": s} if cfg.family == "audio"
+                                    else {})))
+    return shapes
+
+
+def make_batch(cfg: ModelConfig, b: int, s: int, *, train: bool,
+               key: jax.Array | None = None) -> dict:
+    """Concrete random batch matching _batch_structs (smoke tests)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs = _batch_structs(cfg, b, s, train=train)
+    out = {}
+    for name, spec in specs.items():
+        key, sub = jax.random.split(key)
+        if spec.dtype == jnp.int32:
+            out[name] = jax.random.randint(sub, spec.shape, 0,
+                                           cfg.vocab_size, jnp.int32)
+        else:
+            out[name] = (jax.random.normal(sub, spec.shape, jnp.float32)
+                         .astype(spec.dtype) * 0.02)
+    return out

@@ -1,0 +1,309 @@
+"""RWKV-6 "Finch" [arXiv:2404.05892]: attention-free LM with data-dependent
+per-channel decay.
+
+Block = time-mix (the wkv linear recurrence) + channel-mix (squared-ReLU FFN),
+both with token-shift interpolation whose mix coefficients get a low-rank
+data-dependent correction (the LoRA MLPs of the paper).
+
+wkv recurrence per head (K = V = head_dim):
+
+    y_t     = r_t^T (state_{t-1} + diag(u) k_t v_t^T)        y: [V]
+    state_t = diag(w_t) state_{t-1} + k_t v_t^T              state: [K, V]
+
+with w_t = exp(-exp(w0 + lora_w(x_t))) in (0, 1), data-dependent.
+
+Chunked evaluation (exact): within a chunk of length Q the cross-term
+decay D[t,s,k] = exp(cum_{t-1,k} - cum_{s,k}) (s < t) is materialized as a
+[Q, Q, K] tensor per (batch, head) -- numerically safe (all exponents <= 0)
+and MXU-amenable; the carried state handles chunk boundaries; chunk size
+trades memory for parallelism.  ``repro.kernels.linear_scan`` is the Pallas
+TPU kernel for the same recurrence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, dtype_of
+from repro.models.layers import init_linear, layer_norm, mask_padded_vocab
+from repro.sharding.api import shard
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "prefill",
+           "decode_step", "RWKVState", "wkv_chunked"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RWKVState:
+    wkv: jax.Array       # [L, B, H, K, V]
+    shift_tm: jax.Array  # [L, B, D]   last token fed to time-mix
+    shift_cm: jax.Array  # [L, B, D]   last token fed to channel-mix
+    length: jax.Array
+
+    def tree_flatten(self):
+        return ((self.wkv, self.shift_tm, self.shift_cm, self.length), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+# -----------------------------------------------------------------------------
+# init
+# -----------------------------------------------------------------------------
+
+_MIX_NAMES = ("r", "k", "v", "g", "w")
+
+
+def _init_layer(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = cfg.head_dim
+    r_mix, r_dec = cfg.rwkv_mix_lora, cfg.rwkv_decay_lora
+    ks = jax.random.split(key, 16)
+    p = {
+        "ln1": {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)},
+        "ln2": {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)},
+        # time-mix base coefficients + shared lora down / per-stream up
+        "mix_base": 0.5 * jnp.ones((len(_MIX_NAMES), d), jnp.float32),
+        "mix_down": init_linear(ks[0], d, r_mix * len(_MIX_NAMES), dtype=dtype),
+        "mix_up": (jax.random.normal(ks[1], (len(_MIX_NAMES), r_mix, d),
+                                     jnp.float32) * 0.02).astype(dtype),
+        "wr": init_linear(ks[2], d, h * hd, dtype=dtype),
+        "wk": init_linear(ks[3], d, h * hd, dtype=dtype),
+        "wv": init_linear(ks[4], d, h * hd, dtype=dtype),
+        "wg": init_linear(ks[5], d, h * hd, dtype=dtype),
+        "wo": init_linear(ks[6], h * hd, d, dtype=dtype),
+        # decay: w0 + up(tanh(down(x)))
+        "w0": -6.0 * jnp.ones((h * hd,), jnp.float32),
+        "w_down": init_linear(ks[7], d, r_dec, dtype=dtype),
+        "w_up": init_linear(ks[8], r_dec, h * hd, dtype=dtype),
+        "u": jnp.zeros((h, hd), jnp.float32),                # bonus
+        "ln_x": {"scale": jnp.ones((h * hd,), jnp.float32),
+                 "bias": jnp.zeros((h * hd,), jnp.float32)},
+        # channel mix
+        "cm_mix_k": 0.5 * jnp.ones((d,), jnp.float32),
+        "cm_mix_r": 0.5 * jnp.ones((d,), jnp.float32),
+        "cm_wk": init_linear(ks[9], d, cfg.d_ff, dtype=dtype),
+        "cm_wv": init_linear(ks[10], cfg.d_ff, d, dtype=dtype),
+        "cm_wr": init_linear(ks[11], d, d, dtype=dtype),
+    }
+    return p
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    dtype = dtype_of(cfg.param_dtype)
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    stacked = jax.vmap(lambda k: _init_layer(k, cfg, dtype))(
+        keys[: cfg.num_layers])
+    return {
+        "embed": init_linear(keys[-1], cfg.padded_vocab, cfg.d_model,
+                             dtype=dtype, scale=0.02),
+        "ln_in": {"scale": jnp.ones((cfg.d_model,), jnp.float32),
+                  "bias": jnp.zeros((cfg.d_model,), jnp.float32)},
+        "layers": stacked,
+        "final_norm": {"scale": jnp.ones((cfg.d_model,), jnp.float32),
+                       "bias": jnp.zeros((cfg.d_model,), jnp.float32)},
+        "lm_head": init_linear(keys[-2], cfg.d_model, cfg.padded_vocab,
+                               dtype=dtype),
+    }
+
+
+# -----------------------------------------------------------------------------
+# wkv recurrence
+# -----------------------------------------------------------------------------
+
+
+def wkv_chunked(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+                u: jax.Array, *, chunk: int = 32,
+                state0: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Exact chunked wkv.  r/k/v: [B,S,H,K], logw: [B,S,H,K] (<=0), u: [H,K].
+
+    Returns (y [B,S,H,K], final state [B,H,K,V=K]).
+    """
+    b, s, h, kd = r.shape
+    q = min(chunk, s)
+    assert s % q == 0
+    nchunks = s // q
+
+    def resh(x):
+        return x.reshape(b, nchunks, q, h, kd).transpose(1, 0, 2, 3, 4)
+
+    rq, kq, vq, wq = resh(r.astype(jnp.float32)), resh(k.astype(jnp.float32)), \
+        resh(v.astype(jnp.float32)), resh(logw.astype(jnp.float32))
+    mask = jnp.tril(jnp.ones((q, q), bool), k=-1)            # strict s < t
+
+    @jax.checkpoint
+    def body(state, xs):
+        rb, kb, vb, wb = xs                                  # [B,q,H,K]
+        cum = jnp.cumsum(wb, axis=1)                         # [B,q,H,K]
+        cum_tm1 = cum - wb                                   # cum_{t-1}
+        # intra-chunk cross terms: D[t,s,k] = exp(cum_tm1[t]-cum[s]) for s<t.
+        # Exponent masked BEFORE exp (double-where): s>t entries are positive
+        # and can overflow; a post-exp mask would NaN the backward.
+        expo = cum_tm1[:, :, None] - cum[:, None, :, :, :]
+        expo = jnp.where(mask[None, :, :, None, None], expo, -jnp.inf)
+        Dmat = jnp.exp(expo)
+        att = jnp.einsum("bthk,bshk,btshk->bths", rb, kb, Dmat)
+        y = jnp.einsum("bths,bshv->bthv", att, vb)
+        # diagonal (bonus) term
+        y = y + jnp.einsum("bthk,hk,bthk,bthv->bthv", rb, u, kb, vb)
+        # incoming state term: r_t . diag(exp(cum_{t-1})) state
+        rdec = rb * jnp.exp(cum_tm1)
+        y = y + jnp.einsum("bthk,bhkv->bthv", rdec, state)
+        # state update
+        dec_end = jnp.exp(cum[:, -1:, :, :] - cum)           # [B,q,H,K]
+        state = (jnp.exp(cum[:, -1])[..., None] * state
+                 + jnp.einsum("bthk,bthv->bhkv", kb * dec_end, vb))
+        return state, y
+
+    if state0 is None:
+        state0 = jnp.zeros((b, h, kd, kd), jnp.float32)
+    state, yq = jax.lax.scan(body, state0, (rq, kq, vq, wq))
+    y = yq.transpose(1, 0, 2, 3, 4).reshape(b, s, h, kd)
+    return y.astype(r.dtype), state
+
+
+# -----------------------------------------------------------------------------
+# blocks
+# -----------------------------------------------------------------------------
+
+
+def _token_shift(x: jax.Array, last: jax.Array | None) -> jax.Array:
+    """x_{t-1} stream.  last: [B, D] carried across calls (decode)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, 0])
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def _time_mix(p: dict, x: jax.Array, cfg: ModelConfig,
+              state: jax.Array, shift_last: jax.Array | None
+              ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    xprev = _token_shift(x, shift_last)
+    delta = xprev - x
+    # data-dependent mix coefficients (lora)
+    low = jnp.tanh(x @ p["mix_down"]).reshape(b, s, len(_MIX_NAMES), -1)
+    corr = jnp.einsum("bsnr,nrd->bsnd", low, p["mix_up"])
+    mixed = x[:, :, None] + delta[:, :, None] * (
+        p["mix_base"][None, None].astype(x.dtype) + corr)    # [B,S,5,D]
+    mixed = mixed.astype(x.dtype)
+    xr, xk, xv, xg, xw = [mixed[:, :, i] for i in range(len(_MIX_NAMES))]
+
+    r = (xr @ p["wr"]).reshape(b, s, h, hd)
+    k = (xk @ p["wk"]).reshape(b, s, h, hd)
+    v = (xv @ p["wv"]).reshape(b, s, h, hd)
+    g = xg @ p["wg"]
+    logw = -jnp.exp(p["w0"][None, None].astype(jnp.float32)
+                    + (jnp.tanh(xw @ p["w_down"]) @ p["w_up"]).astype(jnp.float32))
+    logw = logw.reshape(b, s, h, hd)
+    y, new_state = wkv_chunked(r, k, v, logw, p["u"], state0=state,
+                               chunk=cfg.attention_chunk)
+    y = y.reshape(b, s, h * hd)
+    y = layer_norm(y, p["ln_x"]["scale"], p["ln_x"]["bias"])
+    y = y * jax.nn.silu(g)
+    return y @ p["wo"], new_state, x[:, -1]
+
+
+def _channel_mix(p: dict, x: jax.Array, shift_last: jax.Array | None
+                 ) -> tuple[jax.Array, jax.Array]:
+    xprev = _token_shift(x, shift_last)
+    xk = (x + (xprev - x) * p["cm_mix_k"][None, None].astype(x.dtype)).astype(x.dtype)
+    xr = (x + (xprev - x) * p["cm_mix_r"][None, None].astype(x.dtype)).astype(x.dtype)
+    hidden = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    out = jax.nn.sigmoid(xr @ p["cm_wr"]) * (hidden @ p["cm_wv"])
+    return out, x[:, -1]
+
+
+def _block(p: dict, x: jax.Array, cfg: ModelConfig, wkv_state, tm_last, cm_last):
+    h = layer_norm(x, p["ln1"]["scale"], p["ln1"]["bias"])
+    tm_out, wkv_state, tm_last = _time_mix(p, h, cfg, wkv_state, tm_last)
+    x = x + tm_out
+    h = layer_norm(x, p["ln2"]["scale"], p["ln2"]["bias"])
+    cm_out, cm_last = _channel_mix(p, h, cm_last)
+    return x + cm_out, wkv_state, tm_last, cm_last
+
+
+# -----------------------------------------------------------------------------
+# model API (mirrors transformer.py)
+# -----------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, dtype=None
+               ) -> RWKVState:
+    l, d = cfg.num_layers, cfg.d_model
+    h, hd = cfg.num_heads, cfg.head_dim
+    return RWKVState(
+        wkv=jnp.zeros((l, batch, h, hd, hd), jnp.float32),
+        shift_tm=jnp.zeros((l, batch, d), jnp.float32),
+        shift_cm=jnp.zeros((l, batch, d), jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def _run(params: dict, h: jax.Array, cfg: ModelConfig,
+         cache: RWKVState | None):
+    b = h.shape[0]
+    if cache is None:
+        cache = init_cache(cfg, b, 0)
+
+    def body(carry, xs):
+        hcur = carry
+        layer_p, wkv, tm, cm = xs
+        hcur, wkv, tm, cm = _block(layer_p, hcur, cfg, wkv, tm, cm)
+        return shard(hcur, "dp", None, None), (wkv, tm, cm)
+
+    if cfg.remat in ("full", "dots"):
+        body = jax.checkpoint(body)
+    h, (wkv, tm, cm) = jax.lax.scan(
+        body, h, (params["layers"], cache.wkv, cache.shift_tm, cache.shift_cm))
+    new_cache = RWKVState(wkv=wkv, shift_tm=tm, shift_cm=cm,
+                          length=cache.length + h.shape[1])
+    return h, new_cache
+
+
+def forward(params: dict, batch: dict, cfg: ModelConfig
+            ) -> tuple[jax.Array, jax.Array]:
+    compute = dtype_of(cfg.compute_dtype)
+    h = params["embed"][batch["tokens"]].astype(compute)
+    h = shard(h, "dp", None, None)
+    h = layer_norm(h, params["ln_in"]["scale"], params["ln_in"]["bias"])
+    h, _ = _run(params, h, cfg, None)
+    h = layer_norm(h, params["final_norm"]["scale"], params["final_norm"]["bias"])
+    logits = shard(h @ params["lm_head"].astype(h.dtype), "dp", None, "model")
+    return mask_padded_vocab(logits, cfg.vocab_size), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
+    logits, _ = forward(params, batch, cfg)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def prefill(params: dict, batch: dict, cfg: ModelConfig, cache: RWKVState
+            ) -> tuple[jax.Array, RWKVState]:
+    compute = dtype_of(cfg.compute_dtype)
+    h = params["embed"][batch["tokens"]].astype(compute)
+    h = shard(h, "dp", None, None)
+    h = layer_norm(h, params["ln_in"]["scale"], params["ln_in"]["bias"])
+    h, cache = _run(params, h, cfg, cache)
+    h = layer_norm(h[:, -1:], params["final_norm"]["scale"],
+                   params["final_norm"]["bias"])
+    logits = shard(h @ params["lm_head"].astype(h.dtype), "dp", None, "model")
+    return mask_padded_vocab(logits, cfg.vocab_size), cache
+
+
+def decode_step(params: dict, tokens: jax.Array, cfg: ModelConfig,
+                cache: RWKVState) -> tuple[jax.Array, RWKVState]:
+    return prefill(params, {"tokens": tokens}, cfg, cache)

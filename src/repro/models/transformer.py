@@ -1,0 +1,348 @@
+"""Decoder-only transformer LM covering the dense / MoE / VLM families.
+
+Features driven entirely by ``ModelConfig``:
+  * GQA attention with RoPE (configurable theta) or M-RoPE (qwen2-vl),
+    optional per-head qk-norm (qwen3)
+  * SwiGLU / GELU FFN, or MoE FFN (repro.models.moe)
+  * scan-over-layers with stacked [L, ...] parameters (flat compile time in
+    depth -- mandatory for the 512-device dry-run) + configurable remat
+  * prefill / decode paths with a preallocated KV cache pytree
+
+Parameter tree (names consumed by repro.sharding.partition):
+
+  embed            [V, D]
+  layers/          stacked [L, ...]:
+    attn_norm, mlp_norm: {scale[D]}
+    wq [D, QH*HD], wk [D, KH*HD], wv [D, KH*HD], wo [QH*HD, D]
+    (qk_norm) q_scale [HD], k_scale [HD]
+    dense: w_gate [D, F], w_up [D, F], w_down [F, D]
+    moe:   router [D, E], w_gate/w_up/w_down [E, D, F] (+shared)
+  final_norm       {scale[D]}
+  lm_head          [D, V] (absent when tied)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, dtype_of
+from repro.models import moe as moe_mod
+from repro.models.attention import decode_attention, gqa_attention
+from repro.models.layers import (apply_rope, gelu_mlp, init_linear, init_norm,
+                                 layer_norm, mask_padded_vocab,
+                                 mrope_frequencies, rms_norm, rope, swiglu)
+from repro.sharding.api import shard
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "prefill",
+           "decode_step", "KVCache"]
+
+
+# -----------------------------------------------------------------------------
+# init
+# -----------------------------------------------------------------------------
+
+
+def _init_layer(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    qh, kh = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 10)
+    p = {
+        "attn_norm": init_norm(d, with_bias=cfg.norm_type == "layer"),
+        "mlp_norm": init_norm(d, with_bias=cfg.norm_type == "layer"),
+        "wq": init_linear(ks[0], d, qh * hd, dtype=dtype),
+        "wk": init_linear(ks[1], d, kh * hd, dtype=dtype),
+        "wv": init_linear(ks[2], d, kh * hd, dtype=dtype),
+        "wo": init_linear(ks[3], qh * hd, d, dtype=dtype,
+                          scale=1.0 / (qh * hd) ** 0.5),
+    }
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.ones((hd,), jnp.float32)
+        p["k_scale"] = jnp.ones((hd,), jnp.float32)
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.init_moe(ks[4], cfg, dtype)
+    elif cfg.act == "swiglu":
+        p.update(w_gate=init_linear(ks[5], d, cfg.d_ff, dtype=dtype),
+                 w_up=init_linear(ks[6], d, cfg.d_ff, dtype=dtype),
+                 w_down=init_linear(ks[7], cfg.d_ff, d, dtype=dtype))
+    else:
+        p.update(w_up=init_linear(ks[6], d, cfg.d_ff, dtype=dtype),
+                 w_down=init_linear(ks[7], cfg.d_ff, d, dtype=dtype))
+    return p
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    dtype = dtype_of(cfg.param_dtype)
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    layer_keys = keys[: cfg.num_layers]
+    # init one layer then broadcast-and-perturb would save time; layers are
+    # independent draws here (init cost is negligible at smoke scale, and the
+    # full configs are never materialized on this host).
+    stacked = jax.vmap(lambda k: _init_layer(k, cfg, dtype))(layer_keys)
+    params = {
+        "embed": init_linear(keys[-1], cfg.padded_vocab, cfg.d_model,
+                             dtype=dtype, scale=0.02),
+        "layers": stacked,
+        "final_norm": init_norm(cfg.d_model,
+                                with_bias=cfg.norm_type == "layer"),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_linear(keys[-2], cfg.d_model, cfg.padded_vocab,
+                                        dtype=dtype)
+    return params
+
+
+# -----------------------------------------------------------------------------
+# blocks
+# -----------------------------------------------------------------------------
+
+
+def _norm(x, p, cfg):
+    if cfg.norm_type == "layer":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+def _rope_tables(cfg: ModelConfig, positions: jax.Array):
+    """positions: [B, S] (rope) or [3, B, S] (mrope) -> cos/sin [B, S, HD/2]."""
+    if cfg.mrope_sections is not None:
+        return mrope_frequencies(positions, cfg.head_dim, cfg.mrope_sections,
+                                 theta=cfg.rope_theta)
+    return rope(positions, cfg.head_dim, theta=cfg.rope_theta)
+
+
+def attention_block(p: dict, h: jax.Array, cfg: ModelConfig,
+                    cos: jax.Array, sin: jax.Array, *,
+                    causal: bool = True,
+                    cache: tuple[jax.Array, jax.Array, jax.Array] | None = None,
+                    ) -> tuple[jax.Array, tuple | None]:
+    """Shared attention sub-block.  cache = (k_cache, v_cache, length) for
+    decode; returns (output, updated_cache_kv or None)."""
+    b, s, d = h.shape
+    qh, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (h @ p["wq"]).reshape(b, s, qh, hd)
+    k = (h @ p["wk"]).reshape(b, s, kh, hd)
+    v = (h @ p["wv"]).reshape(b, s, kh, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_scale"])
+        k = rms_norm(k, p["k_scale"])
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if cache is None:
+        out = gqa_attention(q, k, v, causal=causal, impl=cfg.attention_impl,
+                            chunk=cfg.attention_chunk)
+        new_kv = None
+    else:
+        k_cache, v_cache, length = cache
+        # write the new kv at position `length` (capacity includes slack)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (0, length, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (0, length, 0, 0))
+        out = decode_attention(q, k_cache, v_cache, length + s)
+        new_kv = (k_cache, v_cache)
+    out = out.reshape(b, s, qh * hd)
+    return out @ p["wo"], new_kv
+
+
+def _ffn(p: dict, h: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    if cfg.family == "moe":
+        return moe_mod.moe_ffn(p["moe"], h, cfg)
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.act == "swiglu":
+        return swiglu(h, p["w_gate"], p["w_up"], p["w_down"]), zero
+    return gelu_mlp(h, p["w_up"], p["w_down"]), zero
+
+
+def _block(p: dict, h: jax.Array, cfg: ModelConfig, cos, sin, *,
+           cache=None) -> tuple[jax.Array, jax.Array, tuple | None]:
+    attn_in = _norm(h, p["attn_norm"], cfg)
+    attn_out, new_kv = attention_block(p, attn_in, cfg, cos, sin, cache=cache)
+    h = h + attn_out
+    ffn_out, aux = _ffn(p, _norm(h, p["mlp_norm"], cfg), cfg)
+    return h + ffn_out, aux, new_kv
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+# -----------------------------------------------------------------------------
+# forward (training / prefill without cache)
+# -----------------------------------------------------------------------------
+
+
+def _embed_inputs(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
+    compute = dtype_of(cfg.compute_dtype)
+    parts = []
+    if "patch_embeds" in batch:                      # vlm stub frontend
+        parts.append(batch["patch_embeds"].astype(compute))
+    if "tokens" in batch:
+        parts.append(params["embed"][batch["tokens"]].astype(compute))
+    if "embeds" in batch:                            # audio stub frontend
+        parts.append(batch["embeds"].astype(compute))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+
+
+def _positions(batch: dict, cfg: ModelConfig, s: int, b: int) -> jax.Array:
+    if "positions" in batch:
+        return batch["positions"]
+    pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[None], (3, b, s))
+    return pos
+
+
+def forward(params: dict, batch: dict, cfg: ModelConfig,
+            *, causal: bool = True) -> tuple[jax.Array, jax.Array]:
+    """-> (logits [B, S, V], aux_loss)."""
+    seq_axis = "model" if cfg.sequence_parallel else None
+    h = _embed_inputs(params, batch, cfg)
+    h = shard(h, "dp", seq_axis, None)
+    b, s, _ = h.shape
+    cos, sin = _rope_tables(cfg, _positions(batch, cfg, s, b))
+
+    def body(carry, layer_p):
+        h, aux = carry
+        h, a, _ = _block(layer_p, h, cfg, cos, sin)
+        return (shard(h, "dp", seq_axis, None), aux + a), None
+
+    body = _maybe_remat(body, cfg)
+    if cfg.scan_layers:
+        (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.num_layers):
+            layer_p = jax.tree_util.tree_map(lambda x: x[i], params["layers"])
+            (h, aux), _ = body((h, aux), layer_p)
+    h = _norm(h, params["final_norm"], cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = shard(h @ head.astype(h.dtype), "dp", None, "model")
+    return mask_padded_vocab(logits, cfg.vocab_size), aux
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
+    """Next-token cross-entropy over the token positions."""
+    logits, aux = forward(params, batch, cfg)
+    labels = batch["labels"]
+    # vlm: logits cover patches + text; labels align with the text tail
+    s_text = labels.shape[1]
+    logits = logits[:, -s_text:]
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + cfg.router_aux_coef * aux
+
+
+# -----------------------------------------------------------------------------
+# serving: prefill + decode
+# -----------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class KVCache:
+    k: jax.Array           # [L, B, S_max, KH, HD]
+    v: jax.Array
+    length: jax.Array      # i32[] valid entries
+
+    def tree_flatten(self):
+        return ((self.k, self.v, self.length), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               *, dtype=None) -> KVCache:
+    dtype = dtype or dtype_of(cfg.param_dtype)
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   length=jnp.zeros((), jnp.int32))
+
+
+def prefill(params: dict, batch: dict, cfg: ModelConfig, cache: KVCache
+            ) -> tuple[jax.Array, KVCache]:
+    """Run the full prompt, fill the cache, return last-position logits."""
+    seq_axis = "model" if cfg.sequence_parallel else None
+    h = _embed_inputs(params, batch, cfg)
+    h = shard(h, "dp", seq_axis, None)
+    b, s, _ = h.shape
+    cos, sin = _rope_tables(cfg, _positions(batch, cfg, s, b))
+
+    def body(h, xs):
+        layer_p, k_cache_l, v_cache_l = xs
+        attn_in = _norm(h, layer_p["attn_norm"], cfg)
+        qh, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        q = (attn_in @ layer_p["wq"]).reshape(b, s, qh, hd)
+        k = (attn_in @ layer_p["wk"]).reshape(b, s, kh, hd)
+        v = (attn_in @ layer_p["wv"]).reshape(b, s, kh, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, layer_p["q_scale"])
+            k = rms_norm(k, layer_p["k_scale"])
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        k_cache_l = jax.lax.dynamic_update_slice(
+            k_cache_l, k.astype(k_cache_l.dtype), (0, 0, 0, 0))
+        v_cache_l = jax.lax.dynamic_update_slice(
+            v_cache_l, v.astype(v_cache_l.dtype), (0, 0, 0, 0))
+        out = gqa_attention(q, k, v, causal=True, impl=cfg.attention_impl,
+                            chunk=cfg.attention_chunk)
+        h = h + out.reshape(b, s, qh * hd) @ layer_p["wo"]
+        ffn_out, _ = _ffn(layer_p, _norm(h, layer_p["mlp_norm"], cfg), cfg)
+        return shard(h + ffn_out, "dp", seq_axis, None), (k_cache_l, v_cache_l)
+
+    body = _maybe_remat(body, cfg)
+    h, (k_new, v_new) = jax.lax.scan(body, h,
+                                     (params["layers"], cache.k, cache.v))
+    h = _norm(h[:, -1:], params["final_norm"], cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = shard(h @ head.astype(h.dtype), "dp", None, "model")
+    logits = mask_padded_vocab(logits, cfg.vocab_size)
+    return logits, KVCache(k=k_new, v=v_new,
+                           length=jnp.asarray(s, jnp.int32))
+
+
+def decode_step(params: dict, tokens: jax.Array, cfg: ModelConfig,
+                cache: KVCache, *, extra_embeds: jax.Array | None = None
+                ) -> tuple[jax.Array, KVCache]:
+    """One decode step.  tokens: [B, 1] -> (logits [B, 1, V], new cache)."""
+    compute = dtype_of(cfg.compute_dtype)
+    h = params["embed"][tokens].astype(compute)
+    if extra_embeds is not None:
+        h = h + extra_embeds.astype(compute)
+    b, s, _ = h.shape
+    pos = jnp.broadcast_to(cache.length[None, None], (b, s))
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[None], (3, b, s))
+    cos, sin = _rope_tables(cfg, pos)
+
+    def body(h, xs):
+        layer_p, k_cache_l, v_cache_l = xs
+        attn_in = _norm(h, layer_p["attn_norm"], cfg)
+        attn_out, (k_cache_l, v_cache_l) = attention_block(
+            layer_p, attn_in, cfg, cos, sin,
+            cache=(k_cache_l, v_cache_l, cache.length))
+        h = h + attn_out
+        ffn_out, _ = _ffn(layer_p, _norm(h, layer_p["mlp_norm"], cfg), cfg)
+        return h + ffn_out, (k_cache_l, v_cache_l)
+
+    h, (k_new, v_new) = jax.lax.scan(body, h,
+                                     (params["layers"], cache.k, cache.v))
+    h = _norm(h, params["final_norm"], cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = shard(h @ head.astype(h.dtype), "dp", None, "model")
+    logits = mask_padded_vocab(logits, cfg.vocab_size)
+    return logits, KVCache(k=k_new, v=v_new, length=cache.length + s)

@@ -1,0 +1,308 @@
+"""Zamba2 [arXiv:2411.15242]: Mamba2 backbone + SHARED attention block.
+
+81 Mamba2 (SSD) layers; after every ``shared_attn_period`` (=6) backbone
+layers, a single shared full-attention + MLP block is invoked (13 invocations
+for 81 layers), each invocation adding its own low-rank (LoRA) adapters to
+the shared attention projections -- Zamba2's parameter-sharing scheme.  The
+shared block consumes concat(hidden, original embedding) [2D] through an
+input projection, as in the paper.
+
+Structure for scan-friendliness: the backbone is grouped into
+``num_invocations`` super-blocks of ``period`` Mamba2 layers (stacked
+params, inner scan) followed by the shared attention (outer scan over
+super-blocks carries the LoRA stack); leftover layers run after the scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, dtype_of
+from repro.models import mamba2 as m2
+from repro.models.attention import decode_attention, gqa_attention
+from repro.models.layers import (apply_rope, init_linear, init_norm,
+                                 mask_padded_vocab, rms_norm, rope, swiglu)
+from repro.sharding.api import shard
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "prefill",
+           "decode_step", "ZambaCache"]
+
+
+def _geometry(cfg: ModelConfig) -> tuple[int, int, int]:
+    period = cfg.shared_attn_period
+    n_inv = cfg.num_layers // period          # shared-attn invocations
+    leftover = cfg.num_layers - n_inv * period
+    return period, n_inv, leftover
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ZambaCache:
+    ssm: m2.Mamba2State          # stacked [L, ...] in .ssm/.conv leading dims
+    attn_k: jax.Array            # [n_inv, B, S_max, KH, HD]
+    attn_v: jax.Array
+    length: jax.Array
+
+    def tree_flatten(self):
+        return ((self.ssm, self.attn_k, self.attn_v, self.length), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+# -----------------------------------------------------------------------------
+# init
+# -----------------------------------------------------------------------------
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    dtype = dtype_of(cfg.param_dtype)
+    period, n_inv, leftover = _geometry(cfg)
+    d, hd = cfg.d_model, cfg.head_dim
+    qh, kh = cfg.num_heads, cfg.num_kv_heads
+    keys = jax.random.split(key, cfg.num_layers + 12)
+
+    mamba_stack = jax.vmap(lambda k: m2.init_mamba2(k, cfg, dtype))(
+        keys[: cfg.num_layers])
+    mamba_norms = {"scale": jnp.ones((cfg.num_layers, d), jnp.float32)}
+
+    ks = keys[cfg.num_layers:]
+    shared = {
+        "in_proj": init_linear(ks[0], 2 * d, d, dtype=dtype),
+        "attn_norm": init_norm(d),
+        "mlp_norm": init_norm(d),
+        "wq": init_linear(ks[1], d, qh * hd, dtype=dtype),
+        "wk": init_linear(ks[2], d, kh * hd, dtype=dtype),
+        "wv": init_linear(ks[3], d, kh * hd, dtype=dtype),
+        "wo": init_linear(ks[4], qh * hd, d, dtype=dtype),
+        "w_gate": init_linear(ks[5], d, cfg.d_ff, dtype=dtype),
+        "w_up": init_linear(ks[6], d, cfg.d_ff, dtype=dtype),
+        "w_down": init_linear(ks[7], cfg.d_ff, d, dtype=dtype),
+    }
+    r = cfg.lora_rank
+    lora = {
+        # per-invocation LoRA on q/k/v projections: [n_inv, d, r], [n_inv, r, out]
+        "qa": (jax.random.normal(ks[8], (n_inv, d, r), jnp.float32) * 0.02).astype(dtype),
+        "qb": jnp.zeros((n_inv, r, qh * hd), dtype),
+        "ka": (jax.random.normal(ks[9], (n_inv, d, r), jnp.float32) * 0.02).astype(dtype),
+        "kb": jnp.zeros((n_inv, r, kh * hd), dtype),
+        "va": (jax.random.normal(ks[10], (n_inv, d, r), jnp.float32) * 0.02).astype(dtype),
+        "vb": jnp.zeros((n_inv, r, kh * hd), dtype),
+    }
+    return {
+        "embed": init_linear(ks[11], cfg.padded_vocab, d, dtype=dtype, scale=0.02),
+        "mamba": mamba_stack,
+        "mamba_norm": mamba_norms,
+        "shared": shared,
+        "lora": lora,
+        "final_norm": init_norm(d),
+    }
+
+
+# -----------------------------------------------------------------------------
+# shared attention block
+# -----------------------------------------------------------------------------
+
+
+def _shared_attn(shared: dict, lora_inv: dict, h: jax.Array, emb0: jax.Array,
+                 cfg: ModelConfig, cos, sin, *, cache=None):
+    """One invocation.  lora_inv: this invocation's LoRA slice."""
+    b, s, d = h.shape
+    qh, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    x = jnp.concatenate([h, emb0], axis=-1) @ shared["in_proj"]
+    x = rms_norm(x, shared["attn_norm"]["scale"])
+    q = (x @ shared["wq"] + (x @ lora_inv["qa"]) @ lora_inv["qb"]
+         ).reshape(b, s, qh, hd)
+    k = (x @ shared["wk"] + (x @ lora_inv["ka"]) @ lora_inv["kb"]
+         ).reshape(b, s, kh, hd)
+    v = (x @ shared["wv"] + (x @ lora_inv["va"]) @ lora_inv["vb"]
+         ).reshape(b, s, kh, hd)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if cache is None:
+        out = gqa_attention(q, k, v, causal=True, impl=cfg.attention_impl,
+                            chunk=cfg.attention_chunk)
+        new_kv = None
+    else:
+        k_cache, v_cache, length = cache
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (0, length, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (0, length, 0, 0))
+        if s == 1:
+            out = decode_attention(q, k_cache, v_cache, length + s)
+        else:
+            # prefill-with-cache: chunk is the whole (empty-cache) prompt
+            out = gqa_attention(q, k, v, causal=True, impl=cfg.attention_impl,
+                                chunk=cfg.attention_chunk)
+        new_kv = (k_cache, v_cache)
+    h = h + out.reshape(b, s, qh * hd) @ shared["wo"]
+    mlp_in = rms_norm(h, shared["mlp_norm"]["scale"])
+    h = h + swiglu(mlp_in, shared["w_gate"], shared["w_up"], shared["w_down"])
+    return h, new_kv
+
+
+# -----------------------------------------------------------------------------
+# full model
+# -----------------------------------------------------------------------------
+
+
+def _slice_tree(tree, i0: int, n: int):
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.dynamic_slice_in_dim(x, i0, n, axis=0), tree)
+
+
+def _run(params: dict, h: jax.Array, cfg: ModelConfig,
+         cache: ZambaCache | None):
+    period, n_inv, leftover = _geometry(cfg)
+    b, s, d = h.shape
+    emb0 = h
+    if cache is not None:
+        pos = cache.length + jnp.arange(s)[None, :]
+        pos = jnp.broadcast_to(pos, (b, s))
+    else:
+        pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    cos, sin = rope(pos, cfg.head_dim, theta=cfg.rope_theta)
+
+    decode = cache is not None and s == 1
+
+    def mamba_layer(hcur, xs):
+        layer_p, norm_scale, st = xs
+        x = rms_norm(hcur, norm_scale)
+        if decode:
+            out, st = m2.mamba2_decode_step(layer_p, x, cfg, st)
+        else:
+            out, st = m2.mamba2_forward(layer_p, x, cfg, state=st)
+        return shard(hcur + out, "dp", None, None), st
+
+    # states: stacked over all layers
+    if cache is not None:
+        ssm_all = cache.ssm
+    else:
+        d_inner = cfg.d_model * cfg.ssm_expand
+        nheads = d_inner // cfg.ssm_headdim
+        conv_ch = d_inner + 2 * cfg.ssm_state
+        ssm_all = m2.Mamba2State(
+            ssm=jnp.zeros((cfg.num_layers, b, nheads, cfg.ssm_headdim,
+                           cfg.ssm_state), jnp.float32),
+            conv=jnp.zeros((cfg.num_layers, b, cfg.ssm_conv - 1, conv_ch),
+                           dtype_of(cfg.param_dtype)))
+
+    def super_block(carry, xs):
+        hcur = carry
+        inv_idx, lora_inv, mamba_p, norms, ssm_states, kv = xs
+        hcur, new_states = jax.lax.scan(
+            mamba_layer, hcur, (mamba_p, norms, ssm_states))
+        attn_cache = None
+        if cache is not None:
+            attn_cache = (kv[0], kv[1], cache.length)
+        hcur, new_kv = _shared_attn(params["shared"], lora_inv, hcur, emb0,
+                                    cfg, cos, sin, cache=attn_cache)
+        if new_kv is None:
+            new_kv = kv
+        return shard(hcur, "dp", None, None), (new_states, new_kv)
+
+    if cfg.remat in ("full", "dots"):
+        mamba_layer = jax.checkpoint(mamba_layer)
+        super_block = jax.checkpoint(super_block)
+
+    # group the first n_inv*period mamba layers
+    grouped_p = jax.tree_util.tree_map(
+        lambda x: x[: n_inv * period].reshape(n_inv, period, *x.shape[1:]),
+        params["mamba"])
+    grouped_norm = jax.tree_util.tree_map(
+        lambda x: x[: n_inv * period].reshape(n_inv, period, *x.shape[1:]),
+        params["mamba_norm"]["scale"])
+    grouped_ssm = jax.tree_util.tree_map(
+        lambda x: x[: n_inv * period].reshape(n_inv, period, *x.shape[1:]),
+        ssm_all)
+    if cache is not None:
+        kv_stack = (cache.attn_k, cache.attn_v)
+    else:
+        kv_stack = (jnp.zeros((n_inv, b, 0, cfg.num_kv_heads, cfg.head_dim),
+                              h.dtype),) * 2
+
+    h, (new_ssm_grouped, new_kv_stack) = jax.lax.scan(
+        super_block, h,
+        (jnp.arange(n_inv), params["lora"], grouped_p, grouped_norm,
+         grouped_ssm, kv_stack))
+
+    new_ssm = jax.tree_util.tree_map(
+        lambda x: x.reshape(n_inv * period, *x.shape[2:]), new_ssm_grouped)
+
+    # leftover mamba layers (no shared attention after them)
+    if leftover:
+        tail_p = _slice_tree(params["mamba"], n_inv * period, leftover)
+        tail_norm = params["mamba_norm"]["scale"][n_inv * period:]
+        tail_ssm = _slice_tree(ssm_all, n_inv * period, leftover)
+        h, tail_new = jax.lax.scan(mamba_layer, h,
+                                   (tail_p, tail_norm, tail_ssm))
+        new_ssm = jax.tree_util.tree_map(
+            lambda a, t: jnp.concatenate([a, t], axis=0), new_ssm, tail_new)
+
+    new_cache = ZambaCache(
+        ssm=new_ssm,
+        attn_k=new_kv_stack[0], attn_v=new_kv_stack[1],
+        length=(cache.length if cache is not None else 0) + s)
+    return h, new_cache
+
+
+def forward(params: dict, batch: dict, cfg: ModelConfig
+            ) -> tuple[jax.Array, jax.Array]:
+    compute = dtype_of(cfg.compute_dtype)
+    h = params["embed"][batch["tokens"]].astype(compute)
+    h = shard(h, "dp", None, None)
+    h, _ = _run(params, h, cfg, None)
+    h = rms_norm(h, params["final_norm"]["scale"])
+    logits = shard(h @ params["embed"].T.astype(h.dtype), "dp", None, "model")
+    return mask_padded_vocab(logits, cfg.vocab_size), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
+    logits, _ = forward(params, batch, cfg)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, dtype=None
+               ) -> ZambaCache:
+    dtype = dtype or dtype_of(cfg.param_dtype)
+    period, n_inv, leftover = _geometry(cfg)
+    d_inner = cfg.d_model * cfg.ssm_expand
+    nheads = d_inner // cfg.ssm_headdim
+    conv_ch = d_inner + 2 * cfg.ssm_state
+    return ZambaCache(
+        ssm=m2.Mamba2State(
+            ssm=jnp.zeros((cfg.num_layers, batch, nheads, cfg.ssm_headdim,
+                           cfg.ssm_state), jnp.float32),
+            conv=jnp.zeros((cfg.num_layers, batch, cfg.ssm_conv - 1, conv_ch),
+                           dtype)),
+        attn_k=jnp.zeros((n_inv, batch, max_len, cfg.num_kv_heads,
+                          cfg.head_dim), dtype),
+        attn_v=jnp.zeros((n_inv, batch, max_len, cfg.num_kv_heads,
+                          cfg.head_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def prefill(params: dict, batch: dict, cfg: ModelConfig, cache: ZambaCache
+            ) -> tuple[jax.Array, ZambaCache]:
+    compute = dtype_of(cfg.compute_dtype)
+    h = params["embed"][batch["tokens"]].astype(compute)
+    h = shard(h, "dp", None, None)
+    h, cache = _run(params, h, cfg, cache)
+    h = rms_norm(h[:, -1:], params["final_norm"]["scale"])
+    logits = shard(h @ params["embed"].T.astype(h.dtype), "dp", None, "model")
+    return mask_padded_vocab(logits, cfg.vocab_size), cache
+
+
+def decode_step(params: dict, tokens: jax.Array, cfg: ModelConfig,
+                cache: ZambaCache) -> tuple[jax.Array, ZambaCache]:
+    return prefill(params, {"tokens": tokens}, cfg, cache)

@@ -1,0 +1,83 @@
+"""Activation sharding constraints, mesh-agnostic.
+
+Model code calls ``shard(x, "dp", None, "model")`` at key activation points
+(post-embedding, per-scan-block, logits).  When a mesh has been activated
+(launch/dry-run paths call ``activate(mesh)`` before tracing), this lowers to
+``with_sharding_constraint`` pinning the batch dim to the DP axes and feature
+dims to the model axis -- without it GSPMD is free to replicate the batch to
+resolve FSDP contractions, which explodes activation memory (observed: 40 GB
+unsharded logits per device on the 256-chip pod).  Without an active mesh
+(single-device smoke tests) every call is a no-op.
+
+Roles per dim: "dp" (pod+data), "model", None.  Divisibility is checked per
+dim -- a role that doesn't divide falls back to replicated, so constraints
+never change numerics or break lowering.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["activate", "deactivate", "shard", "active_axes"]
+
+_ctx = threading.local()
+
+
+def activate(mesh: Mesh, *, zero3: bool = False) -> None:
+    names = ("pod", "data", "model") if zero3 else ("pod", "data")
+    _ctx.dp = tuple(n for n in names if n in mesh.axis_names)
+    # under zero3 the model axis is free for SEQUENCE sharding (it is last
+    # in the dp prefix order, so batch dims claim (pod, data) first and a
+    # sequence_parallel constraint can still land on "model")
+    _ctx.model = "model" if "model" in mesh.axis_names else None
+    _ctx.sizes = dict(mesh.shape)
+    _ctx.mesh = mesh
+    _ctx.on = True
+
+
+def deactivate() -> None:
+    _ctx.on = False
+
+
+def active_axes() -> dict | None:
+    if not getattr(_ctx, "on", False):
+        return None
+    return {"dp": _ctx.dp, "model": _ctx.model, "sizes": _ctx.sizes}
+
+
+def _axis_size(axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([_ctx.sizes[a] for a in axes]))
+
+
+def shard(x: jax.Array, *roles) -> jax.Array:
+    """Constrain x's sharding.  roles: one of "dp" | "model" | None per dim."""
+    if not getattr(_ctx, "on", False):
+        return x
+    assert len(roles) == x.ndim, (roles, x.shape)
+    spec = []
+    for dim, role in zip(x.shape, roles):
+        if role == "dp":
+            axes = _ctx.dp
+        elif role == "model":
+            axes = _ctx.model
+        else:
+            axes = None
+        # longest divisible prefix (batch may not divide the full dp size)
+        chosen = None
+        if axes is not None:
+            seq = (axes,) if isinstance(axes, str) else axes
+            for k in range(len(seq), 0, -1):
+                if dim % _axis_size(seq[:k]) == 0:
+                    chosen = seq[:k]
+                    break
+        spec.append(chosen)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ctx.mesh, P(*spec)))

@@ -1,0 +1,171 @@
+"""Pub-sub brokers: API semantics, on-demand transfer, fault tolerance."""
+
+import numpy as np
+import pytest
+
+from repro.core.api import RPCTimeout, Status, SubscribeSpec
+from repro.core.broker import MezSystem, NatsLikeSystem
+from repro.core.channel import calibrated_channel
+from repro.core.characterization import characterize, fit_latency_regression
+from repro.core.log import LogSegmentStore
+from repro.data.camera import CameraConfig, SyntheticCamera
+
+
+@pytest.fixture(scope="module")
+def table():
+    return characterize(
+        lambda: SyntheticCamera(CameraConfig(dynamics="medium", seed=7)),
+        clip_len=10)
+
+
+def build_system(table, *, n_cams=2, frames=10, workload=None, store=None,
+                 seed=3):
+    ch = calibrated_channel(seed=seed, workload=workload)
+    sys = MezSystem(ch, store=store)
+    sizes = np.linspace(table.sizes_sorted[0], table.sizes_sorted[-1], 12)
+    reg = fit_latency_regression(sizes, ch.regression_points(sizes, n=n_cams))
+    for i in range(n_cams):
+        cam = sys.add_camera(f"cam{i}")
+        src = SyntheticCamera(CameraConfig(camera_id=f"cam{i}",
+                                           dynamics="medium", seed=7))
+        cam.background = src.background
+        cam.set_target(0.100, 0.90, table, reg)
+        for ts, f, gt in src.stream(frames):
+            cam.publish(ts, f)
+    return sys
+
+
+class TestAPI:
+    def test_connect_and_camera_info(self, table):
+        sys = build_system(table)
+        cid = sys.edge.connect("mez://edge")
+        assert cid.startswith("client-")
+        assert sys.edge.get_camera_info() == ["cam0", "cam1"]
+
+    def test_subscribe_delivers_in_order(self, table):
+        sys = build_system(table)
+        spec = SubscribeSpec("app", "cam0", 0.0, 100.0, 0.1, 0.9)
+        out = list(sys.edge.subscribe(spec))
+        ts = [d.timestamp for d in out]
+        assert ts == sorted(ts)
+        assert len(out) == 10
+
+    def test_subscribe_time_window(self, table):
+        sys = build_system(table)
+        spec = SubscribeSpec("app", "cam0", 0.4, 1.2, 0.1, 0.9)
+        out = [d for d in sys.edge.subscribe(spec) if d.frame is not None]
+        assert all(0.4 <= d.timestamp <= 1.2 for d in out)
+
+    def test_unsubscribe(self, table):
+        sys = build_system(table)
+        spec = SubscribeSpec("app", "cam0", 0.0, 100.0, 0.1, 0.9)
+        it = sys.edge.subscribe(spec)
+        next(it)
+        assert sys.edge.unsubscribe("app", "cam0") is Status.OK
+        assert sys.edge.unsubscribe("app", "cam0") is Status.FAIL
+
+    def test_at_most_once_replica(self, table):
+        """Frames land in the edge replica log exactly once."""
+        sys = build_system(table)
+        spec = SubscribeSpec("app", "cam0", 0.0, 100.0, 0.1, 0.9)
+        delivered = [d for d in sys.edge.subscribe(spec) if d.frame is not None]
+        replica = sys.edge.replicas["cam0"]
+        assert len(replica) == len(delivered)
+
+    def test_unknown_camera_times_out(self, table):
+        sys = build_system(table)
+        with pytest.raises(RPCTimeout):
+            list(sys.edge.subscribe(
+                SubscribeSpec("app", "nope", 0, 1, 0.1, 0.9)))
+
+
+class TestControl:
+    def test_controller_reduces_payload_under_interference(self, table):
+        sys = build_system(table, n_cams=5, frames=24, workload="dukemtmc")
+        spec = SubscribeSpec("app", "cam0", 0.0, 100.0, 0.100, 0.90)
+        out = [d for d in sys.edge.subscribe(spec) if d.frame is not None]
+        first, last = out[0], out[-1]
+        # after settling the controller ships smaller frames
+        assert last.wire_bytes < first.wire_bytes or \
+            np.percentile([d.latency.total for d in out[8:]], 95) < 0.12
+
+    def test_uncontrolled_is_larger(self, table):
+        sys_c = build_system(table, n_cams=5, frames=12, workload="jaad")
+        sys_u = build_system(table, n_cams=5, frames=12, workload="jaad")
+        spec = SubscribeSpec("app", "cam0", 0.0, 100.0, 0.1, 0.9)
+        ctl = [d.wire_bytes for d in sys_c.edge.subscribe(spec)
+               if d.frame is not None]
+        unc = [d.wire_bytes for d in sys_u.edge.subscribe(
+            spec, controlled=False) if d.frame is not None]
+        assert np.median(ctl) <= np.median(unc)
+
+
+class TestNats:
+    def test_message_limit(self):
+        nats = NatsLikeSystem(calibrated_channel(workload="dukemtmc"))
+        nats.add_camera("cam0")
+        src = SyntheticCamera(CameraConfig(dynamics="complex", seed=7))
+        ts, frame, _ = src.next_frame()
+        with pytest.raises(ValueError, match="1MB"):
+            nats.deliver("cam0", ts, frame)
+        assert nats.rejected_oversize == 1
+
+    def test_no_control_full_fidelity(self):
+        nats = NatsLikeSystem(calibrated_channel())
+        nats.add_camera("cam0")
+        src = SyntheticCamera(CameraConfig(dynamics="simple", seed=7))
+        ts, frame, _ = src.next_frame()
+        d = nats.deliver("cam0", ts, frame)
+        np.testing.assert_array_equal(d.frame, frame)
+        assert d.knob_index == -1
+
+
+class TestFaultTolerance:
+    def test_cambroker_crash_detected_as_timeout(self, table):
+        sys = build_system(table)
+        sys.cams["cam0"].crash()
+        with pytest.raises(RPCTimeout):
+            list(sys.edge.subscribe(
+                SubscribeSpec("app", "cam0", 0.0, 100.0, 0.1, 0.9)))
+
+    def test_edge_crash_and_recover(self, table, tmp_path):
+        store = LogSegmentStore(str(tmp_path))
+        sys = build_system(table, store=store)
+        list(sys.edge.subscribe(
+            SubscribeSpec("app", "cam0", 0.0, 100.0, 0.1, 0.9)))
+        n_before = len(sys.edge.replicas["cam0"])
+        sys.edge.persist()
+        sys.edge.crash()
+        with pytest.raises(RPCTimeout):
+            sys.edge.get_camera_info()
+        sys.edge.recover()
+        assert len(sys.edge.replicas["cam0"]) == n_before
+        assert sys.edge.get_camera_info() == ["cam0", "cam1"]
+
+    def test_cambroker_recover_from_disk(self, table, tmp_path):
+        store = LogSegmentStore(str(tmp_path))
+        sys = build_system(table, store=store)
+        cam = sys.cams["cam0"]
+        n = len(cam.log)
+        cam.persist()
+        cam.crash()
+        cam.recover()
+        assert not cam.crashed
+        assert len(cam.log) == n
+
+    def test_subscriber_retry_loop(self, table, tmp_path):
+        """The paper's recovery protocol: retry until the broker answers."""
+        store = LogSegmentStore(str(tmp_path))
+        sys = build_system(table, store=store)
+        sys.edge.persist()
+        sys.edge.crash()
+        attempts = 0
+        for attempt in range(5):
+            attempts += 1
+            try:
+                sys.edge.get_camera_info()
+                break
+            except RPCTimeout:
+                if attempt == 2:
+                    sys.edge.recover()      # "kubernetes" restarts it
+        assert attempts == 4

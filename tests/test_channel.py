@@ -1,0 +1,92 @@
+"""Channel model calibration against the paper's measurements."""
+
+import numpy as np
+import pytest
+
+from repro.core.channel import WirelessChannel, calibrated_channel
+
+# Paper Table 1: (size_kB, ONE_Lat_ms, FIVE_Lat_ms)
+TABLE1 = [
+    (610, 32.09, 150.28), (760, 35.16, 164.56), (970, 46.09, 262.43),
+    (1390, 59.71, 382.47), (1670, 68.73, 606.98), (1740, 72.72, 617.16),
+]
+# Paper Table 2: DukeMTMC complex (1740 kB), 5 fps at 6 m, n = 1..5
+TABLE2 = [72.72, 128.97, 341.18, 518.31, 617.16]
+
+
+class TestCalibration:
+    def test_table1_within_tolerance(self):
+        ch = calibrated_channel()
+        for size_kb, one, five in TABLE1:
+            p1 = ch.p95_latency(size_kb * 1e3, n=1) * 1e3
+            p5 = ch.p95_latency(size_kb * 1e3, n=5) * 1e3
+            assert abs(p1 - one) / one < 0.12, (size_kb, p1, one)
+            assert abs(p5 - five) / five < 0.12, (size_kb, p5, five)
+
+    def test_contention_ratio_range(self):
+        """FIVE/ONE is 4.6x-8.8x in the paper, growing with size."""
+        ch = calibrated_channel()
+        r_small = (ch.p95_latency(610e3, n=5) / ch.p95_latency(610e3, n=1))
+        r_big = (ch.p95_latency(1740e3, n=5) / ch.p95_latency(1740e3, n=1))
+        assert 4.0 < r_small < 5.5
+        assert 7.5 < r_big < 9.5
+        assert r_big > r_small
+
+    def test_table2_node_sweep_shape(self):
+        ch = calibrated_channel()
+        pred = [ch.p95_latency(1740e3, n=n) * 1e3 for n in range(1, 6)]
+        # endpoints tight, interior within 35% (the paper's interior points
+        # carry single-run noise; the trend is what matters)
+        assert abs(pred[0] - TABLE2[0]) / TABLE2[0] < 0.1
+        assert abs(pred[4] - TABLE2[4]) / TABLE2[4] < 0.1
+        for p, o in zip(pred, TABLE2):
+            assert abs(p - o) / o < 0.35
+        assert all(b > a for a, b in zip(pred, pred[1:]))
+
+    def test_fps_and_distance_secondary(self):
+        """Paper: 15 fps ~ 1.02x, 12 m ~ 1.06x at n=5."""
+        ch = calibrated_channel()
+        base = ch.p95_latency(1740e3, n=5, fps=5, distance_m=6)
+        hi_fps = ch.p95_latency(1740e3, n=5, fps=15, distance_m=6)
+        far = ch.p95_latency(1740e3, n=5, fps=5, distance_m=12)
+        assert 1.0 < hi_fps / base < 1.10
+        assert 1.0 < far / base < 1.12
+
+
+class TestMechanics:
+    def test_latency_linear_in_size_at_fixed_n(self):
+        """Paper Fig. 5: approximately linear latency vs size."""
+        ch = calibrated_channel()
+        sizes = np.linspace(50e3, 900e3, 12)
+        lats = ch.regression_points(sizes, n=5)
+        a, b = np.polyfit(sizes, lats, 1)
+        pred = a * sizes + b
+        r2 = 1 - np.sum((lats - pred) ** 2) / np.sum((lats - lats.mean()) ** 2)
+        # "approximately linear" (paper Fig. 5); the calibrated contention has
+        # a mild super-linear component that matches Table 1 better
+        assert r2 > 0.95
+
+    def test_transfer_jitter_seeded(self):
+        a = WirelessChannel(seed=7)
+        b = WirelessChannel(seed=7)
+        la = [a.transfer(500e3, n=3) for _ in range(20)]
+        lb = [b.transfer(500e3, n=3) for _ in range(20)]
+        np.testing.assert_allclose(la, lb)
+
+    def test_active_set_tracking(self):
+        ch = calibrated_channel()
+        ch.activate("a"); ch.activate("b"); ch.activate("b")
+        assert ch.num_active == 2
+        ch.deactivate("a")
+        assert ch.num_active == 1
+
+    def test_interference_scales_latency(self):
+        base = calibrated_channel().p95_latency(500e3, n=5)
+        x10 = calibrated_channel(interference=10.0).p95_latency(500e3, n=5)
+        assert abs(x10 / base - 10.0) < 1e-6
+
+    def test_workload_scale(self):
+        raw = calibrated_channel().p95_latency(90e3, n=5)
+        jaad = calibrated_channel(workload="jaad").p95_latency(90e3, n=5)
+        duke = calibrated_channel(workload="dukemtmc").p95_latency(90e3, n=5)
+        assert raw < jaad < duke

@@ -1,0 +1,149 @@
+"""Latency controller (Algorithm 1): host + jittable implementations."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.channel import calibrated_channel
+from repro.core.characterization import (CharacterizationTable,
+                                         LatencyRegression, characterize,
+                                         fit_latency_regression)
+from repro.core.controller import (ControllerConfig, JaxControllerTables,
+                                   LatencyController, controller_init,
+                                   controller_step)
+from repro.core.knobs import KnobSetting
+from repro.data.camera import CameraConfig, SyntheticCamera
+
+
+def synthetic_table(n=32, *, smin=2e3, smax=90e3) -> CharacterizationTable:
+    """Monotone size->accuracy table without running the detector."""
+    sizes = np.linspace(smin, smax, n)
+    accs = 0.90 + 0.10 * (sizes - smin) / (smax - smin)
+    settings = tuple(KnobSetting(resolution=i % 5) for i in range(n))
+    best_idx = np.arange(n)
+    return CharacterizationTable(
+        settings=settings, sizes_sorted=sizes, best_acc=accs,
+        best_idx=best_idx, acc_by_setting=accs, size_by_setting=sizes)
+
+
+@pytest.fixture(scope="module")
+def regression():
+    ch = calibrated_channel()
+    sizes = np.linspace(2e3, 90e3, 16)
+    return fit_latency_regression(sizes, ch.regression_points(sizes, n=5))
+
+
+class TestHostController:
+    def test_holds_when_in_band(self, regression):
+        tbl = synthetic_table()
+        c = LatencyController(ControllerConfig(0.050, 0.92), tbl, regression)
+        before = c._current
+        d = c.update(0.050)      # exactly on target: no action
+        assert not d.acted and d.setting_index == before
+
+    def test_shrinks_on_high_latency(self, regression):
+        tbl = synthetic_table()
+        c = LatencyController(ControllerConfig(0.050, 0.90), tbl, regression)
+        d0 = c.update(0.050)
+        d1 = c.update(0.500)     # 10x over target
+        assert d1.acted
+        assert d1.requested_size < d0.requested_size or not d0.acted
+        assert tbl.size_by_setting[d1.setting_index] <= \
+            tbl.size_by_setting[c.table.best_idx[-1]]
+
+    def test_relaxes_on_low_latency(self, regression):
+        tbl = synthetic_table()
+        c = LatencyController(ControllerConfig(0.050, 0.90), tbl, regression)
+        c.update(0.400)
+        small = c.table.size_by_setting[c._current]
+        for _ in range(6):
+            d = c.update(0.005)
+        assert c.table.size_by_setting[c._current] >= small
+
+    def test_infeasible_notifies_but_degrades_gracefully(self, regression):
+        tbl = synthetic_table()
+        # demand more accuracy than ANY setting at the needed size offers
+        c = LatencyController(ControllerConfig(0.012, 0.999), tbl, regression)
+        d = c.update(0.500)
+        assert not d.feasible
+        assert d.setting is not None     # best-effort setting still returned
+
+    def test_set_target_resets(self, regression):
+        tbl = synthetic_table()
+        c = LatencyController(ControllerConfig(0.050, 0.90), tbl, regression)
+        c.update(0.5)
+        c.set_target(0.100, 0.95)
+        assert c.integral == 0.0
+        assert c.config.latency_target == 0.100
+
+
+class TestJaxController:
+    def test_matches_host_decisions(self, regression):
+        tbl = synthetic_table()
+        cfg = ControllerConfig(0.050, 0.92)
+        host = LatencyController(cfg, tbl, regression)
+        jt = JaxControllerTables.from_table(tbl)
+        state = controller_init(jt)
+        step = jax.jit(lambda st, lat: controller_step(
+            st, lat, jt, latency_target=cfg.latency_target,
+            accuracy_target=cfg.accuracy_target, slope=regression.slope,
+            intercept=regression.intercept, error_threshold=cfg.error_threshold,
+            alpha_p=cfg.alpha_p, alpha_i=cfg.alpha_i))
+        # jax controller starts at table max; align host for comparison
+        samples = [0.3, 0.25, 0.12, 0.06, 0.05, 0.04, 0.04]
+        for lat in samples:
+            dh = host.update(lat)
+            state, idx = step(state, lat)
+            if dh.acted and dh.feasible:
+                hs = tbl.size_by_setting[dh.setting_index]
+                js = tbl.size_by_setting[int(idx)]
+                # same table, same law -> same requested size region
+                np.testing.assert_allclose(hs, js, rtol=0.35)
+
+    def test_jit_traceable_no_host_sync(self, regression):
+        tbl = synthetic_table()
+        jt = JaxControllerTables.from_table(tbl)
+        state = controller_init(jt)
+
+        @jax.jit
+        def run(state, lats):
+            def body(st, lat):
+                st, idx = controller_step(
+                    st, lat, jt, latency_target=0.05, accuracy_target=0.9,
+                    slope=regression.slope, intercept=regression.intercept)
+                return st, idx
+            return jax.lax.scan(body, state, lats)
+
+        lats = jnp.asarray([0.3, 0.2, 0.08, 0.05, 0.04], jnp.float32)
+        state, idxs = run(state, lats)
+        assert idxs.shape == (5,)
+        assert bool((idxs >= -1).all())
+
+
+class TestClosedLoop:
+    """The paper's Section 5.1 scenario in miniature."""
+
+    def test_step_response_settles_under_target(self):
+        camf = lambda: SyntheticCamera(CameraConfig(dynamics="complex", seed=7))
+        tbl = characterize(camf, clip_len=12)
+        ch = calibrated_channel(seed=3, workload="jaad")
+        sizes = np.linspace(tbl.sizes_sorted[0], tbl.sizes_sorted[-1], 16)
+        reg = fit_latency_regression(sizes, ch.regression_points(sizes, n=5))
+        c = LatencyController(ControllerConfig(0.100, 0.95), tbl, reg)
+        for cam in range(5):
+            ch.activate(f"cam{cam}")
+        lat_series = []
+        setting = c.current_setting
+        size = tbl.size_by_setting[c._current]
+        for step in range(30):
+            lat = ch.transfer(float(size))
+            lat_series.append(lat)
+            d = c.update(lat)
+            if d.setting_index >= 0:
+                size = tbl.size_by_setting[d.setting_index]
+        settled = np.asarray(lat_series[8:])
+        assert np.percentile(settled, 95) < 0.13   # near the 100 ms bound
+        assert float(tbl.acc_by_setting[c._current]) >= 0.90

@@ -1,0 +1,156 @@
+"""Per-kernel allclose vs ref.py oracles, shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.frame_knobs import frame_knobs
+from repro.kernels.linear_scan import wkv_linear_scan
+from repro.kernels.quantize import dequantize_blocks, quantize_blocks
+from repro.models.attention import repeat_kv
+
+KEY = jax.random.PRNGKey(42)
+
+
+def rand(i, shape, dtype=jnp.float32, scale=0.5):
+    return (jax.random.normal(jax.random.fold_in(KEY, i), shape) * scale
+            ).astype(dtype)
+
+
+class TestQuantize:
+    @pytest.mark.parametrize("shape", [(256, 512), (512, 1024), (256, 1536)])
+    @pytest.mark.parametrize("bits", [8, 4])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, shape, bits, dtype):
+        x = rand(0, shape, dtype)
+        q, s = quantize_blocks(x, bits=bits, interpret=True)
+        qr, sr = ref.quantize_ref(x, bits=bits)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+        # exact except at half-integer ties, where XLA's reciprocal-multiply
+        # division may land one level away (bounded by 1 quantization step)
+        d = np.abs(np.asarray(q, np.int32) - np.asarray(qr, np.int32))
+        assert d.max() <= 1 and (d != 0).mean() < 0.01
+        xd = dequantize_blocks(q, s, interpret=True)
+        xdr = ref.dequantize_ref(qr, sr)
+        step = np.repeat(np.repeat(np.asarray(sr), min(256, x.shape[0]), 0),
+                         min(512, x.shape[1]), 1)
+        assert np.abs(np.asarray(xd) - np.asarray(xdr)).max() <= step.max() + 1e-7
+
+    def test_roundtrip_error_bound(self):
+        """|dequant(x) - x| <= scale/2 per block (symmetric rounding)."""
+        x = rand(1, (256, 512))
+        q, s = quantize_blocks(x, interpret=True)
+        xd = dequantize_blocks(q, s, interpret=True)
+        err = jnp.abs(xd - x)
+        bound = jnp.repeat(jnp.repeat(s, 256, 0), 512, 1) * 0.5 + 1e-7
+        assert bool((err <= bound).all())
+
+    def test_int4_levels(self):
+        x = rand(2, (256, 512))
+        q, _ = quantize_blocks(x, bits=4, interpret=True)
+        assert int(jnp.abs(q).max()) <= 7
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("s,qh,kh,d", [
+        (256, 8, 8, 64),    # MHA
+        (256, 8, 2, 64),    # GQA
+        (320, 4, 1, 32),    # MQA, padded seq
+        (128, 8, 8, 128),
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_ref(self, s, qh, kh, d, causal):
+        q = rand(3, (2, s, qh, d))
+        k = rand(4, (2, s, kh, d))
+        v = rand(5, (2, s, kh, d))
+        out = flash_attention(q, k, v, causal=causal, block_q=128,
+                              block_k=128, interpret=True)
+        exp = ref.flash_attention_ref(q, repeat_kv(k, qh), repeat_kv(v, qh),
+                                      causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=3e-5, atol=3e-5)
+
+    def test_bf16(self):
+        q = rand(6, (1, 128, 4, 64), jnp.bfloat16)
+        k = rand(7, (1, 128, 4, 64), jnp.bfloat16)
+        v = rand(8, (1, 128, 4, 64), jnp.bfloat16)
+        out = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+        exp = ref.flash_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(exp, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("smax,qh,kh,d,length", [
+        (512, 8, 8, 64, 512), (512, 8, 2, 64, 300), (1024, 4, 1, 128, 7),
+    ])
+    def test_matches_ref(self, smax, qh, kh, d, length):
+        q = rand(9, (2, 1, qh, d))
+        kc = rand(10, (2, smax, kh, d))
+        vc = rand(11, (2, smax, kh, d))
+        ln = jnp.asarray(length, jnp.int32)
+        out = decode_attention(q, kc, vc, ln, block_k=128, interpret=True)
+        exp = ref.decode_attention_ref(q, repeat_kv(kc, qh),
+                                       repeat_kv(vc, qh), ln)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=3e-5, atol=3e-5)
+
+
+class TestLinearScan:
+    @pytest.mark.parametrize("s,h,kd,bt", [(64, 2, 16, 16), (128, 3, 32, 32),
+                                           (96, 1, 64, 96)])
+    def test_matches_ref(self, s, h, kd, bt):
+        r = rand(12, (2, s, h, kd))
+        k = rand(13, (2, s, h, kd))
+        v = rand(14, (2, s, h, kd))
+        logw = -jnp.exp(rand(15, (2, s, h, kd)) - 2.0)
+        u = rand(16, (h, kd))
+        y, st = wkv_linear_scan(r, k, v, logw, u, block_t=bt, interpret=True)
+        yr, sr = ref.wkv_ref(r, k, v, logw, u)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(np.asarray(st), np.asarray(sr),
+                                   rtol=3e-4, atol=3e-4)
+
+    def test_state_carry_composes(self):
+        """Running two halves with carried state == one full run."""
+        r = rand(17, (1, 64, 2, 16)); k = rand(18, (1, 64, 2, 16))
+        v = rand(19, (1, 64, 2, 16))
+        logw = -jnp.exp(rand(20, (1, 64, 2, 16)) - 2.0)
+        u = rand(21, (2, 16))
+        y_full, st_full = ref.wkv_ref(r, k, v, logw, u)
+        y1, st1 = ref.wkv_ref(r[:, :32], k[:, :32], v[:, :32], logw[:, :32], u)
+        y2, st2 = ref.wkv_ref(r[:, 32:], k[:, 32:], v[:, 32:], logw[:, 32:],
+                              u, state0=st1)
+        np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(y2), np.asarray(y_full[:, 32:]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestFrameKnobs:
+    @pytest.mark.parametrize("h,w,blur", [(64, 128, 5), (48, 96, 3),
+                                          (64, 128, 1)])
+    def test_matches_ref(self, h, w, blur):
+        f = (rand(22, (3, h, w), scale=60.0) + 128).clip(0, 255)
+        p = (rand(23, (3, h, w), scale=60.0) + 128).clip(0, 255)
+        out, ch = frame_knobs(f, p, blur_k=blur, interpret=True)
+        outr, chr_ = ref.frame_knobs_ref(f, p, blur_k=blur)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(outr),
+                                   rtol=1e-5, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(ch), np.asarray(chr_),
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_change_metric_detects_motion(self):
+        base = jnp.full((1, 32, 64), 100.0)
+        moved = base.at[0, 8:16, 20:40].set(200.0)
+        _, ch_same = frame_knobs(base, base, interpret=True)
+        _, ch_moved = frame_knobs(moved, base, interpret=True)
+        assert float(ch_same[0]) == 0.0
+        np.testing.assert_allclose(float(ch_moved[0]), (8 * 20) / (32 * 64),
+                                   rtol=1e-6)

@@ -1,0 +1,157 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.channel import calibrated_channel
+from repro.core.characterization import CharacterizationTable
+from repro.core.controller import ControllerConfig, LatencyController
+from repro.core.knobs import KnobSetting
+from repro.core.log import HostLog
+from repro.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+class TestLogProperties:
+    @given(st.lists(st.floats(min_value=0, max_value=1e6,
+                              allow_nan=False), min_size=1, max_size=60))
+    @settings(**SETTINGS)
+    def test_log_matches_python_model(self, timestamps):
+        """HostLog == a plain 'sorted unique suffix' model, any input order."""
+        cap = 16
+        log = HostLog(cap)
+        model: list[float] = []
+        for t in timestamps:
+            accepted = log.append(t, np.zeros((2, 2), np.uint8))
+            if model and t <= model[-1]:
+                assert not accepted
+            else:
+                assert accepted
+                model.append(t)
+        expect = model[-cap:]
+        got = [t for t, _ in log.snapshot()]
+        assert got == expect
+
+    @given(st.integers(1, 50), st.floats(0, 100), st.floats(0, 100))
+    @settings(**SETTINGS)
+    def test_range_query_subset_of_point_semantics(self, n, a, b):
+        log = HostLog(64)
+        for i in range(n):
+            log.append(float(i), np.zeros((1,), np.uint8))
+        lo, hi = min(a, b), max(a, b)
+        out = [t for t, _ in log.range_query(lo, hi)]
+        assert out == [float(i) for i in range(n) if lo <= i <= hi]
+
+
+class TestChannelProperties:
+    @given(st.floats(min_value=1e3, max_value=3e6),
+           st.integers(1, 8), st.integers(1, 8))
+    @settings(**SETTINGS)
+    def test_latency_monotone_in_peers(self, size, n1, n2):
+        ch = calibrated_channel()
+        l1 = ch.mean_latency(size, n=min(n1, n2))
+        l2 = ch.mean_latency(size, n=max(n1, n2))
+        assert l2 >= l1 - 1e-12
+
+    @given(st.floats(min_value=1e3, max_value=2e6),
+           st.floats(min_value=1e3, max_value=2e6), st.integers(1, 6))
+    @settings(**SETTINGS)
+    def test_latency_monotone_in_size(self, s1, s2, n):
+        ch = calibrated_channel()
+        assert (ch.mean_latency(max(s1, s2), n=n)
+                >= ch.mean_latency(min(s1, s2), n=n) - 1e-12)
+
+
+class TestControllerProperties:
+    def _table(self, sizes, accs):
+        order = np.argsort(sizes)
+        sizes = np.asarray(sizes, float)[order]
+        accs = np.asarray(accs, float)[order]
+        best_acc, best_idx, run = [], [], (-1.0, -1)
+        for i, a in enumerate(accs):
+            if a > run[0]:
+                run = (a, i)
+            best_acc.append(run[0])
+            best_idx.append(run[1])
+        return CharacterizationTable(
+            settings=tuple(KnobSetting() for _ in sizes),
+            sizes_sorted=sizes, best_acc=np.asarray(best_acc),
+            best_idx=np.asarray(best_idx), acc_by_setting=accs,
+            size_by_setting=sizes)
+
+    @given(st.lists(st.tuples(st.floats(1e3, 1e5), st.floats(0.5, 1.0)),
+                    min_size=3, max_size=20),
+           st.lists(st.floats(0.0, 1.0), min_size=1, max_size=20))
+    @settings(**SETTINGS)
+    def test_decisions_always_within_table(self, pairs, lat_samples):
+        """Whatever the table and the latency series, a feasible decision's
+        setting always satisfies the accuracy floor, and requested sizes are
+        clamped to the characterized range."""
+        sizes = [p[0] for p in pairs]
+        accs = [p[1] for p in pairs]
+        tbl = self._table(sizes, accs)
+        from repro.core.characterization import LatencyRegression
+        reg = LatencyRegression(slope=1e-6, intercept=0.005)
+        c = LatencyController(ControllerConfig(0.05, 0.9), tbl, reg)
+        for lat in lat_samples:
+            d = c.update(lat)
+            assert tbl.sizes_sorted[0] <= d.requested_size \
+                <= tbl.sizes_sorted[-1]
+            if d.feasible and d.acted:
+                assert tbl.acc_by_setting[d.setting_index] >= 0.9 - 1e-9
+
+    @given(st.floats(1e3, 9e4))
+    @settings(**SETTINGS)
+    def test_query_size_never_exceeds_budget(self, budget):
+        tbl = self._table(np.linspace(2e3, 9e4, 12),
+                          np.linspace(0.9, 1.0, 12))
+        acc, idx = tbl.query_size(budget)
+        if idx >= 0:
+            assert tbl.size_by_setting[idx] <= budget + 1e-6
+
+
+class TestQuantizeProperties:
+    @given(st.integers(0, 2 ** 31 - 1), st.sampled_from([8, 4]))
+    @settings(**SETTINGS)
+    def test_roundtrip_bounded_by_half_step(self, seed, bits):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (256, 512))
+        q, s = ref.quantize_ref(x, bits=bits)
+        xd = ref.dequantize_ref(q, s)
+        step = np.repeat(np.repeat(np.asarray(s), 256, 0), 512, 1)
+        assert (np.abs(np.asarray(xd - x)) <= step * 0.5 + 1e-7).all()
+
+    @given(st.integers(0, 2 ** 31 - 1))
+    @settings(**SETTINGS)
+    def test_quantize_scale_invariance(self, seed):
+        """q(c*x) ~= q(x) for positive per-tensor scale c (symmetric quant);
+        exact except where fp32 division lands on a rounding tie (+-1 level,
+        rare)."""
+        x = jax.random.normal(jax.random.PRNGKey(seed), (256, 512))
+        q1, _ = ref.quantize_ref(x)
+        q2, _ = ref.quantize_ref(x * 7.5)
+        d = np.abs(np.asarray(q1, np.int32) - np.asarray(q2, np.int32))
+        assert d.max() <= 1 and (d != 0).mean() < 1e-3
+
+
+class TestWkvProperties:
+    @given(st.integers(0, 1000), st.sampled_from([16, 32]))
+    @settings(max_examples=10, deadline=None)
+    def test_chunk_invariance(self, seed, chunk):
+        """wkv output is independent of the chunk partition (exactness)."""
+        from repro.models.rwkv6 import wkv_chunked
+        key = jax.random.PRNGKey(seed)
+        B, S, H, K = 1, 64, 2, 8
+        mk = lambda i: jax.random.normal(jax.random.fold_in(key, i),
+                                         (B, S, H, K)) * 0.5
+        r, k, v = mk(0), mk(1), mk(2)
+        logw = -jnp.exp(mk(3) - 2.0)
+        u = jax.random.normal(jax.random.fold_in(key, 4), (H, K)) * 0.5
+        y1, s1 = wkv_chunked(r, k, v, logw, u, chunk=chunk)
+        y2, s2 = ref.wkv_ref(r, k, v, logw, u)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   rtol=3e-4, atol=3e-4)

@@ -1,0 +1,45 @@
+"""End-to-end training: loss decreases, faults recover, serving works."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.serve import serve
+from repro.launch.train import train
+
+
+class TestTraining:
+    def test_loss_decreases(self, tmp_path):
+        out = train("qwen3-1.7b", steps=25, batch=4, seq=64,
+                    checkpoint_dir=str(tmp_path), checkpoint_every=10,
+                    log_every=1000)
+        assert out["final_loss"] < out["first_loss"]
+
+    def test_failure_injection_recovers_from_checkpoint(self, tmp_path):
+        out = train("llama3-8b", steps=30, batch=4, seq=64,
+                    checkpoint_dir=str(tmp_path), checkpoint_every=10,
+                    inject_failure_at=22, log_every=1000)
+        # recovery rewound to step 20's checkpoint and completed the run
+        assert out["final_loss"] is not None
+        assert len(out["losses"]) > 30 - 20   # replayed steps after restore
+
+    def test_compressed_grads_train(self):
+        out = train("internlm2-1.8b", steps=15, batch=4, seq=64,
+                    grad_bits=8, log_every=1000)
+        assert out["final_loss"] < out["first_loss"]
+
+
+class TestServing:
+    @pytest.mark.parametrize("arch", ["qwen3-1.7b", "rwkv6-1.6b",
+                                      "zamba2-7b", "seamless-m4t-large-v2"])
+    def test_serve_generates(self, arch):
+        out = serve(arch, batch=2, prompt_len=32, gen=8)
+        assert out["tokens"].shape == (2, 9)
+        assert out["tokens_per_s"] > 0
+        # enc-dec archs prefill a short decoder prompt (prompt_len // 8)
+        # against the full-length encoder output; decoder-only archs prefill
+        # the whole prompt
+        from repro.configs import get_config
+        dec_prompt = (max(1, 32 // 8)
+                      if get_config(arch).is_encoder_decoder else 32)
+        assert out["cache_len"] == dec_prompt + 8
