@@ -17,6 +17,7 @@ from repro.core.characterization import fit_latency_regression
 from repro.core.controller import ControllerConfig, LatencyController
 from repro.core import detector as det
 from repro.core import knobs as K
+from repro.core.session import MezClient
 from repro.data.camera import CameraConfig, SyntheticCamera
 
 PAPER_TABLE1 = {  # size_kB: (ONE_Lat_ms, FIVE_Lat_ms)
@@ -169,9 +170,18 @@ def _closed_loop(dynamics: str, workload: str, *, frames=60, n_cams=5,
         cam.set_target(EDGE.latency_target, EDGE.accuracy_target, tbl, reg)
         for ts, f, gt in src.stream(frames):
             cam.publish(ts, f)
-    spec = SubscribeSpec("app0", "cam0", 0.0, frames / EDGE.fps,
-                         EDGE.latency_target, EDGE.accuracy_target)
-    out = [d for d in sys.edge.subscribe(spec, controlled=controlled)]
+    # v2 session API: poll FrameBatches at the controller's sampling interval
+    client = MezClient(sys)
+    out = []
+    with client.open_session("app0") as sess:
+        sub = sess.subscribe("cam0", 0.0, frames / EDGE.fps,
+                             latency=EDGE.latency_target,
+                             accuracy=EDGE.accuracy_target,
+                             controlled=controlled,
+                             feedback_window=EDGE.feedback_window,
+                             credit_limit=EDGE.fetch_window)
+        while (fb := sub.poll(max_frames=EDGE.fetch_window)):
+            out.extend(fb.frames)
     delivered = [d for d in out if d.frame is not None]
     lat = np.asarray([d.latency.total for d in delivered])
     acc = [float(get_table(dynamics).acc_by_setting[d.knob_index])
@@ -340,9 +350,11 @@ def fig16_latency_breakdown() -> dict:
             cam.set_target(0.1, 0.95, tbl, reg)
             for ts, f, gt in src.stream(30):
                 cam.publish(ts, f)
-        out_frames = [d for d in sys.edge.subscribe(
-            SubscribeSpec("app0", "cam0", 0, 100, 0.1, 0.95))
-            if d.frame is not None]
+        client = MezClient(sys)
+        with client.open_session("app0") as sess:
+            sub = sess.subscribe("cam0", 0, 100, latency=0.1, accuracy=0.95)
+            out_frames = [d for d in sub.frames(max_frames=EDGE.fetch_window)
+                          if d.frame is not None]
         comps = {"publish_api": 0.0, "controller": 0.0, "log_copy": 0.0,
                  "network": 0.0, "broker_processing": 0.0,
                  "subscribe_api": 0.0}

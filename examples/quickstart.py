@@ -1,17 +1,18 @@
-"""Quickstart: the Mez loop in ~60 lines.
+"""Quickstart: the Mez loop in ~60 lines, on the v2 session API.
 
-Five cameras publish to Mez under 4-peer interference; one subscriber asks
-for (100 ms, 95%) bounds; the latency controller holds the SLO by adapting
-frame quality.  Run:  PYTHONPATH=src python examples/quickstart.py
+Five cameras publish to Mez under 4-peer interference; one subscriber opens
+a session, asks for (100 ms, 95%) bounds, and drains timestamp-merged
+``FrameBatch`` units; the latency controller holds the SLO by adapting frame
+quality.  Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
 from repro.configs.mez_edge import CONFIG as EDGE
-from repro.core.api import SubscribeSpec
 from repro.core.broker import MezSystem
 from repro.core.channel import calibrated_channel
 from repro.core.characterization import characterize, fit_latency_regression
+from repro.core.session import MezClient
 from repro.data.camera import CameraConfig, SyntheticCamera
 
 
@@ -41,18 +42,22 @@ def main() -> None:
         for ts, frame, _ in src.stream(40):
             cam.publish(ts, frame)                       # Publish API
 
-    # 3. subscribe with latency + accuracy bounds (the Mez API)
-    print(f"cameras: {system.edge.get_camera_info()}")   # GetCameraInfo API
-    spec = SubscribeSpec(application_id="app0", camera_id="cam0",
-                         t_start=0.0, t_stop=8.0,
-                         latency=EDGE.latency_target,
-                         accuracy=EDGE.accuracy_target)
+    # 3. open a session, subscribe with latency + accuracy bounds
+    client = MezClient(system)
+    print(f"cameras: {client.get_camera_info()}")        # GetCameraInfo API
     latencies, wires = [], []
-    for d in system.edge.subscribe(spec):                # Subscribe API
-        if d.frame is None:
-            continue                                     # knob5 drop
-        latencies.append(d.latency.total)
-        wires.append(d.wire_bytes)
+    with client.open_session("app0") as session:
+        sub = session.subscribe("cam0", 0.0, 8.0,
+                                latency=EDGE.latency_target,
+                                accuracy=EDGE.accuracy_target)
+        while (batch := sub.poll(max_frames=EDGE.fetch_window)):
+            for d in batch.delivered:                    # knob5 drops excluded
+                latencies.append(d.latency.total)
+                wires.append(d.wire_bytes)
+        for ev in sub.events():                          # out-of-band failures
+            print(f"  event: {ev.kind.value} on {ev.camera_id}")
+        print(f"  subscription state: {sub.state.value}")
+        sub.close()                                      # idempotent
     lat = np.asarray(latencies)
     print(f"delivered {len(lat)} frames")
     print(f"  p95 latency {np.percentile(lat, 95)*1e3:.0f} ms "
@@ -60,7 +65,6 @@ def main() -> None:
     print(f"  settled p95 {np.percentile(lat[10:], 95)*1e3:.0f} ms")
     print(f"  median wire size {np.median(wires)/1e3:.0f} kB "
           f"(raw ~90 kB)")
-    system.edge.unsubscribe("app0", "cam0")              # Unsubscribe API
 
 
 if __name__ == "__main__":

@@ -1,8 +1,11 @@
 """Mez core: the paper's contribution (brokers, log, latency controller) plus
 the TPU-native extension (controller-driven approximate collectives)."""
 
-from repro.core.api import (BrokerDown, DeliveredFrame, LatencyBreakdown,
-                            MessagingSystem, RPCTimeout, Status, SubscribeSpec)
+from repro.core.api import (BrokerDown, DeliveredFrame, EventKind,
+                            FrameBatch, LatencyBreakdown, MessagingSystem,
+                            QosUpdate, RPCTimeout, SessionEvent,
+                            SessionedMessagingSystem, Status, SubscribeSpec,
+                            SubscriptionState)
 from repro.core.channel import ChannelConfig, WirelessChannel, calibrated_channel
 from repro.core.characterization import (CharacterizationTable,
                                          LatencyRegression, characterize,
@@ -14,6 +17,7 @@ from repro.core.knobs import KnobSetting, apply_knobs, enumerate_settings, wire_
 from repro.core.log import (FrameLog, HostLog, LogSegmentStore, frame_log_append,
                             frame_log_init, frame_log_point_query,
                             frame_log_range_query)
+from repro.core.session import MezClient, Session, Subscription
 
 __all__ = [
     "BrokerDown", "DeliveredFrame", "LatencyBreakdown", "MessagingSystem",
@@ -24,5 +28,7 @@ __all__ = [
     "controller_init", "controller_step", "KnobSetting", "apply_knobs",
     "enumerate_settings", "wire_size", "FrameLog", "HostLog", "LogSegmentStore",
     "frame_log_append", "frame_log_init", "frame_log_point_query",
-    "frame_log_range_query",
+    "frame_log_range_query", "EventKind", "FrameBatch", "QosUpdate",
+    "SessionEvent", "SessionedMessagingSystem", "SubscriptionState",
+    "MezClient", "Session", "Subscription",
 ]

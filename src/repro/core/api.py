@@ -11,20 +11,34 @@ Data model (Section 3.2): key-value pairs, key = frame timestamp, value =
 frame, chronological order, at-most-once delivery (resend is an application-
 level decision).
 
-This module defines the wire-level records and the abstract interface both
-Mez and the NATS-like baseline implement, so benchmarks can swap systems.
+This module defines the wire-level records and the abstract interfaces the
+Mez implementations and the NATS-like baseline share, so benchmarks can swap
+systems.  Two client surfaces exist:
+
+v1 (the paper's five calls): ``MessagingSystem`` -- blocking single-camera
+pull iterators.  Kept working as a compat shim on top of v2.
+
+v2 (session API): ``SessionedMessagingSystem`` -- a client opens a session,
+subscribes one-or-many cameras per ``Subscription``, and drains frames in
+timestamp-merged ``FrameBatch`` units sized for jitted detector batches.
+QoS bounds renegotiate live via ``QosUpdate`` (no teardown/resubscribe), and
+failures (``INFEASIBLE``, crashed brokers) surface on an event stream
+instead of per-frame flags.  See ``repro.core.session`` for the handle
+classes (``MezClient`` / ``Session`` / ``Subscription``).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Iterator, Protocol
+from typing import Iterator, Protocol, Sequence
 
 import numpy as np
 
 __all__ = ["DeliveredFrame", "SubscribeSpec", "RPCTimeout", "BrokerDown",
-           "MessagingSystem", "Status"]
+           "MessagingSystem", "Status", "FrameBatch", "QosUpdate",
+           "SubscriptionState", "SessionEvent", "EventKind",
+           "SessionedMessagingSystem"]
 
 
 class RPCTimeout(TimeoutError):
@@ -84,3 +98,133 @@ class MessagingSystem(Protocol):
     def get_camera_info(self) -> list[str]: ...
     def subscribe(self, spec: SubscribeSpec) -> Iterator[DeliveredFrame]: ...
     def unsubscribe(self, application_id: str, camera_id: str) -> Status: ...
+
+
+# =============================================================================
+# v2 session API records
+# =============================================================================
+
+
+class SubscriptionState(enum.Enum):
+    ACTIVE = "active"       # at least one camera still serving frames
+    DRAINED = "drained"     # every camera exhausted its [t_start, t_stop]
+    FAILED = "failed"       # no camera active and at least one crashed
+    CLOSED = "closed"       # explicitly closed (idempotent)
+
+
+class EventKind(enum.Enum):
+    INFEASIBLE = "infeasible"      # controller: bounds can't both be met
+    RPC_TIMEOUT = "rpc_timeout"    # camera node crashed / unreachable
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionEvent:
+    """Out-of-band notification on a subscription's event stream (v2 replaces
+    the v1 pattern of burying failures in per-frame flags / raised mid-
+    iteration exceptions)."""
+    kind: EventKind
+    camera_id: str
+    subscription_id: str
+    timestamp: float               # stream position when the event fired
+    detail: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class QosUpdate:
+    """Result of a live QoS renegotiation (``Subscription.update_qos``)."""
+    latency: float                 # new upper bound, seconds
+    accuracy: float                # new lower bound, normalized F1
+    status: Status
+    applied_cameras: tuple[str, ...]
+    subscription_id: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class FrameBatch:
+    """One ``poll()`` result: timestamp-merged, at-most-once frames from all
+    cameras of a subscription.
+
+    ``frames`` is sorted by (timestamp, camera_id) and may include dropped
+    frames (``frame is None`` -- knob5 / at-most-once).  ``stack()`` produces
+    a dense float32 payload suitable for a jitted batched detector.
+    """
+    frames: tuple[DeliveredFrame, ...]
+    subscription_id: str = ""
+
+    def __len__(self) -> int:
+        return len(self.frames)
+
+    def __bool__(self) -> bool:
+        return bool(self.frames)
+
+    def __iter__(self) -> Iterator[DeliveredFrame]:
+        return iter(self.frames)
+
+    @property
+    def delivered(self) -> tuple[DeliveredFrame, ...]:
+        """Frames that carry a payload (dropped frames excluded)."""
+        return tuple(f for f in self.frames if f.frame is not None)
+
+    @property
+    def dropped(self) -> tuple[DeliveredFrame, ...]:
+        return tuple(f for f in self.frames if f.frame is None)
+
+    @property
+    def timestamps(self) -> np.ndarray:
+        return np.asarray([f.timestamp for f in self.frames], np.float64)
+
+    @property
+    def camera_ids(self) -> tuple[str, ...]:
+        return tuple(f.camera_id for f in self.frames)
+
+    @property
+    def shapes(self) -> tuple[tuple[int, int], ...]:
+        """True (H, W) of each delivered payload (pre-padding)."""
+        return tuple(np.asarray(f.frame).shape[:2] for f in self.delivered)
+
+    def stack(self, *, batch_size: int | None = None,
+              dtype=np.float32) -> tuple[np.ndarray, np.ndarray]:
+        """Stack delivered payloads into ``(payload, valid)``.
+
+        ``payload`` is ``[B, Hmax, Wmax, Cmax]`` zero-padded (ragged knob-
+        resized frames are padded to the batch max; grayscale is promoted to
+        one channel); ``valid`` is a ``[B]`` bool mask.  ``batch_size`` pads
+        the batch dimension to a fixed size so a jitted detector sees a
+        stable shape across polls (no recompiles).
+        """
+        frames = [np.atleast_3d(np.asarray(f.frame)) for f in self.delivered]
+        n = len(frames)
+        b = batch_size if batch_size is not None else n
+        if n > b:
+            raise ValueError(f"batch_size={b} < {n} delivered frames; "
+                             "poll with a smaller max_frames")
+        if n == 0:
+            return (np.zeros((b, 0, 0, 0), dtype), np.zeros((b,), bool))
+        hmax = max(f.shape[0] for f in frames)
+        wmax = max(f.shape[1] for f in frames)
+        cmax = max(f.shape[2] for f in frames)
+        out = np.zeros((b, hmax, wmax, cmax), dtype)
+        for i, f in enumerate(frames):
+            out[i, : f.shape[0], : f.shape[1], : f.shape[2]] = f
+        valid = np.zeros((b,), bool)
+        valid[:n] = True
+        return out, valid
+
+
+class SessionedMessagingSystem(Protocol):
+    """v2 broker-side surface (what ``repro.core.session.MezClient`` wraps)."""
+    def connect(self, url: str) -> str: ...
+    def get_camera_info(self) -> list[str]: ...
+    def open_session(self, application_id: str) -> str: ...
+    def close_session(self, session_id: str) -> Status: ...
+    def create_subscription(self, session_id: str,
+                            specs: Sequence[SubscribeSpec]) -> str: ...
+    def poll_subscription(self, subscription_id: str, *,
+                          max_frames: int = 16,
+                          deadline: float | None = None) -> FrameBatch: ...
+    def update_subscription_qos(self, subscription_id: str, *,
+                                latency: float | None = None,
+                                accuracy: float | None = None) -> QosUpdate: ...
+    def close_subscription(self, subscription_id: str) -> Status: ...
+    def subscription_events(self, subscription_id: str) -> list[SessionEvent]: ...
+    def subscription_state(self, subscription_id: str) -> SubscriptionState: ...

@@ -24,12 +24,16 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Iterator
+import time
+from collections import deque
+from typing import Iterator, Sequence
 
 import numpy as np
 
-from repro.core.api import (BrokerDown, DeliveredFrame, LatencyBreakdown,
-                            RPCTimeout, Status, SubscribeSpec)
+from repro.core.api import (BrokerDown, DeliveredFrame, EventKind, FrameBatch,
+                            LatencyBreakdown, QosUpdate, RPCTimeout,
+                            SessionEvent, Status, SubscribeSpec,
+                            SubscriptionState)
 from repro.core.channel import WirelessChannel
 from repro.core.characterization import CharacterizationTable, LatencyRegression
 from repro.core.controller import ControllerConfig, LatencyController
@@ -80,6 +84,18 @@ class CamBroker:
         cfg = dataclasses.replace(cfg, latency_target=latency,
                                   accuracy_target=accuracy)
         self.controller = LatencyController(cfg, table, regression)
+
+    def retarget(self, latency: float, accuracy: float) -> bool:
+        """Renegotiate bounds on the LIVE controller (v2 ``update_qos``):
+        no teardown, no resubscribe -- the PI loop keeps its tables and
+        regression and re-seeds its operating point for the new targets.
+        Returns False when no controller is installed yet."""
+        if self.crashed:
+            raise BrokerDown(self.camera_id)
+        if self.controller is None:
+            return False
+        self.controller.set_target(latency, accuracy)
+        return True
 
     # -- Publish (camera -> camera-node log) -------------------------------------
     def publish(self, timestamp: float, frame: np.ndarray) -> bool:
@@ -165,15 +181,70 @@ class CamBroker:
         self._last_sent = None
 
 
+@dataclasses.dataclass
+class _CamCursor:
+    """Per-camera streaming state inside one subscription."""
+    spec: SubscribeSpec
+    cursor: float
+    window: list[float] = dataclasses.field(default_factory=list)
+    failed: bool = False
+    drained: bool = False
+    detached: bool = False
+
+    @property
+    def active(self) -> bool:
+        return not (self.failed or self.drained or self.detached)
+
+
+@dataclasses.dataclass
+class _Subscription:
+    """Broker-side subscription record: one or many cameras, fan-in merged."""
+    sub_id: str
+    session_id: str
+    application_id: str
+    cameras: dict[str, _CamCursor]
+    controlled: bool
+    feedback_window: int
+    credit_limit: int
+    rr_offset: int = 0
+    events: deque = dataclasses.field(
+        default_factory=lambda: deque(maxlen=256))
+
+
+@dataclasses.dataclass
+class _Session:
+    session_id: str
+    application_id: str
+    sub_ids: list[str] = dataclasses.field(default_factory=list)
+
+
 class EdgeBroker:
-    """Edge-server broker: camera registry + replicated logs + subscriptions."""
+    """Edge-server broker: camera registry + replicated logs + session-backed
+    subscriptions.
+
+    v2 surface (``SessionedMessagingSystem``): applications open a session,
+    create subscriptions spanning one or many cameras, and drain frames with
+    ``poll_subscription`` -- a timestamp-merged ``FrameBatch`` per call.
+    Fan-in uses credit-based backpressure: each poll grants every camera a
+    credit window of at most ``credit_limit`` frames, so no camera can have
+    more than ``credit_limit`` frames in flight per poll -- one chatty
+    camera can't starve the rest of the batch or flood the wireless channel.
+    The next credit window opens only when the subscriber polls again,
+    i.e. after it has consumed the previous batch.
+
+    The v1 blocking iterator (``subscribe``) is a thin compat shim over the
+    same machinery, with identical per-fetch feedback numerics.
+    """
 
     def __init__(self, *, log_capacity: int = 4096,
                  store: LogSegmentStore | None = None):
         self._cams: dict[str, CamBroker] = {}
         self.replicas: dict[str, HostLog] = {}
-        self._subs: dict[tuple[str, str], SubscribeSpec] = {}
         self._ids = itertools.count()
+        self._sessions: dict[str, _Session] = {}
+        self._subscriptions: dict[str, _Subscription] = {}
+        # legacy (application_id, camera_id) -> sub_ids, for v1 unsubscribe
+        self._sub_index: dict[tuple[str, str], list[str]] = {}
         self.log_capacity = log_capacity
         self.store = store
         self.crashed = False
@@ -203,58 +274,323 @@ class EdgeBroker:
             raise RPCTimeout("EdgeBroker down")
         return sorted(self._cams)
 
+    # -- v2 session API ------------------------------------------------------------
+    def open_session(self, application_id: str) -> str:
+        if self.crashed:
+            raise RPCTimeout("EdgeBroker down")
+        sid = f"sess-{next(self._ids)}"
+        self._sessions[sid] = _Session(sid, application_id)
+        return sid
+
+    def close_session(self, session_id: str) -> Status:
+        """Evict the session and every subscription it owns from the
+        registry (a long-lived broker must not accumulate dead records);
+        closing an unknown/already-closed session returns FAIL."""
+        if self.crashed:
+            raise RPCTimeout("EdgeBroker down")
+        sess = self._sessions.pop(session_id, None)
+        if sess is None:
+            return Status.FAIL
+        for sub_id in sess.sub_ids:
+            self.close_subscription(sub_id)
+        return Status.OK
+
+    def create_subscription(self, session_id: str,
+                            specs: Sequence[SubscribeSpec], *,
+                            controlled: bool = True,
+                            feedback_window: int = 8,
+                            credit_limit: int = 2,
+                            retarget: bool = True) -> str:
+        """Register a (possibly multi-camera) subscription on a session.
+
+        With ``retarget`` (the default), each spec's (latency, accuracy)
+        bounds are pushed to the camera's live controller -- the paper's
+        Subscribe call carries the QoS bounds, it doesn't just record them.
+        The v1 shim opts out to preserve the seed API's exact behavior
+        (bounds there are set out-of-band via ``CamBroker.set_target``).
+        A camera that is crashed at create time is marked failed and
+        surfaces on the event stream at the first poll.
+        """
+        if self.crashed:
+            raise RPCTimeout("EdgeBroker down")
+        sess = self._sessions.get(session_id)
+        if sess is None:
+            raise RPCTimeout(f"unknown session {session_id}")
+        if not specs:
+            raise ValueError("subscription needs at least one camera spec")
+        for spec in specs:
+            if spec.camera_id not in self._cams:
+                raise RPCTimeout(f"unknown camera {spec.camera_id}")
+        sub_id = f"sub-{next(self._ids)}"
+        cameras = {spec.camera_id: _CamCursor(spec, spec.t_start)
+                   for spec in specs}
+        rec = _Subscription(sub_id, session_id, sess.application_id, cameras,
+                            controlled, feedback_window, credit_limit)
+        if retarget:
+            for spec in specs:
+                try:
+                    self._cams[spec.camera_id].retarget(spec.latency,
+                                                        spec.accuracy)
+                except BrokerDown as e:
+                    cameras[spec.camera_id].failed = True
+                    rec.events.append(SessionEvent(
+                        EventKind.RPC_TIMEOUT, spec.camera_id, sub_id,
+                        spec.t_start, str(e)))
+        self._subscriptions[sub_id] = rec
+        sess.sub_ids.append(sub_id)
+        for spec in specs:
+            self._sub_index.setdefault(
+                (sess.application_id, spec.camera_id), []).append(sub_id)
+        return sub_id
+
+    def poll_subscription(self, subscription_id: str, *,
+                          max_frames: int = 16,
+                          deadline: float | None = None) -> FrameBatch:
+        """Drain up to ``max_frames`` timestamp-merged frames from all active
+        cameras of the subscription (at-most-once: a fetched frame is never
+        re-fetched).
+
+        Each active camera is visited once per poll (round-robin rotated for
+        fairness), fetching at most ``min(credits, share)`` frames where
+        share divides ``max_frames`` across cameras; per-fetch the camera's
+        own p95-latency window is fed back to its controller, exactly as the
+        v1 single-camera loop did.  ``deadline`` bounds the poll's wall-clock
+        time.  A crashed camera is marked failed and surfaces as an
+        RPC_TIMEOUT event while the remaining cameras keep streaming; only
+        when every camera has failed does poll raise ``RPCTimeout``.
+        An empty batch means the subscription is drained (or closed).
+        """
+        if self.crashed:
+            raise RPCTimeout("EdgeBroker down")
+        rec = self._subscriptions.get(subscription_id)
+        if rec is None:
+            return FrameBatch((), subscription_id)
+        t0 = time.monotonic()
+        active = [cid for cid in sorted(rec.cameras)
+                  if rec.cameras[cid].active]
+        out: list[DeliveredFrame] = []
+        if active:
+            k = rec.rr_offset % len(active)
+            rec.rr_offset += 1
+            order = active[k:] + active[:k]
+            share = max(1, max_frames // len(order))
+            for cid in order:
+                if len(out) >= max_frames:
+                    break
+                # the deadline never forges an end-of-stream: an empty batch
+                # must mean drained, so expiry only stops a poll that has
+                # already made progress
+                if (out and deadline is not None
+                        and time.monotonic() - t0 > deadline):
+                    break
+                self._fetch_into(rec, cid, min(share, max_frames - len(out)),
+                                 out)
+        out.sort(key=lambda d: (d.timestamp, d.camera_id))
+        if not out:
+            cams = rec.cameras.values()
+            if any(c.failed for c in cams) and all(
+                    c.failed or c.detached for c in cams):
+                raise RPCTimeout(
+                    f"all cameras of {subscription_id} unreachable")
+        return FrameBatch(tuple(out), subscription_id)
+
+    def _fetch_into(self, rec: _Subscription, camera_id: str, budget: int,
+                    out: list[DeliveredFrame]) -> None:
+        """One on-demand fetch round for one camera of a subscription."""
+        cur = rec.cameras[camera_id]
+        budget = min(budget, rec.credit_limit)
+        if budget <= 0:
+            return
+        cam = self._cams.get(camera_id)
+        if cam is None:
+            cur.failed = True
+            rec.events.append(SessionEvent(
+                EventKind.RPC_TIMEOUT, camera_id, rec.sub_id, cur.cursor,
+                "camera unregistered"))
+            return
+        feedback = (float(np.percentile(cur.window, 95))
+                    if cur.window else None)
+        try:
+            frames = cam.fetch(cur.cursor, cur.spec.t_stop,
+                               latency_feedback=feedback,
+                               controlled=rec.controlled,
+                               max_frames=budget)
+        except BrokerDown as e:
+            cur.failed = True
+            rec.events.append(SessionEvent(
+                EventKind.RPC_TIMEOUT, camera_id, rec.sub_id, cur.cursor,
+                str(e)))
+            return
+        if not frames:
+            cur.drained = True
+            return
+        replica = self.replicas[camera_id]
+        infeasible_seen = False
+        for f in frames:
+            cur.cursor = max(cur.cursor, float(np.nextafter(f.timestamp,
+                                                            np.inf)))
+            lat = dataclasses.replace(
+                f.latency,
+                broker_processing=BROKER_PROC_COST,
+                subscribe_api=SUBSCRIBE_API_COST)
+            g = dataclasses.replace(f, latency=lat)
+            if g.infeasible:
+                infeasible_seen = True
+            if g.frame is not None:
+                replica.append(g.timestamp, g.frame)
+                cur.window.append(g.latency.total)
+                cur.window[:] = cur.window[-rec.feedback_window:]
+            out.append(g)
+        if infeasible_seen:
+            rec.events.append(SessionEvent(
+                EventKind.INFEASIBLE, camera_id, rec.sub_id,
+                frames[-1].timestamp,
+                "latency/accuracy bounds infeasible; serving best effort"))
+        if cur.cursor > cur.spec.t_stop:
+            cur.drained = True
+
+    def update_subscription_qos(self, subscription_id: str, *,
+                                latency: float | None = None,
+                                accuracy: float | None = None) -> QosUpdate:
+        """Renegotiate (latency, accuracy) bounds on a LIVE subscription.
+
+        The per-camera ``LatencyController`` is retargeted in place (paper
+        Fig. 9 SetTarget at runtime): no teardown, no resubscribe, cursors
+        and feedback windows survive.  Cameras that are crashed fail the
+        update individually (RPC_TIMEOUT event) without aborting the rest.
+        """
+        if self.crashed:
+            raise RPCTimeout("EdgeBroker down")
+        rec = self._subscriptions.get(subscription_id)
+        if rec is None:
+            return QosUpdate(latency or 0.0, accuracy or 0.0, Status.FAIL,
+                             (), subscription_id)
+        applied: list[str] = []
+        new_lat = new_acc = 0.0
+        for cid, cur in rec.cameras.items():
+            if cur.detached or cur.failed:
+                continue
+            new_lat = latency if latency is not None else cur.spec.latency
+            new_acc = accuracy if accuracy is not None else cur.spec.accuracy
+            cur.spec = dataclasses.replace(cur.spec, latency=new_lat,
+                                           accuracy=new_acc)
+            cam = self._cams.get(cid)
+            if cam is None:
+                continue
+            try:
+                if cam.retarget(new_lat, new_acc):
+                    applied.append(cid)
+            except BrokerDown as e:
+                cur.failed = True
+                rec.events.append(SessionEvent(
+                    EventKind.RPC_TIMEOUT, cid, rec.sub_id, cur.cursor,
+                    str(e)))
+        return QosUpdate(new_lat, new_acc,
+                         Status.OK if applied else Status.FAIL,
+                         tuple(applied), subscription_id)
+
+    def close_subscription(self, subscription_id: str) -> Status:
+        """Explicit teardown: evicts the record and scrubs the legacy
+        (application, camera) index so the registry stays O(live
+        subscriptions).  Safe on unknown/already-closed ids (FAIL)."""
+        if self.crashed:
+            raise RPCTimeout("EdgeBroker down")
+        rec = self._subscriptions.pop(subscription_id, None)
+        if rec is None:
+            return Status.FAIL
+        for cid in rec.cameras:
+            key = (rec.application_id, cid)
+            ids = self._sub_index.get(key)
+            if ids is not None:
+                if subscription_id in ids:
+                    ids.remove(subscription_id)
+                if not ids:
+                    del self._sub_index[key]
+        return Status.OK
+
+    def subscription_events(self, subscription_id: str) -> list[SessionEvent]:
+        """Drain pending out-of-band events for a subscription."""
+        rec = self._subscriptions.get(subscription_id)
+        if rec is None:
+            return []
+        out = list(rec.events)
+        rec.events.clear()
+        return out
+
+    def session_events(self, session_id: str) -> list[SessionEvent]:
+        """Drain pending events across all subscriptions of a session."""
+        sess = self._sessions.get(session_id)
+        if sess is None:
+            return []
+        out: list[SessionEvent] = []
+        for sub_id in sess.sub_ids:
+            out.extend(self.subscription_events(sub_id))
+        return out
+
+    def subscription_state(self, subscription_id: str) -> SubscriptionState:
+        rec = self._subscriptions.get(subscription_id)
+        if rec is None:
+            return SubscriptionState.CLOSED
+        cams = rec.cameras.values()
+        if any(c.active for c in cams):
+            return SubscriptionState.ACTIVE
+        if any(c.failed for c in cams):
+            return SubscriptionState.FAILED
+        return SubscriptionState.DRAINED
+
+    # -- v1 compat shim ------------------------------------------------------------
     def subscribe(self, spec: SubscribeSpec, *,
                   controlled: bool = True,
                   feedback_window: int = 8,
                   fetch_window: int = 2) -> Iterator[DeliveredFrame]:
-        """Streaming subscription: on-demand transfer + controller feedback.
+        """v1 streaming subscription (paper Fig. 7), as a shim over the v2
+        session machinery.
 
-        Yields frames as they become available in [t_start, t_stop].  The
-        subscriber-observed p95 latency over the last ``feedback_window``
-        frames is fed back to the camera node's controller each fetch; each
-        fetch is capped at ``fetch_window`` frames so the control loop
-        samples at its interval rather than bulk-draining the camera log.
+        Yields frames as they become available in [t_start, t_stop].  Each
+        poll is capped at ``fetch_window`` frames so the control loop samples
+        the subscriber-observed p95 latency at its interval rather than
+        bulk-draining the camera log -- numerically identical to the original
+        single-camera loop.
         """
         if self.crashed:
             raise RPCTimeout("EdgeBroker down")
-        cam = self._cams.get(spec.camera_id)
-        if cam is None:
-            raise RPCTimeout(f"unknown camera {spec.camera_id}")
-        self._subs[(spec.application_id, spec.camera_id)] = spec
-        replica = self.replicas[spec.camera_id]
-        window: list[float] = []
-        cursor = spec.t_start
-        while (spec.application_id, spec.camera_id) in self._subs:
-            feedback = (float(np.percentile(window, 95)) if window else None)
+
+        def gen() -> Iterator[DeliveredFrame]:
+            sid = self.open_session(spec.application_id)
+            sub_id = self.create_subscription(
+                sid, (spec,), controlled=controlled,
+                feedback_window=feedback_window, credit_limit=fetch_window,
+                retarget=False)
             try:
-                frames = cam.fetch(cursor, spec.t_stop,
-                                   latency_feedback=feedback,
-                                   controlled=controlled,
-                                   max_frames=fetch_window)
-            except BrokerDown as e:
-                raise RPCTimeout(str(e)) from e
-            if not frames:
-                break
-            for f in frames:
-                cursor = max(cursor, np.nextafter(f.timestamp, np.inf))
-                lat = dataclasses.replace(
-                    f.latency,
-                    broker_processing=BROKER_PROC_COST,
-                    subscribe_api=SUBSCRIBE_API_COST)
-                g = dataclasses.replace(f, latency=lat)
-                if g.frame is not None:
-                    replica.append(g.timestamp, g.frame)
-                    window.append(g.latency.total)
-                    window[:] = window[-feedback_window:]
-                yield g
-            if cursor > spec.t_stop:
-                break
+                while True:
+                    batch = self.poll_subscription(sub_id,
+                                                   max_frames=fetch_window)
+                    if not batch:
+                        break
+                    yield from batch.frames
+            finally:
+                if not self.crashed:
+                    self.close_session(sid)
+
+        return gen()
 
     def unsubscribe(self, application_id: str, camera_id: str) -> Status:
+        """v1 Unsubscribe: detach the camera from every live subscription of
+        this application.  Idempotent and deterministic: a second call, or a
+        call naming an unknown camera/application, returns ``Status.FAIL``
+        without raising or corrupting registry state."""
         if self.crashed:
             raise RPCTimeout("EdgeBroker down")
-        return (Status.OK if self._subs.pop((application_id, camera_id), None)
-                else Status.FAIL)
+        detached = False
+        for sub_id in self._sub_index.get((application_id, camera_id), []):
+            rec = self._subscriptions.get(sub_id)
+            if rec is None:
+                continue
+            cur = rec.cameras.get(camera_id)
+            if cur is not None and not cur.detached:
+                cur.detached = True
+                detached = True
+        return Status.OK if detached else Status.FAIL
 
     # -- fault tolerance --------------------------------------------------------------
     def crash(self) -> None:

@@ -86,12 +86,23 @@ class LatencyController:
         self._current = int(idx)
 
     def set_target(self, latency_target: float, accuracy_target: float) -> None:
-        """The CamBroker's internal SetTarget API (paper Fig. 9)."""
+        """The CamBroker's internal SetTarget API (paper Fig. 9).
+
+        Runtime retarget: callable mid-stream (v2 ``update_qos``).  Besides
+        resetting the integral, the operating point is re-seeded from the new
+        target's nominal size so the renegotiated bounds take effect on the
+        very next fetch -- within one control interval -- instead of waiting
+        for the error signal to walk the old setting over.
+        """
         self.config = dataclasses.replace(
             self.config, latency_target=latency_target,
             accuracy_target=accuracy_target)
         self._nominal = self.regression.invert(latency_target)
         self.integral = 0.0
+        _, idx = self.table.query_size(
+            float(np.clip(self._nominal, self.table.sizes_sorted[0],
+                          self.table.sizes_sorted[-1])))
+        self._current = int(idx)
 
     def update(self, latency_sampled: float) -> ControlDecision:
         cfg = self.config

@@ -18,9 +18,14 @@ baseline F1.
 
 from __future__ import annotations
 
+from typing import Callable, Iterable
+
 import numpy as np
 
-__all__ = ["detect", "iou_matrix", "match_f1", "normalized_f1"]
+from repro.core.api import DeliveredFrame
+
+__all__ = ["detect", "detect_batch", "iou_matrix", "match_f1",
+           "normalized_f1"]
 
 
 def _to_gray(frame: np.ndarray) -> np.ndarray:
@@ -128,6 +133,30 @@ def detect(frame: np.ndarray, background: np.ndarray, *,
             boxes.append((ys.min() * sy, xs.min() * sx, (ys.max() + 1) * sy,
                           (xs.max() + 1) * sx))
     return np.asarray(boxes, np.float32).reshape(-1, 4)
+
+
+def detect_batch(batch, background, *,
+                 scale_to: tuple[int, int] | None = None,
+                 thresh: float = 28.0, min_area: int = 12,
+                 ) -> list[tuple[DeliveredFrame, np.ndarray]]:
+    """Run the detector over a v2 ``FrameBatch`` (or any iterable of
+    ``DeliveredFrame``) in one call -- the multi-camera fan-in consumer.
+
+    ``background`` is either one array shared by every frame or a callable
+    ``(DeliveredFrame) -> np.ndarray`` resolving the per-camera (and per-knob-
+    setting) background model.  Dropped frames are skipped (at-most-once);
+    returns ``[(delivered_frame, boxes[N,4]), ...]`` in batch order.
+    """
+    frames: Iterable[DeliveredFrame] = getattr(batch, "delivered", batch)
+    bg_for: Callable[[DeliveredFrame], np.ndarray] = (
+        background if callable(background) else (lambda _d: background))
+    out: list[tuple[DeliveredFrame, np.ndarray]] = []
+    for d in frames:
+        if d.frame is None:
+            continue
+        out.append((d, detect(np.asarray(d.frame), bg_for(d), thresh=thresh,
+                              min_area=min_area, scale_to=scale_to)))
+    return out
 
 
 def iou_matrix(a: np.ndarray, b: np.ndarray) -> np.ndarray:

@@ -1,0 +1,152 @@
+"""v2 client surface: ``MezClient`` -> ``Session`` -> ``Subscription``.
+
+The paper's five-call API (Section 3.1) is single-camera and blocking; the
+headline workload (Section 5.1) is five cameras feeding one detector.  This
+module is the session-oriented client shape that matches that workload:
+
+    client = MezClient(system)
+    with client.open_session("app0") as session:
+        sub = session.subscribe(["cam0", "cam1"], 0.0, 8.0,
+                                latency=0.100, accuracy=0.95)
+        while (batch := sub.poll(max_frames=10)):
+            payload, valid = batch.stack()        # jit-ready [B,H,W,C]
+            ...
+        sub.update_qos(latency=0.060)             # live renegotiation
+        for ev in sub.events():                   # INFEASIBLE / RPC_TIMEOUT
+            ...
+
+Handles are thin: all state lives broker-side (``EdgeBroker`` session
+registry), so a handle can be dropped and the registry stays authoritative
+-- the same reasoning the paper uses to keep subscriber recovery trivial.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.core.api import (FrameBatch, QosUpdate, SessionEvent, Status,
+                            SubscribeSpec, SubscriptionState)
+
+__all__ = ["MezClient", "Session", "Subscription"]
+
+
+class MezClient:
+    """Entry point for the v2 API.  Wraps anything that implements the
+    ``SessionedMessagingSystem`` protocol -- an ``EdgeBroker`` directly or a
+    ``MezSystem`` facade (``system.edge`` is unwrapped automatically)."""
+
+    def __init__(self, system):
+        self._edge = getattr(system, "edge", system)
+
+    def connect(self, url: str = "mez://edge") -> str:
+        return self._edge.connect(url)
+
+    def get_camera_info(self) -> list[str]:
+        return self._edge.get_camera_info()
+
+    def open_session(self, application_id: str) -> "Session":
+        return Session(self._edge,
+                       self._edge.open_session(application_id),
+                       application_id)
+
+
+class Session:
+    """One application's conversation with the edge broker.  Context-manager;
+    closing the session closes every subscription it created."""
+
+    def __init__(self, edge, session_id: str, application_id: str):
+        self._edge = edge
+        self.session_id = session_id
+        self.application_id = application_id
+        self._closed = False
+
+    def subscribe(self, camera_ids: str | Sequence[str], t_start: float,
+                  t_stop: float, *, latency: float, accuracy: float,
+                  controlled: bool = True, feedback_window: int = 8,
+                  credit_limit: int = 2) -> "Subscription":
+        """Subscribe one or many cameras under shared QoS bounds; frames from
+        all of them arrive timestamp-merged through one ``poll()``."""
+        if isinstance(camera_ids, str):
+            camera_ids = [camera_ids]
+        specs = tuple(SubscribeSpec(self.application_id, cid, t_start, t_stop,
+                                    latency, accuracy) for cid in camera_ids)
+        sub_id = self._edge.create_subscription(
+            self.session_id, specs, controlled=controlled,
+            feedback_window=feedback_window, credit_limit=credit_limit)
+        return Subscription(self._edge, sub_id, tuple(camera_ids))
+
+    def events(self) -> list[SessionEvent]:
+        """Drain pending events across all of this session's subscriptions."""
+        return self._edge.session_events(self.session_id)
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def close(self) -> Status:
+        if self._closed:
+            return Status.OK
+        self._closed = True
+        return self._edge.close_session(self.session_id)
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class Subscription:
+    """Handle for one (possibly multi-camera) subscription."""
+
+    def __init__(self, edge, subscription_id: str, cameras: tuple[str, ...]):
+        self._edge = edge
+        self.subscription_id = subscription_id
+        self.cameras = cameras
+        self._closed = False
+
+    def poll(self, max_frames: int = 16,
+             deadline: float | None = None) -> FrameBatch:
+        """Next ``FrameBatch``: at most ``max_frames`` timestamp-merged,
+        at-most-once frames across all subscribed cameras.  Empty batch =>
+        drained.  ``deadline`` (seconds) bounds the call's wall-clock time."""
+        return self._edge.poll_subscription(self.subscription_id,
+                                            max_frames=max_frames,
+                                            deadline=deadline)
+
+    def update_qos(self, *, latency: float | None = None,
+                   accuracy: float | None = None) -> QosUpdate:
+        """Renegotiate bounds live: per-camera controllers retarget in place,
+        cursors/windows survive, no teardown or resubscribe."""
+        return self._edge.update_subscription_qos(
+            self.subscription_id, latency=latency, accuracy=accuracy)
+
+    def events(self) -> list[SessionEvent]:
+        """Drain this subscription's INFEASIBLE / RPC_TIMEOUT notifications."""
+        return self._edge.subscription_events(self.subscription_id)
+
+    @property
+    def state(self) -> SubscriptionState:
+        return self._edge.subscription_state(self.subscription_id)
+
+    def close(self) -> Status:
+        """Idempotent explicit teardown (broker record is evicted once;
+        repeat closes are local no-ops)."""
+        if self._closed:
+            return Status.OK
+        self._closed = True
+        return self._edge.close_subscription(self.subscription_id)
+
+    def frames(self, *, max_frames: int = 16):
+        """Migration helper: drain as a flat v1-style frame iterator."""
+        while True:
+            batch = self.poll(max_frames=max_frames)
+            if not batch:
+                return
+            yield from batch.frames
+
+    def __enter__(self) -> "Subscription":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -153,11 +153,26 @@ class BackupFetcher:
 
 class CameraBatcher:
     """Adapts Mez `DeliveredFrame` streams into fixed-size model batches
-    (dropped frames are skipped -- at-most-once semantics end to end)."""
+    (dropped frames are skipped -- at-most-once semantics end to end).
+
+    Consumes either single v1 frames (``push``) or whole v2 ``FrameBatch``
+    units (``push_batch``) -- the fan-in merge already happened broker-side,
+    so batching here is just accumulation to the model's batch size.
+    """
 
     def __init__(self, batch: int):
         self.batch = batch
         self._buf: list[np.ndarray] = []
+
+    def push_batch(self, frame_batch) -> list[np.ndarray]:
+        """Feed one ``FrameBatch``; returns every model batch it completed
+        (possibly none, possibly several)."""
+        out = []
+        for d in frame_batch:
+            b = self.push(d)
+            if b is not None:
+                out.append(b)
+        return out
 
     def push(self, delivered) -> np.ndarray | None:
         if delivered.frame is None:

@@ -78,6 +78,26 @@ class TestAPI:
             list(sys.edge.subscribe(
                 SubscribeSpec("app", "nope", 0, 1, 0.1, 0.9)))
 
+    def test_unsubscribe_idempotent(self, table):
+        """Double-unsubscribe and unknown targets return a deterministic
+        Status -- never a KeyError from registry dict state."""
+        sys = build_system(table)
+        spec = SubscribeSpec("app", "cam0", 0.0, 100.0, 0.1, 0.9)
+        it = sys.edge.subscribe(spec)
+        next(it)
+        assert sys.edge.unsubscribe("app", "cam0") is Status.OK
+        for _ in range(3):                         # arbitrarily repeatable
+            assert sys.edge.unsubscribe("app", "cam0") is Status.FAIL
+
+    def test_unsubscribe_unknown_targets_fail_cleanly(self, table):
+        sys = build_system(table)
+        assert sys.edge.unsubscribe("app", "ghost-cam") is Status.FAIL
+        assert sys.edge.unsubscribe("ghost-app", "cam0") is Status.FAIL
+        # registry still healthy: a real subscription works afterwards
+        out = list(sys.edge.subscribe(
+            SubscribeSpec("app", "cam0", 0.0, 100.0, 0.1, 0.9)))
+        assert len(out) == 10
+
 
 class TestControl:
     def test_controller_reduces_payload_under_interference(self, table):

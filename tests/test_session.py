@@ -1,0 +1,288 @@
+"""v2 session API: multi-camera fan-in, FrameBatch invariants, live QoS
+renegotiation, events, lifecycle, and compat-shim equivalence."""
+
+import numpy as np
+import pytest
+
+from repro.core.api import (EventKind, FrameBatch, RPCTimeout, Status,
+                            SubscribeSpec, SubscriptionState)
+from repro.core.broker import MezSystem
+from repro.core.channel import calibrated_channel
+from repro.core.characterization import characterize, fit_latency_regression
+from repro.core import detector as det
+from repro.core.session import MezClient
+from repro.data.camera import CameraConfig, SyntheticCamera
+from repro.data.pipeline import CameraBatcher
+
+
+@pytest.fixture(scope="module")
+def table():
+    return characterize(
+        lambda: SyntheticCamera(CameraConfig(dynamics="medium", seed=7)),
+        clip_len=10)
+
+
+def build_system(table, *, n_cams=2, frames=10, workload=None, seed=3):
+    ch = calibrated_channel(seed=seed, workload=workload)
+    sys = MezSystem(ch)
+    sizes = np.linspace(table.sizes_sorted[0], table.sizes_sorted[-1], 12)
+    reg = fit_latency_regression(sizes, ch.regression_points(sizes, n=n_cams))
+    for i in range(n_cams):
+        cam = sys.add_camera(f"cam{i}")
+        src = SyntheticCamera(CameraConfig(camera_id=f"cam{i}",
+                                           dynamics="medium", seed=7))
+        cam.background = src.background
+        cam.set_target(0.100, 0.90, table, reg)
+        for ts, f, gt in src.stream(frames):
+            cam.publish(ts, f)
+    return sys
+
+
+def open_sub(sys, cameras, *, latency=0.1, accuracy=0.9, t_stop=100.0):
+    sess = MezClient(sys).open_session("app")
+    return sess, sess.subscribe(cameras, 0.0, t_stop,
+                                latency=latency, accuracy=accuracy)
+
+
+class TestFanIn:
+    def test_multi_camera_chronological_merge(self, table):
+        sys = build_system(table, n_cams=3, frames=10)
+        sess, sub = open_sub(sys, ["cam0", "cam1", "cam2"])
+        total, seen = 0, {f"cam{i}": [] for i in range(3)}
+        while (batch := sub.poll(max_frames=9)):
+            ts = batch.timestamps
+            # merged batch is sorted, ties broken by camera id
+            assert all((a.timestamp, a.camera_id) <= (b.timestamp, b.camera_id)
+                       for a, b in zip(batch.frames, batch.frames[1:]))
+            for d in batch.frames:
+                seen[d.camera_id].append(d.timestamp)
+            total += len(batch)
+        assert total == 30
+        # per-camera order is preserved end to end (at-most-once, no dupes)
+        for cid, stamps in seen.items():
+            assert stamps == sorted(stamps)
+            assert len(stamps) == len(set(stamps)) == 10
+        assert sub.state is SubscriptionState.DRAINED
+        sess.close()
+
+    def test_max_frames_respected(self, table):
+        sys = build_system(table, n_cams=2, frames=10)
+        sess, sub = open_sub(sys, ["cam0", "cam1"])
+        while (batch := sub.poll(max_frames=3)):
+            assert len(batch) <= 3
+        sess.close()
+
+    def test_credit_backpressure_bounds_per_camera(self, table):
+        """One poll never pulls more than credit_limit frames per camera."""
+        sys = build_system(table, n_cams=2, frames=10)
+        sess = MezClient(sys).open_session("app")
+        sub = sess.subscribe(["cam0", "cam1"], 0.0, 100.0, latency=0.1,
+                             accuracy=0.9, credit_limit=2)
+        while (batch := sub.poll(max_frames=16)):
+            per_cam = {}
+            for d in batch.frames:
+                per_cam[d.camera_id] = per_cam.get(d.camera_id, 0) + 1
+            assert all(v <= 2 for v in per_cam.values())
+        sess.close()
+
+
+class TestFrameBatch:
+    def test_stack_shape_and_valid_mask(self, table):
+        sys = build_system(table, n_cams=2, frames=10)
+        sess, sub = open_sub(sys, ["cam0", "cam1"])
+        batch = sub.poll(max_frames=4)
+        payload, valid = batch.stack()
+        assert payload.dtype == np.float32
+        assert payload.ndim == 4
+        assert payload.shape[0] == len(batch.delivered) == int(valid.sum())
+        sess.close()
+
+    def test_stack_fixed_batch_size_pads_with_zeros(self, table):
+        sys = build_system(table, n_cams=2, frames=10)
+        sess, sub = open_sub(sys, ["cam0", "cam1"])
+        batch = sub.poll(max_frames=4)
+        n = len(batch.delivered)
+        payload, valid = batch.stack(batch_size=8)
+        assert payload.shape[0] == 8
+        assert valid.tolist() == [True] * n + [False] * (8 - n)
+        assert not payload[n:].any()
+        if n >= 1:
+            with pytest.raises(ValueError):
+                batch.stack(batch_size=n - 1)
+        sess.close()
+
+    def test_stack_empty(self):
+        payload, valid = FrameBatch(()).stack(batch_size=4)
+        assert payload.shape[0] == 4 and not valid.any()
+        assert not FrameBatch(())
+
+
+class TestQosRenegotiation:
+    def test_update_qos_retargets_in_place(self, table):
+        sys = build_system(table, n_cams=5, frames=20, workload="dukemtmc")
+        sess, sub = open_sub(sys, "cam0")
+        for _ in range(3):
+            sub.poll(max_frames=2)
+        ctl = sys.cams["cam0"].controller
+        ctl_id = id(ctl)
+        q = sub.update_qos(latency=0.030)
+        assert q.status is Status.OK and q.applied_cameras == ("cam0",)
+        # same controller object: retarget happened IN PLACE, no teardown
+        assert id(sys.cams["cam0"].controller) == ctl_id
+        assert ctl.config.latency_target == 0.030
+        assert ctl.config.accuracy_target == 0.90   # unchanged axis preserved
+        assert sub.state is SubscriptionState.ACTIVE
+        sess.close()
+
+    def test_update_qos_effective_within_one_interval(self, table):
+        """Retarget re-seeds the operating point: the setting moves toward
+        the new target's nominal size immediately, not after N samples."""
+        sys = build_system(table, n_cams=5, frames=20, workload="dukemtmc")
+        sess, sub = open_sub(sys, "cam0", latency=0.030)
+        for _ in range(4):
+            sub.poll(max_frames=2)
+        ctl = sys.cams["cam0"].controller
+        size_tight = table.size_by_setting[ctl._current]
+        sub.update_qos(latency=1.0)          # relax drastically
+        size_relaxed = table.size_by_setting[ctl._current]
+        assert size_relaxed >= size_tight    # reseeded before any feedback
+        batch = sub.poll(max_frames=2)       # next interval ships bigger frames
+        assert batch
+        assert all(d.wire_bytes >= size_tight * 0.5 for d in batch.delivered)
+        sess.close()
+
+    def test_update_qos_on_closed_subscription_fails(self, table):
+        sys = build_system(table)
+        sess, sub = open_sub(sys, "cam0")
+        sub.close()
+        assert sub.update_qos(latency=0.2).status is Status.FAIL
+        sess.close()
+
+
+class TestEventsAndFailures:
+    def test_infeasible_surfaces_as_event(self, table):
+        sys = build_system(table, n_cams=5, frames=12, workload="dukemtmc")
+        sess, sub = open_sub(sys, "cam0", latency=0.001, accuracy=0.999)
+        while sub.poll(max_frames=2):
+            pass
+        kinds = {e.kind for e in sub.events()}
+        assert EventKind.INFEASIBLE in kinds
+        sess.close()
+
+    def test_partial_camera_failure_keeps_streaming(self, table):
+        sys = build_system(table, n_cams=2, frames=10)
+        sys.cams["cam0"].crash()
+        sess, sub = open_sub(sys, ["cam0", "cam1"])
+        got = []
+        while (batch := sub.poll(max_frames=4)):
+            got.extend(batch.frames)
+        assert len(got) == 10                      # cam1's stream survives
+        assert {d.camera_id for d in got} == {"cam1"}
+        evs = sub.events()
+        assert any(e.kind is EventKind.RPC_TIMEOUT and e.camera_id == "cam0"
+                   for e in evs)
+        assert sub.state is SubscriptionState.FAILED
+        sess.close()
+
+    def test_all_cameras_failed_raises(self, table):
+        sys = build_system(table)
+        sys.cams["cam0"].crash()
+        sess, sub = open_sub(sys, "cam0")
+        with pytest.raises(RPCTimeout):
+            sub.poll()
+        sess.close()
+
+    def test_session_events_aggregates_subscriptions(self, table):
+        sys = build_system(table, n_cams=2, frames=10)
+        sys.cams["cam0"].crash()
+        sess = MezClient(sys).open_session("app")
+        sub0 = sess.subscribe("cam0", 0.0, 100.0, latency=0.1, accuracy=0.9)
+        sub1 = sess.subscribe("cam1", 0.0, 100.0, latency=0.1, accuracy=0.9)
+        with pytest.raises(RPCTimeout):
+            sub0.poll()
+        while sub1.poll(max_frames=4):
+            pass
+        evs = sess.events()
+        assert any(e.subscription_id == sub0.subscription_id for e in evs)
+        assert sess.close() is Status.OK
+
+
+class TestLifecycle:
+    def test_close_is_idempotent(self, table):
+        sys = build_system(table)
+        sess, sub = open_sub(sys, "cam0")
+        assert sub.close() is Status.OK
+        assert sub.close() is Status.OK            # second close: still OK
+        assert sub.state is SubscriptionState.CLOSED
+        assert not sub.poll()                      # closed => empty batch
+        assert sess.close() is Status.OK
+        assert sess.close() is Status.OK
+
+    def test_context_managers_close(self, table):
+        sys = build_system(table)
+        with MezClient(sys).open_session("app") as sess:
+            with sess.subscribe("cam0", 0.0, 100.0, latency=0.1,
+                                accuracy=0.9) as sub:
+                assert sub.poll(max_frames=2)
+            assert sub.state is SubscriptionState.CLOSED
+        assert sess.closed
+
+    def test_unknown_camera_rejected_at_create(self, table):
+        sys = build_system(table)
+        sess = MezClient(sys).open_session("app")
+        with pytest.raises(RPCTimeout):
+            sess.subscribe("ghost", 0.0, 1.0, latency=0.1, accuracy=0.9)
+        sess.close()
+
+
+class TestCompatShim:
+    def test_v1_iterator_matches_v2_poll(self, table):
+        """The old blocking iterator and the session API produce identical
+        frame sequences (timestamps, wire bytes, knobs, latencies)."""
+        key = lambda d: (d.timestamp, d.wire_bytes, d.knob_index,
+                         round(d.latency.total, 12))
+        sys_old = build_system(table, n_cams=5, frames=12, workload="jaad")
+        old = [key(d) for d in sys_old.edge.subscribe(
+            SubscribeSpec("app", "cam0", 0.0, 100.0, 0.1, 0.9))]
+        sys_new = build_system(table, n_cams=5, frames=12, workload="jaad")
+        sess, sub = open_sub(sys_new, "cam0")
+        new = []
+        while (batch := sub.poll(max_frames=2)):   # = shim's fetch_window
+            new.extend(key(d) for d in batch.frames)
+        assert old == new
+        sess.close()
+
+    def test_v1_unsubscribe_stops_v2_backed_stream(self, table):
+        sys = build_system(table)
+        it = sys.edge.subscribe(SubscribeSpec("app", "cam0", 0.0, 100.0,
+                                              0.1, 0.9))
+        next(it)
+        assert sys.edge.unsubscribe("app", "cam0") is Status.OK
+        assert len(list(it)) <= 1                  # current fetch drains only
+
+
+class TestBatchConsumers:
+    def test_camera_batcher_consumes_frame_batches(self, table):
+        sys = build_system(table, n_cams=2, frames=10)
+        sess, sub = open_sub(sys, ["cam0", "cam1"])
+        batcher = CameraBatcher(batch=4)
+        model_batches, delivered = [], 0
+        while (batch := sub.poll(max_frames=8)):
+            delivered += len(batch.delivered)
+            model_batches.extend(batcher.push_batch(batch))
+        assert len(model_batches) == delivered // 4
+        assert all(b.shape[0] == 4 for b in model_batches)
+        sess.close()
+
+    def test_detect_batch_runs_per_camera_background(self, table):
+        sys = build_system(table, n_cams=2, frames=10)
+        bgs = {f"cam{i}": SyntheticCamera(
+            CameraConfig(camera_id=f"cam{i}", dynamics="medium",
+                         seed=7)).background for i in range(2)}
+        sess, sub = open_sub(sys, ["cam0", "cam1"])
+        batch = sub.poll(max_frames=6)
+        pairs = det.detect_batch(batch, lambda d: bgs[d.camera_id])
+        assert len(pairs) == len(batch.delivered)
+        for d, boxes in pairs:
+            assert boxes.ndim == 2 and boxes.shape[1] == 4
+        sess.close()
