@@ -13,7 +13,9 @@ from repro.core.characterization import CharacterizationTable, characterize
 from repro.data.camera import CameraConfig, SyntheticCamera
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/bench")
-CACHE = os.path.join(RESULTS_DIR, "_tables.pkl")
+# v2: wire sizes come from the batched engine's calibrated proxy; stale
+# seed-era pickles (exact-zlib sizes) must not be mixed in.
+CACHE = os.path.join(RESULTS_DIR, "_tables_v2.pkl")
 
 
 def ensure_dir() -> None:

@@ -53,14 +53,16 @@ def main() -> None:
             truth[cid][round(ts, 6)] = gt
 
     h, w = backgrounds["cam0"].shape[:2]
+    bg_memos = {cid: K.TransformMemo(bg) for cid, bg in backgrounds.items()}
 
     def bg_for(d):
         """Per-camera background, degraded the same way the knob degraded
-        the delivered frame (the subscriber's model follows the stream)."""
-        bg = backgrounds[d.camera_id]
+        the delivered frame (the subscriber's model follows the stream).
+        Memoized per knob setting -- the degradation is recomputed only
+        when the controller actually moves the knobs, not per frame."""
         if d.knob_index >= 0:
-            return K.transform_frame(bg, table.settings[d.knob_index])
-        return bg
+            return bg_memos[d.camera_id].get(table.settings[d.knob_index])
+        return backgrounds[d.camera_id]
 
     # one session, ONE subscription spanning all five cameras
     client = MezClient(system)

@@ -13,7 +13,10 @@ from repro.core.characterization import (CharacterizationTable,
 from repro.core.controller import (ControllerConfig, ControllerState,
                                    JaxControllerTables, LatencyController,
                                    controller_init, controller_step)
-from repro.core.knobs import KnobSetting, apply_knobs, enumerate_settings, wire_size
+from repro.core.grid_engine import (GridCharacterization, WireSizeProxy,
+                                    run_grid)
+from repro.core.knobs import (KnobSetting, TransformMemo, apply_knobs,
+                              enumerate_settings, wire_size)
 from repro.core.log import (FrameLog, HostLog, LogSegmentStore, frame_log_append,
                             frame_log_init, frame_log_point_query,
                             frame_log_range_query)
@@ -30,5 +33,6 @@ __all__ = [
     "frame_log_append", "frame_log_init", "frame_log_point_query",
     "frame_log_range_query", "EventKind", "FrameBatch", "QosUpdate",
     "SessionEvent", "SessionedMessagingSystem", "SubscriptionState",
-    "MezClient", "Session", "Subscription",
+    "MezClient", "Session", "Subscription", "GridCharacterization",
+    "WireSizeProxy", "run_grid", "TransformMemo",
 ]

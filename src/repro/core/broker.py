@@ -37,6 +37,7 @@ from repro.core.api import (BrokerDown, DeliveredFrame, EventKind, FrameBatch,
 from repro.core.channel import WirelessChannel
 from repro.core.characterization import CharacterizationTable, LatencyRegression
 from repro.core.controller import ControllerConfig, LatencyController
+from repro.core import knobs as K
 from repro.core.knobs import apply_knobs, wire_size
 from repro.core.log import HostLog, LogSegmentStore
 
@@ -69,8 +70,41 @@ class CamBroker:
         self.store = store
         self.crashed = False
         self._last_sent: np.ndarray | None = None
-        self.background: np.ndarray | None = None
+        self._background: np.ndarray | None = None
+        self._bg_memo: K.TransformMemo | None = None
+        # (timestamp, transform key) -> (payload, wire_bytes): fan-out of one
+        # camera to several subscriptions reuses the knob transform + deflate
+        # instead of recomputing them per fetch (simulated latency numbers
+        # are untouched -- the cost model still charges the camera's
+        # per-frame modification overhead).
+        self._payload_cache: dict[tuple, tuple[np.ndarray, int]] = {}
+        self.payload_cache_hits = 0
         self.infeasible_reported = 0
+
+    # -- background model (knob4 + subscriber-side degradation) ------------------
+    @property
+    def background(self) -> np.ndarray | None:
+        return self._background
+
+    @background.setter
+    def background(self, bg: np.ndarray | None) -> None:
+        self._background = bg
+        self._bg_memo = K.TransformMemo(bg) if bg is not None else None
+        self._payload_cache.clear()
+
+    def degraded_background(self, setting: K.KnobSetting) -> np.ndarray | None:
+        """The camera's background model pushed through ``setting``'s
+        transform pipeline, memoized per (resolution, colorspace, blur).
+
+        Subscribers run background subtraction against the received
+        stream's statistics, so they need the background degraded exactly
+        like the frames -- computing that once per knob setting instead of
+        once per frame is the point of the memo (the paper's knob pipeline
+        budget is <10 ms/frame; a redundant background transform alone
+        costs ~2 ms)."""
+        if self._bg_memo is None:
+            return None
+        return self._bg_memo.get(setting)
 
     # -- internal APIs (paper Fig. 9) -------------------------------------------
     def set_target(self, latency: float, accuracy: float,
@@ -138,8 +172,7 @@ class CamBroker:
             if max_frames is not None and len(out) >= max_frames:
                 break
             if setting is not None:
-                r = apply_knobs(frame, setting, background=self.background,
-                                last_sent=self._last_sent)
+                r = self._apply_knobs_cached(ts, frame, setting)
                 controller_cost = r.overhead_ms * 1e-3
                 if r.frame is None:
                     out.append(DeliveredFrame(
@@ -163,6 +196,36 @@ class CamBroker:
                 knob_idx, infeasible))
         return out
 
+    def _apply_knobs_cached(self, ts: float, frame: np.ndarray,
+                            setting: K.KnobSetting) -> K.KnobResult:
+        """``apply_knobs`` with the transformed payload memoized per
+        (timestamp, transform key).
+
+        The knob5 drop decision is stateful (it compares against this
+        camera's last *sent* frame) and stays per-call; only the pure
+        transform + deflate of a surviving frame is reused, so several
+        subscriptions fanning out from one camera pay the image pipeline
+        once.  Numerically identical to calling ``apply_knobs`` directly.
+        """
+        if K.frame_difference(frame, self._last_sent,
+                              K.DIFF_THRESHOLDS[setting.diff]):
+            return K.KnobResult(None, 0, setting.overhead_ms)
+        key = (ts, setting.resolution, setting.colorspace, setting.blur,
+               setting.artifact)
+        hit = self._payload_cache.get(key)
+        if hit is not None:
+            self.payload_cache_hits += 1
+            payload, nbytes = hit
+        else:
+            r = apply_knobs(frame, dataclasses.replace(setting, diff=0),
+                            background=self.background, last_sent=None)
+            assert r.frame is not None
+            payload, nbytes = r.frame, r.wire_bytes
+            if len(self._payload_cache) >= 512:       # bounded: ring-ish evict
+                self._payload_cache.pop(next(iter(self._payload_cache)))
+            self._payload_cache[key] = (payload, nbytes)
+        return K.KnobResult(payload, nbytes, setting.overhead_ms)
+
     # -- fault tolerance -----------------------------------------------------------
     def crash(self) -> None:
         self.crashed = True
@@ -179,6 +242,7 @@ class CamBroker:
                 self.log = restored
         self.crashed = False
         self._last_sent = None
+        self._payload_cache.clear()
 
 
 @dataclasses.dataclass

@@ -12,11 +12,24 @@ The controller (Algorithm 1) consumes three artifacts, all built here:
      index carried alongside the prefix-max, so lookup 2 is O(1).
 
 ``characterize()`` sweeps the knob grid over a calibration clip from a
-``SyntheticCamera``, measuring *actual* wire sizes (deflate) and *actual*
-normalized F1 (blob detector vs. ground truth), mirroring the paper's offline
-measurement campaign ("assumed to be available from prior characterization").
-Settings with normalized F1 < min_accuracy are excluded, as the paper excludes
-combos under 90%.
+``SyntheticCamera``, measuring wire sizes and normalized F1 (blob detector
+vs. ground truth), mirroring the paper's offline measurement campaign
+("assumed to be available from prior characterization").  Settings with
+normalized F1 < min_accuracy are excluded, as the paper excludes combos
+under 90%.
+
+Two engines share the semantics:
+
+``engine="batched"`` (default)  the device-resident grid sweep in
+    ``core.grid_engine``: transforms + detector scoring batched over the
+    settings dimension, wire sizes from the calibrated byte-delta proxy
+    (zlib runs once per transform combo instead of once per setting-frame).
+    Minutes -> seconds: cheap enough to re-run on live QoS renegotiation.
+
+``engine="reference"``  the seed per-frame NumPy path, kept verbatim as the
+    oracle (exact zlib sizes, host detector).  Also the fallback for
+    knob4 characterization (``include_artifact=True``) and non-BGR or
+    odd-geometry cameras, which the device grid does not cover.
 """
 
 from __future__ import annotations
@@ -95,83 +108,9 @@ class CharacterizationTable:
         }
 
 
-def characterize(camera_factory, *, clip_len: int = 24,
-                 min_accuracy: float = 0.90,
-                 include_artifact: bool = False,
-                 detector_thresh: float = 28.0) -> CharacterizationTable:
-    """Sweep the knob grid on a calibration clip; build the tables.
-
-    ``camera_factory()`` must return a fresh, identically-seeded
-    ``SyntheticCamera`` so every knob setting sees the same clip.
-
-    Fast path: knob5 (frame differencing) only *drops* frames -- it never
-    changes surviving pixels -- so per-frame detections are computed once per
-    (resolution, colorspace, blur[, artifact]) combo and reused across all
-    diff thresholds; per-threshold drop patterns are computed once on the raw
-    stream.  This turns an O(|grid| * clip) detector sweep into
-    O(|grid|/n_diff * clip), matching how the paper's own campaign would be
-    run (differencing is a transport decision, not an image transform).
-    """
-    cam = camera_factory()
-    bg = cam.background
-    clip = [cam.next_frame() for _ in range(clip_len)]
-    h, w = bg.shape[:2]
-    baseline = []
-    for _, frame, gt in clip:
-        boxes = det.detect(frame, bg, thresh=detector_thresh, scale_to=(h, w))
-        baseline.append((gt, boxes))
-
-    settings = K.enumerate_settings(include_artifact=include_artifact)
-
-    # -- drop patterns per diff threshold (depends only on the raw stream) ----
-    drop_patterns: dict[int, np.ndarray] = {}
-    for di, thresh in enumerate(K.DIFF_THRESHOLDS):
-        drops = np.zeros(clip_len, bool)
-        last_sent = None
-        for fi, (_, frame, _) in enumerate(clip):
-            if K.frame_difference(frame, last_sent, thresh):
-                drops[fi] = True
-            else:
-                last_sent = frame
-        drop_patterns[di] = drops
-
-    # -- per-transform detections (diff dimension factored out) ---------------
-    cache: dict[tuple[int, int, int, int], tuple[list[np.ndarray], np.ndarray]] = {}
-
-    def transform_results(s: K.KnobSetting):
-        key = (s.resolution, s.colorspace, s.blur, s.artifact)
-        if key in cache:
-            return cache[key]
-        tkey = K.KnobSetting(s.resolution, s.colorspace, s.blur, s.artifact, 0)
-        bg_t = K.transform_frame(bg, tkey)   # subscriber's degraded background
-        dets: list[np.ndarray] = []
-        wires = np.zeros(clip_len)
-        for fi, (_, frame, _) in enumerate(clip):
-            r = K.apply_knobs(frame, dataclasses.replace(tkey, diff=0),
-                              background=bg, last_sent=None)
-            assert r.frame is not None
-            wires[fi] = r.wire_bytes
-            dets.append(det.detect(r.frame, bg_t, thresh=detector_thresh,
-                                   scale_to=(h, w)))
-        cache[key] = (dets, wires)
-        return cache[key]
-
-    sizes = np.zeros(len(settings))
-    accs = np.zeros(len(settings))
-    for si, setting in enumerate(settings):
-        dets, wires = transform_results(setting)
-        drops = drop_patterns[setting.diff]
-        results = []
-        kept_wires = []
-        for fi, (_, _, gt) in enumerate(clip):
-            if drops[fi]:
-                results.append((gt, np.zeros((0, 4), np.float32)))
-            else:
-                results.append((gt, dets[fi]))
-                kept_wires.append(wires[fi])
-        sizes[si] = float(np.median(kept_wires)) if kept_wires else 0.0
-        accs[si] = det.normalized_f1(results, baseline)
-
+def _build_table(settings, sizes: np.ndarray, accs: np.ndarray,
+                 min_accuracy: float) -> CharacterizationTable:
+    """keep/sort/prefix-max assembly, shared by both engines."""
     keep = (accs >= min_accuracy) & (sizes > 0)
     settings_kept = tuple(s for s, k in zip(settings, keep) if k)
     sizes_k = sizes[keep]
@@ -200,3 +139,165 @@ def characterize(camera_factory, *, clip_len: int = 24,
         acc_by_setting=accs_k,
         size_by_setting=sizes_k,
     )
+
+
+def characterize(camera_factory, *, clip_len: int = 24,
+                 min_accuracy: float = 0.90,
+                 include_artifact: bool = False,
+                 detector_thresh: float = 28.0,
+                 engine: str = "auto") -> CharacterizationTable:
+    """Sweep the knob grid on a calibration clip; build the tables.
+
+    ``camera_factory()`` must return a fresh, identically-seeded
+    ``SyntheticCamera`` so every knob setting sees the same clip.
+
+    ``engine`` selects the sweep implementation: ``"batched"`` (the
+    device-resident grid engine), ``"reference"`` (the per-frame NumPy
+    oracle), or ``"auto"`` (batched whenever the camera geometry and knob
+    subset support it -- knob4 and non-BGR cameras fall back to reference).
+    """
+    cam = camera_factory()
+    bg = cam.background
+    clip = [cam.next_frame() for _ in range(clip_len)]
+
+    if engine == "auto":
+        batched_ok = (not include_artifact and bg.ndim == 3
+                      and bg.shape[2] == 3
+                      and bg.shape[0] % 2 == 0 and bg.shape[1] % 2 == 0)
+        engine = "batched" if batched_ok else "reference"
+    if engine == "batched":
+        if include_artifact:
+            raise ValueError(
+                "the batched engine does not characterize knob4 "
+                "(artifact removal) -- use engine='reference' or 'auto'")
+        settings, sizes, accs = _sweep_batched(
+            bg, clip, detector_thresh=detector_thresh)
+    elif engine == "reference":
+        settings, sizes, accs = _sweep_reference(
+            bg, clip, include_artifact=include_artifact,
+            detector_thresh=detector_thresh)
+    else:
+        raise ValueError(f"unknown characterization engine {engine!r}")
+    return _build_table(settings, sizes, accs, min_accuracy)
+
+
+# =============================================================================
+# Batched engine (device grid sweep + wire-size proxy)
+# =============================================================================
+
+
+def _sweep_batched(bg, clip, *, detector_thresh: float):
+    from repro.core import grid_engine
+
+    grid = grid_engine.run_grid(bg, [f for _, f, _ in clip],
+                                detector_thresh=detector_thresh)
+    clip_len = len(clip)
+    settings = K.enumerate_settings(include_artifact=False)
+
+    # per-frame match counts per transform combo, computed once and summed
+    # per setting according to its drop pattern (knob5 never changes
+    # surviving pixels, so detections are shared across diff thresholds)
+    counts: dict[tuple[int, int, int], np.ndarray] = {}
+    for combo, boxes in grid.dets.items():
+        counts[combo] = np.asarray(
+            [det.match_f1(gt, boxes[fi]) for fi, (_, _, gt) in enumerate(clip)],
+            np.int64)
+    gt_sizes = np.asarray([len(gt) for _, _, gt in clip], np.int64)
+    base = counts[(0, 0, 0)].sum(axis=0)
+    base_f1 = det.f1_from_counts(*base)
+
+    drop_patterns = {di: grid.drop_pattern(thresh)
+                     for di, thresh in enumerate(K.DIFF_THRESHOLDS)}
+
+    sizes = np.zeros(len(settings))
+    accs = np.zeros(len(settings))
+    for si, s in enumerate(settings):
+        combo = (s.resolution, s.colorspace, s.blur)
+        drops = drop_patterns[s.diff]
+        kept = ~drops
+        c = counts[combo][kept].sum(axis=0)
+        # dropped frames: the application never saw them -> all GT becomes FN
+        tp, fp, fn = int(c[0]), int(c[1]), int(c[2] + gt_sizes[drops].sum())
+        f1 = det.f1_from_counts(tp, fp, fn)
+        accs[si] = f1 / base_f1 if base_f1 > 0 else 0.0
+        kept_sizes = grid.sizes[combo][kept[:clip_len]]
+        sizes[si] = float(np.median(kept_sizes)) if kept_sizes.size else 0.0
+    return settings, sizes, accs
+
+
+# =============================================================================
+# Reference engine (the seed per-frame NumPy path, kept as the oracle)
+# =============================================================================
+
+
+def _sweep_reference(bg, clip, *, include_artifact: bool,
+                     detector_thresh: float):
+    """Per-frame sweep with exact zlib wire sizes and the host detector.
+
+    Fast path: knob5 (frame differencing) only *drops* frames -- it never
+    changes surviving pixels -- so per-frame detections are computed once per
+    (resolution, colorspace, blur[, artifact]) combo and reused across all
+    diff thresholds; per-threshold drop patterns are computed once on the raw
+    stream.  This turns an O(|grid| * clip) detector sweep into
+    O(|grid|/n_diff * clip), matching how the paper's own campaign would be
+    run (differencing is a transport decision, not an image transform).
+    """
+    clip_len = len(clip)
+    h, w = bg.shape[:2]
+    baseline = []
+    for _, frame, gt in clip:
+        boxes = det.detect(frame, bg, thresh=detector_thresh, scale_to=(h, w))
+        baseline.append((gt, boxes))
+
+    settings = K.enumerate_settings(include_artifact=include_artifact)
+
+    # -- drop patterns per diff threshold (depends only on the raw stream) ----
+    drop_patterns: dict[int, np.ndarray] = {}
+    for di, thresh in enumerate(K.DIFF_THRESHOLDS):
+        drops = np.zeros(clip_len, bool)
+        last_sent = None
+        for fi, (_, frame, _) in enumerate(clip):
+            if K.frame_difference(frame, last_sent, thresh):
+                drops[fi] = True
+            else:
+                last_sent = frame
+        drop_patterns[di] = drops
+
+    # -- per-transform detections (diff dimension factored out) ---------------
+    cache: dict[tuple[int, int, int, int], tuple[list[np.ndarray], np.ndarray]] = {}
+    bg_memo = K.TransformMemo(bg)
+
+    def transform_results(s: K.KnobSetting):
+        key = (s.resolution, s.colorspace, s.blur, s.artifact)
+        if key in cache:
+            return cache[key]
+        tkey = K.KnobSetting(s.resolution, s.colorspace, s.blur, s.artifact, 0)
+        bg_t = bg_memo.get(tkey)             # subscriber's degraded background
+        dets: list[np.ndarray] = []
+        wires = np.zeros(clip_len)
+        for fi, (_, frame, _) in enumerate(clip):
+            r = K.apply_knobs(frame, dataclasses.replace(tkey, diff=0),
+                              background=bg, last_sent=None)
+            assert r.frame is not None
+            wires[fi] = r.wire_bytes
+            dets.append(det.detect(r.frame, bg_t, thresh=detector_thresh,
+                                   scale_to=(h, w)))
+        cache[key] = (dets, wires)
+        return cache[key]
+
+    sizes = np.zeros(len(settings))
+    accs = np.zeros(len(settings))
+    for si, setting in enumerate(settings):
+        dets, wires = transform_results(setting)
+        drops = drop_patterns[setting.diff]
+        results = []
+        kept_wires = []
+        for fi, (_, _, gt) in enumerate(clip):
+            if drops[fi]:
+                results.append((gt, np.zeros((0, 4), np.float32)))
+            else:
+                results.append((gt, dets[fi]))
+                kept_wires.append(wires[fi])
+        sizes[si] = float(np.median(kept_wires)) if kept_wires else 0.0
+        accs[si] = det.normalized_f1(results, baseline)
+    return settings, sizes, accs

@@ -24,8 +24,36 @@ import numpy as np
 
 from repro.core.api import DeliveredFrame
 
-__all__ = ["detect", "detect_batch", "iou_matrix", "match_f1",
-           "normalized_f1"]
+__all__ = ["detect", "detect_batch", "boxes_from_labels",
+           "adaptive_threshold", "dilate_cross", "iou_matrix",
+           "match_f1", "normalized_f1"]
+
+
+def adaptive_threshold(diff: np.ndarray, thresh: float,
+                       axis=None) -> np.ndarray:
+    """Adaptive detector threshold (scalar or batched along ``axis``).
+
+    Blur/downscale knobs reduce object contrast, so a fixed threshold goes
+    blind on degraded streams.  Track the stream's own contrast (45% of the
+    near-peak diff) but never drop below the robust noise floor (median
+    |diff| estimates sensor noise + texture mismatch).  One quantile pass
+    serves both statistics; shared by ``detect`` and the batched
+    characterization engine so the two paths cannot desynchronize.
+    """
+    med, pct = np.percentile(diff, [50.0, 99.8], axis=axis)
+    return np.maximum(3.0 * med + 4.0, np.minimum(thresh, 0.45 * pct))
+
+
+def dilate_cross(mask: np.ndarray) -> np.ndarray:
+    """Cheap 4-neighbour (cross) dilation over a [..., gh, gw] bool array,
+    so movers aren't speckled.  Shared by ``detect`` and the batched
+    characterization engine."""
+    m = mask.copy()
+    m[..., 1:, :] |= mask[..., :-1, :]
+    m[..., :-1, :] |= mask[..., 1:, :]
+    m[..., :, 1:] |= mask[..., :, :-1]
+    m[..., :, :-1] |= mask[..., :, 1:]
+    return m
 
 
 def _to_gray(frame: np.ndarray) -> np.ndarray:
@@ -90,42 +118,50 @@ def detect(frame: np.ndarray, background: np.ndarray, *,
         xs = np.clip((np.arange(gw) * bw / gw).astype(np.int64), 0, bw - 1)
         bg = bg[ys][:, xs]
     diff = np.abs(g - bg)
-    # Adaptive threshold: blur/downscale knobs reduce object contrast, so a
-    # fixed threshold goes blind on degraded streams.  Track the stream's own
-    # contrast (45% of the near-peak diff) but never drop below the robust
-    # noise floor (median |diff| estimates sensor noise + texture mismatch).
-    noise_floor = 3.0 * float(np.median(diff)) + 4.0
-    contrast = 0.45 * float(np.percentile(diff, 99.8))
-    eff_thresh = max(noise_floor, min(thresh, contrast))
+    eff_thresh = float(adaptive_threshold(diff, thresh))
     mask = diff > eff_thresh
-    # 3x3 dilation
-    m = mask.copy()
-    m[1:, :] |= mask[:-1, :]; m[:-1, :] |= mask[1:, :]
-    m[:, 1:] |= mask[:, :-1]; m[:, :-1] |= mask[:, 1:]
-    labels, n = _label(m)
+    m = dilate_cross(mask)
+    labels, _ = _label(m)
     sy = (scale_to[0] / gh) if scale_to else 1.0
     sx = (scale_to[1] / gw) if scale_to else 1.0
     # min_area is defined in ORIGINAL-geometry pixels; convert to this grid.
     min_px = max(2.0, min_area / (sy * sx))
+    return boxes_from_labels(labels, diff, background_label=0, sy=sy, sx=sx,
+                             min_px=min_px)
+
+
+def boxes_from_labels(labels: np.ndarray, diff: np.ndarray, *,
+                      background_label: int, sy: float = 1.0, sx: float = 1.0,
+                      min_px: float = 2.0) -> np.ndarray:
+    """Component bounding boxes from a labeled mask, with half-maximum
+    refinement.  Shared by the host detector and the batched
+    characterization engine (``core.grid_engine``), whose device labeling
+    emits min-flat-index component ids with ``gh*gw`` as background.
+
+    Components are emitted in ascending label order, so the host path
+    (labels 1..n) and the device path (min-pixel-index labels) produce
+    identical box lists for identical component partitions.
+    """
+    gh, gw = labels.shape
+    flat = labels.ravel()
+    fg = np.flatnonzero(flat != background_label)
     boxes = []
-    if n:
-        flat = labels.ravel()
-        order = np.argsort(flat, kind="stable")
+    if fg.size:
+        order = fg[np.argsort(flat[fg], kind="stable")]
         sorted_lab = flat[order]
-        starts = np.searchsorted(sorted_lab, np.arange(1, n + 1), side="left")
-        ends = np.searchsorted(sorted_lab, np.arange(1, n + 1), side="right")
+        starts = np.flatnonzero(np.r_[True, sorted_lab[1:] != sorted_lab[:-1]])
+        ends = np.append(starts[1:], sorted_lab.size)
         ys_all, xs_all = np.divmod(order, gw)
         diff_flat = diff.ravel()[order]
-        for i in range(n):
-            sl = slice(starts[i], ends[i])
-            if ends[i] - starts[i] < min_px:
+        for s0, e0 in zip(starts, ends):
+            if e0 - s0 < min_px:
                 continue
-            ys, xs = ys_all[sl], xs_all[sl]
+            ys, xs = ys_all[s0:e0], xs_all[s0:e0]
             # Half-maximum box refinement: blur (and the dilation above)
             # symmetrically inflates a component's support, which tanks IoU
             # for small objects.  The true object boundary sits near half the
             # component's peak contrast, so bound the box on those pixels.
-            d = diff_flat[sl]
+            d = diff_flat[s0:e0]
             peak = np.percentile(d, 95)
             strong = d >= 0.5 * peak
             if strong.sum() >= 2:

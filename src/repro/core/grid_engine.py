@@ -1,0 +1,448 @@
+"""Batched device-side characterization engine (the knob grid in one sweep).
+
+The seed ``characterize()`` walked ~450 settings x calibration frames one at
+a time through NumPy transforms, zlib, and an iterative host detector --
+minutes of wall clock for a table the paper assumes "available from prior
+characterization".  This engine evaluates the whole grid as device-resident
+batches so characterization is cheap enough to re-run live on QoS
+renegotiation (CANS-style online self-configuration):
+
+  1. **Transform stage** -- the knob pipeline (colorspace -> resize -> blur)
+     for every (resolution, colorspace, blur) combo runs as batched einsums
+     over operator matrices from ``kernels.frame_knobs.build_transform_plan``
+     (one ``[n_settings, frames, ...]`` pass per (resolution, colorspace)
+     group).  On TPU the fused Pallas kernel ``frame_knob_grid`` runs
+     instead; on CPU its XLA twin compiles to the same math batched over the
+     settings dimension.
+  2. **Wire-size proxy** -- per-payload byte-delta statistics (computed in
+     the same pass) are calibrated against zlib level-1 on one frame per
+     combo, then predict the wire size of every (setting, frame).  Deflate
+     runs ~75 times per characterization instead of ~1800; the stream path
+     (``CamBroker.fetch`` -> ``knobs.wire_size``) keeps exact zlib for the
+     frames actually sent.
+  3. **Detector scoring** -- background diff and the proxy features run
+     batched over the settings dimension on device; thresholding, dilation,
+     and component labeling run vectorized over the ``[settings, frames]``
+     batch (scipy's C labeling on CPU; the pointer-jumping min-propagation
+     kernel ``_label_group`` on TPU, where host round-trips are the enemy).
+     Box extraction is segment-vectorized per frame (lexsort + reduceat),
+     semantically identical to ``detector.boxes_from_labels``.  The
+     adaptive threshold's median/percentile use NumPy's introselect (XLA's
+     sort is ~10x slower here) with the same numerics as
+     ``detector.detect``.
+  4. **knob5 change metric** -- pairwise changed-pixel counts between clip
+     frames in one device pass; drop patterns for every DIFF_THRESHOLD are
+     derived from the matrix with ``frame_difference``'s exact semantics.
+
+``characterization.characterize`` drives this engine by default and keeps
+the seed per-frame NumPy path as the reference oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import detector as det
+from repro.core import knobs as K
+from repro.kernels import frame_knobs as FK
+
+__all__ = ["GridCharacterization", "WireSizeProxy", "run_grid",
+           "PIXEL_DELTA"]
+
+PIXEL_DELTA = 8.0        # knobs.frame_difference's noise-robust change delta
+_FRAME_BUCKET = 16       # frame-axis padding so jit caches are shared
+_MIN_WIRE_BYTES = 16.0   # proxy floor: a deflate stream is never smaller
+
+
+# =============================================================================
+# Device stages
+# =============================================================================
+
+
+def _payload_gray(payload: jax.Array) -> jax.Array:
+    """Detector gray plane of a [..., P, oh, ow] payload batch (the same
+    channel weights as ``detector._to_gray``; packed yuv/gray payloads are
+    their own gray plane)."""
+    pf = payload.astype(jnp.float32)
+    if payload.shape[-3] == 3:
+        return (0.114 * pf[..., 0, :, :] + 0.587 * pf[..., 1, :, :]
+                + 0.299 * pf[..., 2, :, :])
+    return pf[..., 0, :, :]
+
+
+@functools.partial(jax.jit, static_argnames=("cs",))
+def _transform_group(frames: jax.Array, ry, rx, bys, bxs, cs: int):
+    """XLA twin of the Pallas ``frame_knob_grid``, batched over (settings,
+    frames): payload u8 [S,F,P,oh,ow], proxy feats [S,F,6], and the
+    detector's background diff [S,F-1,gh,gw] (frame 0 is the background).
+
+    The colorspace stage is the kernel's own ``_to_planes`` vmapped over the
+    clip, so the twin cannot drift from the Pallas math.
+    """
+    planes = jax.vmap(lambda fr: FK._to_planes(fr, cs))(frames)   # [F,P,Hc,W]
+
+    rs = jnp.einsum("ah,fphw->fpaw", ry, planes)                  # knob1
+    rs = jnp.einsum("bw,fpaw->fpab", rx, rs)
+    rs = jnp.clip(jnp.round(rs), 0, 255)
+    bl = jnp.einsum("sab,fpbw->sfpaw", bys, rs)                   # knob3
+    bl = jnp.einsum("scw,sfpaw->sfpac", bxs, bl)
+    payload = jnp.clip(jnp.round(bl), 0, 255).astype(jnp.uint8)
+
+    feats = FK.proxy_features(payload)
+    gray = _payload_gray(payload)
+    diff = jnp.abs(gray[:, 1:] - gray[:, :1])
+    return payload, feats, diff
+
+
+@jax.jit
+def _payload_diff(payload: jax.Array):
+    """Background diff from a Pallas-produced payload batch (TPU path)."""
+    gray = _payload_gray(payload)
+    return jnp.abs(gray[:, 1:] - gray[:, :1])
+
+
+@jax.jit
+def _label_group(diff: jax.Array, eff: jax.Array) -> jax.Array:
+    """Threshold -> cross dilation -> 4-connected components, batched.
+
+    Labels are min-flat-index per component (the same fixpoint as
+    ``detector._label``); background pixels carry the ``gh*gw`` sentinel.
+    Pointer jumping (label indirection) accelerates min-propagation from
+    O(component diameter) to O(log diameter) rounds.
+    """
+    s, f, gh, gw = diff.shape
+    mask = diff > eff[:, :, None, None]
+    fr = jnp.zeros_like(mask[:, :, :1, :])
+    fc = jnp.zeros_like(mask[:, :, :, :1])
+    m = mask
+    m = m | jnp.concatenate([fr, mask[:, :, :-1, :]], axis=2)
+    m = m | jnp.concatenate([mask[:, :, 1:, :], fr], axis=2)
+    m = m | jnp.concatenate([fc, mask[:, :, :, :-1]], axis=3)
+    m = m | jnp.concatenate([mask[:, :, :, 1:], fc], axis=3)
+
+    big = gh * gw
+    iota = jnp.arange(big, dtype=jnp.int32).reshape(gh, gw)
+    mm = m.reshape(s * f, gh, gw)
+    ids0 = jnp.where(mm, iota[None], big)
+    big_row = jnp.full((s * f, 1, gw), big, jnp.int32)
+    big_col = jnp.full((s * f, gh, 1), big, jnp.int32)
+    pad_tail = jnp.full((s * f, 1), big, jnp.int32)
+
+    def prop(ids):
+        up = jnp.concatenate([big_row, ids[:, :-1, :]], axis=1)
+        down = jnp.concatenate([ids[:, 1:, :], big_row], axis=1)
+        left = jnp.concatenate([big_col, ids[:, :, :-1]], axis=2)
+        right = jnp.concatenate([ids[:, :, 1:], big_col], axis=2)
+        n = jnp.minimum(jnp.minimum(jnp.minimum(ids, up), down),
+                        jnp.minimum(left, right))
+        n = jnp.where(mm, n, big)
+        flat = jnp.concatenate([n.reshape(s * f, -1), pad_tail], axis=1)
+        jumped = jnp.take_along_axis(
+            flat, n.reshape(s * f, -1), axis=1).reshape(n.shape)
+        return jnp.where(mm, jnp.minimum(n, jumped), big)
+
+    def cond(carry):
+        ids, prev = carry
+        return jnp.any(ids != prev)
+
+    def body(carry):
+        ids, _ = carry
+        return prop(ids), ids
+
+    ids, _ = jax.lax.while_loop(cond, body, (prop(ids0), ids0))
+    return ids.reshape(s, f, gh, gw)
+
+
+@jax.jit
+def _change_counts(frames: jax.Array) -> jax.Array:
+    """Pairwise knob5 change counts: out[i, j] = #pixels of frame i whose
+    channel-mean abs-difference from frame j exceeds PIXEL_DELTA."""
+    f = frames.astype(jnp.float32)
+
+    def row(i):
+        d = jnp.abs(f - f[i]).mean(axis=-1)
+        return (d > PIXEL_DELTA).sum(axis=(1, 2)).astype(jnp.int32)
+
+    n = frames.shape[0]
+    return jnp.transpose(jax.lax.map(row, jnp.arange(n)))
+
+
+# =============================================================================
+# Wire-size proxy (byte-delta features -> calibrated deflate estimate)
+# =============================================================================
+
+
+@dataclasses.dataclass
+class WireSizeProxy:
+    """Per-colorspace linear model: zlib_level1_bytes ~= coeffs . [n_bytes,
+    feats(6), 1].  Calibrated per characterization run on one real deflate
+    measurement per (resolution, colorspace, blur) combo, so the estimate
+    tracks the scene's actual texture statistics."""
+    coeffs: np.ndarray                  # [3, 8]
+    median_rel_err: float               # on the calibration pairs
+    max_rel_err: float
+
+    def predict(self, cs: int, payload_bytes: int, feats: np.ndarray
+                ) -> np.ndarray:
+        x = np.concatenate([
+            np.full(feats.shape[:-1] + (1,), float(payload_bytes)),
+            np.asarray(feats, np.float64),
+            np.ones(feats.shape[:-1] + (1,))], axis=-1)
+        return np.maximum(x @ self.coeffs[cs], _MIN_WIRE_BYTES)
+
+
+def _fit_proxy(samples: list[tuple[int, int, np.ndarray, int]]
+               ) -> WireSizeProxy:
+    """samples: (cs, payload_bytes, feats[6], zlib_bytes) calibration rows."""
+    coeffs = np.zeros((3, FK.N_PROXY_FEATURES + 2))
+    rels: list[float] = []
+    for cs in range(3):
+        rows = [s for s in samples if s[0] == cs]
+        if not rows:
+            continue
+        a = np.stack([np.concatenate([[n], f, [1.0]]) for _, n, f, _ in rows])
+        y = np.asarray([z for *_, z in rows], np.float64)
+        coeffs[cs], *_ = np.linalg.lstsq(a, y, rcond=None)
+        pred = np.maximum(a @ coeffs[cs], _MIN_WIRE_BYTES)
+        rels.extend(np.abs(pred - y) / np.maximum(y, 1.0))
+    rels_arr = np.asarray(rels) if rels else np.zeros(1)
+    return WireSizeProxy(coeffs, float(np.median(rels_arr)),
+                         float(rels_arr.max()))
+
+
+def _wire_payload(payload_sf: np.ndarray, cs: int) -> np.ndarray:
+    """Planes -> the exact on-the-wire byte layout (interleaved for BGR)."""
+    if cs == FK.CS_BGR:
+        return np.ascontiguousarray(np.moveaxis(payload_sf, 0, -1))
+    return np.ascontiguousarray(payload_sf[0])
+
+
+# =============================================================================
+# The engine
+# =============================================================================
+
+
+@dataclasses.dataclass
+class GridCharacterization:
+    """Everything ``characterize()`` needs, for every (resolution,
+    colorspace, blur) combo over the calibration clip."""
+    combos: tuple[tuple[int, int, int], ...]
+    dets: dict[tuple[int, int, int], list[np.ndarray]]   # boxes, orig coords
+    sizes: dict[tuple[int, int, int], np.ndarray]        # [F] proxy bytes
+    change_counts: np.ndarray                            # [F, F] int32
+    pixels: int                                          # H*W of the camera
+    proxy: WireSizeProxy
+    zlib_calls: int
+
+    def change_fraction(self, i: int, j: int) -> float:
+        """frame_difference's dissimilarity between clip frames i and j,
+        bit-equal to the host computation (integer count / pixel count)."""
+        return float(self.change_counts[i, j]) / self.pixels
+
+    def drop_pattern(self, threshold: float) -> np.ndarray:
+        """knob5 drop decisions over the clip for one DIFF_THRESHOLD, with
+        ``frame_difference``'s exact walk semantics (compare against the
+        last *sent* frame; threshold < 0 disables)."""
+        n = self.change_counts.shape[0]
+        drops = np.zeros(n, bool)
+        if threshold < 0.0:
+            return drops
+        last: int | None = None
+        for i in range(n):
+            if last is not None and self.change_fraction(i, last) <= threshold:
+                drops[i] = True
+            else:
+                last = i
+        return drops
+
+
+def _segment_boxes_batch(labels: np.ndarray, diff: np.ndarray, *,
+                         background_label: int, sy: float, sx: float,
+                         min_px: float) -> list[np.ndarray]:
+    """Segment-vectorized twin of ``detector.boxes_from_labels`` over a
+    whole [B, gh, gw] image batch: ONE lexsort + reduceat pass for every
+    component of every image, keyed by (image, label).  Same semantics per
+    image (ascending-label order, half-maximum refinement via the
+    95th-percentile peak with linear interpolation); agreement with the
+    host helper is asserted by the characterization oracle tests."""
+    n_img, gh, gw = labels.shape
+    flat = labels.reshape(n_img, -1)
+    fg_img, fg_pix = np.nonzero(flat != background_label)
+    empty = np.zeros((0, 4), np.float32)
+    if not fg_img.size:
+        return [empty] * n_img
+    big = gh * gw
+    lab = flat[fg_img, fg_pix].astype(np.int64)
+    d = diff.reshape(n_img, -1)[fg_img, fg_pix]
+    key = fg_img * np.int64(big + 1) + lab
+    order = np.lexsort((d, key))
+    key_s, d_s = key[order], d[order]
+    starts = np.flatnonzero(np.r_[True, key_s[1:] != key_s[:-1]])
+    ends = np.append(starts[1:], key_s.size)
+    lens = ends - starts
+    keep = lens >= min_px
+    # per-segment 95th percentile of diff (d is sorted within each segment)
+    v = (lens - 1) * 0.95
+    lo = np.floor(v).astype(np.int64)
+    frac = v - lo
+    a = d_s[starts + lo]
+    b = d_s[np.minimum(starts + lo + 1, ends - 1)]
+    peak = a + frac * (b - a)
+    strong = d_s >= 0.5 * np.repeat(peak, lens)
+    n_strong = np.add.reduceat(strong, starts)
+    sel = strong | np.repeat(n_strong < 2, lens)
+    ys, xs = np.divmod(fg_pix[order], gw)
+    ymin = np.minimum.reduceat(np.where(sel, ys, big), starts)[keep]
+    ymax = np.maximum.reduceat(np.where(sel, ys, -1), starts)[keep]
+    xmin = np.minimum.reduceat(np.where(sel, xs, big), starts)[keep]
+    xmax = np.maximum.reduceat(np.where(sel, xs, -1), starts)[keep]
+    boxes = np.stack([ymin * sy, xmin * sx, (ymax + 1) * sy,
+                      (xmax + 1) * sx], axis=1).astype(np.float32)
+    # split back per image: segments are sorted by (image, label)
+    seg_img = fg_img[order][starts][keep]
+    bounds = np.searchsorted(seg_img, np.arange(n_img + 1))
+    return [boxes[bounds[i]:bounds[i + 1]] for i in range(n_img)]
+
+
+def _segment_boxes(labels: np.ndarray, diff: np.ndarray, *,
+                   background_label: int, sy: float, sx: float,
+                   min_px: float) -> np.ndarray:
+    """Single-image convenience wrapper over ``_segment_boxes_batch``."""
+    return _segment_boxes_batch(labels[None], diff[None],
+                                background_label=background_label,
+                                sy=sy, sx=sx, min_px=min_px)[0]
+
+
+def _label_host(mask: np.ndarray) -> tuple[np.ndarray, int]:
+    """4-connected labeling of a [B, gh, gw] bool batch via scipy's C
+    implementation (raster-discovery label order == the ascending
+    min-flat-index order of the device labeler)."""
+    from scipy import ndimage               # declared dep; fallback below
+    out = np.empty(mask.shape, np.int32)
+    for i in range(mask.shape[0]):
+        ndimage.label(mask[i], output=out[i])
+    return out, 0                                   # background label
+
+
+def run_grid(background: np.ndarray, frames: list[np.ndarray], *,
+             detector_thresh: float = 28.0, min_area: int = 12,
+             use_pallas: bool | None = None) -> GridCharacterization:
+    """Characterize every (resolution, colorspace, blur) combo over a clip.
+
+    ``background``/``frames``: uint8 [H, W, 3] with even H, W (the Pallas /
+    XLA grid path needs 4:2:0-subsample-able planes; ``characterize`` falls
+    back to the NumPy reference engine otherwise).
+
+    Device work is dispatched with a bounded lookahead (JAX dispatch is
+    asynchronous), so transforms for the next groups overlap the host-side
+    scoring of the current one without holding all 15 groups' payload/diff
+    buffers resident at once.
+    """
+    h, w = background.shape[:2]
+    if background.ndim != 3 or background.shape[2] != 3 or h % 2 or w % 2:
+        raise ValueError(f"grid engine needs even-dim 3-channel frames, "
+                         f"got {background.shape}")
+    if use_pallas is None:
+        # The fused kernel lowers through Mosaic; every other backend takes
+        # the XLA twin (same math, batched einsums).
+        use_pallas = jax.default_backend() == "tpu"
+
+    n_clip = len(frames)
+    n_real = n_clip + 1                                  # +1: background
+    n_pad = -(-n_real // _FRAME_BUCKET) * _FRAME_BUCKET
+    stack = np.stack([background] + list(frames)
+                     + [background] * (n_pad - n_real)).astype(np.uint8)
+    fj = jnp.asarray(stack)
+    prevj = jnp.asarray(np.concatenate([stack[:1], stack[:-1]]))
+
+    change_counts_dev = _change_counts(
+        jnp.asarray(np.stack(frames).astype(np.uint8)))
+
+    def dispatch(res_cs: tuple[int, int]):
+        res, cs = res_cs
+        plan = FK.build_transform_plan(
+            h, w, scale=K.RESOLUTION_SCALES[res], cs=cs,
+            blur_ks=K.BLUR_KERNELS)
+        if use_pallas:
+            payload, feats, _ = FK.frame_knob_grid(fj, prevj, plan)
+            diff = _payload_diff(payload)
+        else:
+            payload, feats, diff = _transform_group(
+                fj, jnp.asarray(plan.ry), jnp.asarray(plan.rx),
+                jnp.asarray(plan.bys), jnp.asarray(plan.bxs), cs)
+        return res_cs, plan, (payload, feats, diff)
+
+    todo = [(res, cs) for res in range(len(K.RESOLUTION_SCALES))
+            for cs in range(len(K.COLORSPACES))]
+    lookahead = 2
+    in_flight = [dispatch(rc) for rc in todo[:lookahead]]
+
+    dets: dict[tuple[int, int, int], list[np.ndarray]] = {}
+    feats_all: dict[tuple[int, int, int], np.ndarray] = {}
+    cal_samples: list[tuple[int, int, np.ndarray, int]] = []
+    plan_of_cs: dict[tuple[int, int], FK.TransformPlan] = {}
+
+    for gi in range(len(todo)):
+        (res, cs), plan, (payload, feats, diff) = in_flight[gi % lookahead]
+        if gi + lookahead < len(todo):
+            in_flight[gi % lookahead] = dispatch(todo[gi + lookahead])
+        plan_of_cs[(res, cs)] = plan
+        diff_np = np.asarray(diff[:, :n_clip])           # [S, F, gh, gw]
+        feats_np = np.asarray(feats[:, 1:n_real])        # [S, F, 6]
+        s_dim, f_dim = diff_np.shape[:2]
+        # only the calibration frame of each blur setting ever needs its
+        # payload on the host -- slice on device, don't ship the batch
+        cal_idx = np.asarray([1 + (res * s_dim + b) % n_clip
+                              for b in range(s_dim)])
+        cal_payloads = np.asarray(payload[jnp.arange(s_dim),
+                                          jnp.asarray(cal_idx)])
+
+        # adaptive threshold: detector.detect's own helper, batched, one
+        # introselect pass for both quantiles (NumPy beats XLA's sort here)
+        gh, gw = diff_np.shape[2:]
+        eff = det.adaptive_threshold(
+            diff_np.reshape(s_dim, f_dim, -1), detector_thresh, axis=-1)
+
+        label_on_device = use_pallas
+        if not label_on_device:
+            try:
+                mask = det.dilate_cross(diff_np > eff[:, :, None, None])
+                ids, bg_label = _label_host(mask.reshape(-1, gh, gw))
+            except ImportError:             # no scipy: device labeler works
+                label_on_device = True
+        if label_on_device:
+            ids = np.asarray(_label_group(jnp.asarray(diff_np),
+                                          jnp.asarray(eff)))
+            ids = ids.reshape(s_dim * f_dim, gh, gw)
+            bg_label = gh * gw
+
+        sy, sx = h / gh, w / gw
+        min_px = max(2.0, min_area / (sy * sx))
+        boxes = _segment_boxes_batch(ids, diff_np.reshape(-1, gh, gw),
+                                     background_label=bg_label,
+                                     sy=sy, sx=sx, min_px=min_px)
+        for b in range(s_dim):
+            combo = (res, cs, b)
+            feats_all[combo] = feats_np[b]
+            dets[combo] = boxes[b * f_dim:b * f_dim + n_clip]
+            wire = _wire_payload(cal_payloads[b], cs)
+            cal_samples.append((cs, plan.payload_bytes,
+                                feats_np[b, cal_idx[b] - 1],
+                                len(zlib.compress(wire.tobytes(), 1))))
+
+    proxy = _fit_proxy(cal_samples)
+    sizes = {
+        (res, cs, b): proxy.predict(cs, plan_of_cs[(res, cs)].payload_bytes,
+                                    feats_all[(res, cs, b)])
+        for (res, cs, b) in feats_all
+    }
+    return GridCharacterization(
+        combos=tuple(sorted(feats_all)), dets=dets, sizes=sizes,
+        change_counts=np.asarray(change_counts_dev), pixels=h * w,
+        proxy=proxy, zlib_calls=len(cal_samples))

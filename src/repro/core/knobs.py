@@ -38,7 +38,7 @@ import numpy as np
 
 __all__ = [
     "KnobSetting", "KNOB_GRID", "apply_knobs", "transform_frame", "wire_size",
-    "enumerate_settings", "frame_difference",
+    "enumerate_settings", "frame_difference", "TransformMemo",
     "RESOLUTION_SCALES", "COLORSPACES", "BLUR_KERNELS", "DIFF_THRESHOLDS",
 ]
 
@@ -153,13 +153,20 @@ def _to_colorspace(frame: np.ndarray, mode: str) -> np.ndarray:
         u2 = u[::2, ::2]; v2 = v[::2, ::2]   # 4:2:0 chroma subsample
         planes = [np.clip(np.round(p), 0, 255).astype(np.uint8)
                   for p in (y, u2, v2)]
-        # Pack planes into one 2-D payload (Y on top, U|V below).
+        # Pack planes into one 2-D payload (Y on top, U|V side by side
+        # below).  For odd widths the U|V row is one column wider than Y
+        # (uw = ceil(w/2), so 2*uw = w + 1); the payload widens to fit the
+        # full V plane instead of silently truncating its last column, and
+        # Y pads with zeros.  Even widths pack exactly (payload width = w).
         h, w = planes[0].shape
         uh, uw = planes[1].shape
-        bottom = np.zeros((uh, w), np.uint8)
+        pw = max(w, 2 * uw)
+        top = np.zeros((h, pw), np.uint8)
+        top[:, :w] = planes[0]
+        bottom = np.zeros((uh, pw), np.uint8)
         bottom[:, :uw] = planes[1]
-        bottom[:, uw:uw * 2] = planes[2][:, : max(0, w - uw)][:, : uw]
-        return np.concatenate([planes[0], bottom], axis=0)
+        bottom[:, uw:2 * uw] = planes[2]
+        return np.concatenate([top, bottom], axis=0)
     raise ValueError(mode)
 
 
@@ -263,6 +270,35 @@ def transform_frame(frame: np.ndarray, setting: KnobSetting) -> np.ndarray:
     out = _to_colorspace(frame, COLORSPACES[setting.colorspace])
     out = _resize_area(out, RESOLUTION_SCALES[setting.resolution])
     return _box_blur(out, BLUR_KERNELS[setting.blur])
+
+
+class TransformMemo:
+    """Per-setting memo of ``transform_frame`` over one fixed source image.
+
+    Background models are static while a knob setting is live, but consumers
+    (subscriber-side detectors, the reference characterization sweep, the
+    broker's ``degraded_background``) need the background pushed through the
+    same degradation as the stream -- recomputing that per *frame* is pure
+    waste.  The memo keys on the transform-relevant knobs only (resolution,
+    colorspace, blur), so all diff/artifact variants of a setting share one
+    entry.
+    """
+
+    def __init__(self, image: np.ndarray):
+        self._image = image
+        self._memo: dict[tuple[int, int, int], np.ndarray] = {}
+
+    @property
+    def image(self) -> np.ndarray:
+        return self._image
+
+    def get(self, setting: KnobSetting) -> np.ndarray:
+        key = (setting.resolution, setting.colorspace, setting.blur)
+        out = self._memo.get(key)
+        if out is None:
+            out = transform_frame(self._image, KnobSetting(*key))
+            self._memo[key] = out
+        return out
 
 
 def apply_knobs(frame: np.ndarray, setting: KnobSetting, *,

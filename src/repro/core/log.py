@@ -108,6 +108,7 @@ class HostLog:
         self._last_ts = -np.inf
         self._seg_locks = [_RWLock() for _ in range(self.num_segments)]
         self._meta_lock = threading.Lock()
+        self._evictions = 0     # wrap-around generation (seqlock validation)
         self.appends = 0
         self.rejects = 0
 
@@ -124,13 +125,24 @@ class HostLog:
 
     # -- write path -------------------------------------------------------------
     def append(self, timestamp: float, frame: np.ndarray, **meta) -> bool:
-        """Append one frame.  Returns False (rejected) if out of order."""
+        """Append one frame.  Returns False (rejected) if out of order.
+
+        Wrap-around ordering: the slot being overwritten is *evicted from
+        the live set first* (count decremented under the meta lock), the
+        entry is written under its segment write lock, and only then is the
+        new entry published to the metadata.  Readers snapshotting under
+        the meta lock therefore never see a slot that is mid-overwrite --
+        the entry write happens outside every reader's ordered view.
+        """
         with self._meta_lock:
             if timestamp <= self._last_ts:
                 self.rejects += 1
                 return False
             idx = self._head
             seg = self._segment_of(idx)
+            if self._count == self.capacity:
+                self._count -= 1           # evict the oldest (it lives at idx)
+                self._evictions += 1
         lock = self._seg_locks[seg]
         lock.acquire_write()
         try:
@@ -146,37 +158,70 @@ class HostLog:
 
     # -- read path ---------------------------------------------------------------
     def _ordered_indices(self) -> list[int]:
-        """Indices of live entries in increasing timestamp order."""
-        if self._count < self.capacity:
-            return list(range(self._count))
-        return [(self._head + i) % self.capacity for i in range(self.capacity)]
+        """Indices of live entries in increasing timestamp order (the ring
+        starts ``count`` slots behind the next write position)."""
+        start = (self._head - self._count) % self.capacity
+        return [(start + i) % self.capacity for i in range(self._count)]
 
-    def _timestamps(self, order: Sequence[int]) -> np.ndarray:
-        return np.asarray([self._entries[i].timestamp for i in order])
-
-    def _read_entry(self, idx: int) -> _Entry:
-        seg = self._segment_of(idx)
-        lock = self._seg_locks[seg]
-        lock.acquire_read()
+    def _snapshot_view(self, order: Sequence[int]
+                       ) -> list[tuple[float, np.ndarray]]:
+        """(timestamp, frame) view of ``order``'s entries, read under all
+        spanned segment read locks (acquired in ascending segment order;
+        the writer holds at most one segment lock at a time and never waits
+        on the meta lock while holding one, so the ordering is
+        deadlock-free).  The segment locks make each entry read atomic with
+        respect to the writer; whole-view consistency across a wrap-around
+        is validated by ``_consistent_snapshot``.  Frames are immutable
+        once appended, so the returned references remain valid after the
+        locks drop."""
+        segs = sorted({self._segment_of(i) for i in order})
+        for s in segs:
+            self._seg_locks[s].acquire_read()
         try:
-            entry = self._entries[idx]
+            return [(e.timestamp, e.frame)
+                    for e in (self._entries[i] for i in order)]
         finally:
-            lock.release_read()
-        assert entry is not None
-        return entry
+            for s in segs:
+                self._seg_locks[s].release_read()
+
+    def _consistent_snapshot(self) -> list[tuple[float, np.ndarray]]:
+        """Time-ordered snapshot of the live ring, seqlock style.
+
+        Readers never hold the meta lock across the O(capacity) scan (reads
+        from many segments keep proceeding concurrently, per the paper's
+        locking design).  Instead the wrap-around generation counter is
+        sampled before and after: a wrap eviction racing the scan would
+        overwrite the oldest slot with the newest entry mid-read -- binary
+        search would then run on an unsorted array (caught by the threaded
+        regression test) -- so a changed generation discards the torn view
+        and retries.  If the writer keeps lapping the reader, the final
+        attempt scans inside the meta lock, which blocks eviction entirely.
+        """
+        for _ in range(4):
+            with self._meta_lock:
+                order = self._ordered_indices()
+                gen = self._evictions
+            snap = self._snapshot_view(order)
+            with self._meta_lock:
+                if self._evictions == gen:
+                    return snap
+        with self._meta_lock:
+            return self._snapshot_view(self._ordered_indices())
+
+    def _timestamps(self, snap: Sequence[tuple[float, np.ndarray]]
+                    ) -> np.ndarray:
+        return np.asarray([t for t, _ in snap])
 
     def point_query(self, timestamp: float) -> tuple[float, np.ndarray] | None:
         """Newest entry with ts <= timestamp (binary search), or None."""
-        with self._meta_lock:
-            order = self._ordered_indices()
-        if not order:
+        snap = self._consistent_snapshot()
+        if not snap:
             return None
-        ts = self._timestamps(order)
+        ts = self._timestamps(snap)
         pos = int(np.searchsorted(ts, timestamp, side="right")) - 1
         if pos < 0:
             return None
-        entry = self._read_entry(order[pos])
-        return entry.timestamp, entry.frame
+        return snap[pos]
 
     def range_query(self, t_start: float, t_stop: float) -> Iterator[tuple[float, np.ndarray]]:
         """All entries with t_start <= ts <= t_stop, in time order.
@@ -185,25 +230,16 @@ class HostLog:
         ending timestamp, returning the video frames corresponding to an
         interval that includes the requested time range."
         """
-        with self._meta_lock:
-            order = self._ordered_indices()
-        if not order:
+        snap = self._consistent_snapshot()
+        if not snap:
             return
-        ts = self._timestamps(order)
+        ts = self._timestamps(snap)
         lo = int(np.searchsorted(ts, t_start, side="left"))
         hi = int(np.searchsorted(ts, t_stop, side="right"))
-        for i in range(lo, hi):
-            entry = self._read_entry(order[i])
-            yield entry.timestamp, entry.frame
+        yield from snap[lo:hi]
 
     def tail(self, k: int) -> list[tuple[float, np.ndarray]]:
-        with self._meta_lock:
-            order = self._ordered_indices()
-        out = []
-        for i in order[-k:]:
-            e = self._read_entry(i)
-            out.append((e.timestamp, e.frame))
-        return out
+        return self._consistent_snapshot()[-k:]
 
     def snapshot(self) -> list[tuple[float, np.ndarray]]:
         return self.tail(self._count)

@@ -1,32 +1,64 @@
-"""Fused frame-quality kernel: downsample + box blur + change metric.
+"""Fused frame-quality kernels: the knob grid as device-resident compute.
 
 The paper measures knob processing at ~10 ms/frame on the camera node's ARM
 CPU -- 20.5% of end-to-end latency (Fig. 16) -- and proposes offload as
-future work.  This kernel is that offload, TPU-native: one pass over the
-frame applies
+future work.  Two kernels implement that offload, TPU-native:
 
-  1. knob5 sensor: fraction of pixels changed vs. the previous SENT frame
-     (|diff| > pixel_delta) -- the transport layer drops the frame when the
-     fraction is under the controller's threshold,
-  2. knob1: 2x2 mean-pool downsample,
-  3. knob3: separable k x k box blur (edge-clamped), applied on the pooled
-     plane (so its VMEM working set is 1/4 of the input),
+``frame_knobs``      the original fixed-function kernel (2x2 mean pool +
+                     box blur + knob5 change metric on gray planes), kept
+                     for the streaming hot path and back-compat.
 
-reading the frame from HBM exactly once.  Grid = (num_frames,): one whole
-gray plane per program (a 1080p plane is ~2 MB fp32 pooled -- comfortably
-VMEM-resident; color runs as 3 planes).  Blur is block-local by
-construction, matching `ref.frame_knobs_ref` exactly.
+``frame_knob_grid``  the generalized characterization kernel: ONE pass over
+                     a clip evaluates a whole batch of knob settings.  Per
+                     (setting, frame) grid program it applies
+
+  1. knob2 colorspace: BGR planes / gray / packed 4:2:0 YUV (Y on top,
+     U|V below -- the exact wire layout of ``knobs._to_colorspace``),
+  2. knob1 resolution: arbitrary-factor bilinear resize expressed as a pair
+     of per-axis operator matrices (``Ry @ plane @ Rx^T``) so any
+     ``RESOLUTION_SCALES`` entry runs on the MXU -- the old kernel's 2x2
+     mean pool is the special case ``scale=0.5``,
+  3. knob3 blur: every ``BLUR_KERNELS`` width as per-setting edge-clamped
+     band matrices (``By[s] @ img @ Bx[s]^T``),
+  4. knob5 change metric: fraction of pixels changed vs. the previous
+     frame (``|f - prev| > pixel_delta`` after channel-mean),
+  5. wire-size proxy features: per-payload horizontal/vertical byte-delta
+     statistics (sum of log2(1+|d|), zero-delta count, |d|<=2 count) that
+     ``core.grid_engine`` calibrates against zlib level-1 -- so deflate
+     never runs on the characterization hot path.
+
+Rounding matches the host pipeline stage for stage (uint8 round/clip after
+colorspace, after resize, after blur), so the kernel is bit-exact against
+``repro.kernels.ref.frame_knob_grid_ref`` and within one grey level of the
+float64 NumPy path in ``knobs.transform_frame``.
+
+Geometry (colorspace mode, output height/width) is static per call; the
+settings batch dimension carries the per-setting blur operators, so one
+``pallas_call`` evaluates ``[n_settings, n_frames]`` programs in a single
+HBM pass over the clip.  ``core.grid_engine`` groups the full knob grid by
+(resolution, colorspace) and issues one call per group.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
-__all__ = ["frame_knobs"]
+__all__ = ["frame_knobs", "TransformPlan", "build_transform_plan",
+           "frame_knob_grid", "resize_operator", "blur_operator",
+           "proxy_features", "N_PROXY_FEATURES"]
+
+N_PROXY_FEATURES = 6   # (log2-sum, zero-count, <=2-count) x (dx, dy)
+
+
+# =============================================================================
+# Original fixed-function kernel (unchanged semantics, back-compat)
+# =============================================================================
 
 
 def _knobs_kernel(f_ref, p_ref, o_ref, c_ref, *, blur_k: int,
@@ -80,3 +112,226 @@ def frame_knobs(frames: jax.Array, prev: jax.Array, *, blur_k: int = 5,
                    jax.ShapeDtypeStruct((n,), jnp.float32)],
         interpret=interpret,
     )(frames, prev)
+
+
+# =============================================================================
+# Generalized knob-grid kernel
+# =============================================================================
+
+# Colorspace ids (static per call; match knobs.COLORSPACES order).
+CS_BGR, CS_GRAY, CS_YUV420 = 0, 1, 2
+
+
+def resize_operator(n_in: int, n_out: int, scale: float) -> np.ndarray:
+    """One axis of ``knobs._resize_area`` as an [n_out, n_in] f32 operator.
+
+    Row i carries the two bilinear taps of output sample i (edge-clamped,
+    half-pixel-centre aligned).  ``scale >= 0.999`` yields the identity, so
+    the full-resolution setting is exact pass-through.
+    """
+    if scale >= 0.999:
+        return np.eye(n_in, dtype=np.float32)
+    xs = np.clip((np.arange(n_out) + 0.5) / scale - 0.5, 0, n_in - 1)
+    x0 = np.floor(xs).astype(np.int64)
+    x1 = np.minimum(x0 + 1, n_in - 1)
+    wx = (xs - x0).astype(np.float32)
+    m = np.zeros((n_out, n_in), np.float32)
+    np.add.at(m, (np.arange(n_out), x0), 1.0 - wx)
+    np.add.at(m, (np.arange(n_out), x1), wx)
+    return m
+
+
+def blur_operator(n: int, k: int) -> np.ndarray:
+    """``knobs._box_blur`` along one axis as an [n, n] edge-clamped band
+    matrix (identity for k <= 1)."""
+    m = np.zeros((n, n), np.float32)
+    if k <= 1:
+        np.fill_diagonal(m, 1.0)
+        return m
+    pad = k // 2
+    rows = np.arange(n)
+    for off in range(-pad, k - pad):
+        np.add.at(m, (rows, np.clip(rows + off, 0, n - 1)),
+                  np.float32(1.0 / k))
+    return m
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformPlan:
+    """Device-ready operators for one (resolution, colorspace) group of the
+    knob grid, batching every blur width of that group.
+
+    The plan fully determines output geometry, so one ``pallas_call`` (or
+    its XLA twin in ``ref``) covers ``len(blur_ks)`` settings per frame.
+    """
+    cs: int                    # CS_BGR / CS_GRAY / CS_YUV420
+    scale: float
+    blur_ks: tuple[int, ...]
+    in_h: int                  # camera frame height
+    in_w: int
+    packed_h: int              # post-colorspace height (h + h//2 for yuv420)
+    out_h: int                 # payload height after resize
+    out_w: int
+    n_planes: int              # 3 for bgr, 1 otherwise
+    ry: np.ndarray             # [out_h, packed_h]
+    rx: np.ndarray             # [out_w, in_w]
+    bys: np.ndarray            # [S, out_h, out_h]
+    bxs: np.ndarray            # [S, out_w, out_w]
+
+    @property
+    def n_settings(self) -> int:
+        return len(self.blur_ks)
+
+    @property
+    def payload_bytes(self) -> int:
+        return self.n_planes * self.out_h * self.out_w
+
+
+def build_transform_plan(h: int, w: int, *, scale: float, cs: int,
+                         blur_ks: tuple[int, ...]) -> TransformPlan:
+    """Build the operator bundle for one (resolution, colorspace) group.
+
+    Requires even ``h``/``w`` for yuv420 (4:2:0 subsampling); the host
+    NumPy path stays the oracle for odd geometries.
+    """
+    if cs == CS_YUV420 and (h % 2 or w % 2):
+        raise ValueError(f"yuv420 grid transform needs even dims, got {h}x{w}")
+    packed_h = h + h // 2 if cs == CS_YUV420 else h
+    ry = resize_operator(packed_h, max(1, int(round(packed_h * scale))), scale)
+    rx = resize_operator(w, max(1, int(round(w * scale))), scale)
+    out_h, out_w = ry.shape[0], rx.shape[0]
+    bys = np.stack([blur_operator(out_h, k) for k in blur_ks])
+    bxs = np.stack([blur_operator(out_w, k) for k in blur_ks])
+    return TransformPlan(cs=cs, scale=scale, blur_ks=tuple(blur_ks),
+                         in_h=h, in_w=w, packed_h=packed_h,
+                         out_h=out_h, out_w=out_w,
+                         n_planes=3 if cs == CS_BGR else 1,
+                         ry=ry, rx=rx, bys=bys, bxs=bxs)
+
+
+def _to_planes(frame: jax.Array, cs: int) -> jax.Array:
+    """uint8 [H, W, 3] -> f32 planes [P, packed_h, W] (knob2, wire layout)."""
+    f = frame.astype(jnp.float32)
+    b, g, r = f[..., 0], f[..., 1], f[..., 2]
+    if cs == CS_BGR:
+        return jnp.stack([b, g, r], axis=0)
+    y = 0.114 * b + 0.587 * g + 0.299 * r
+    if cs == CS_GRAY:
+        return jnp.clip(jnp.round(y), 0, 255)[None]
+    u = 0.492 * (b - y) + 128.0
+    v = 0.877 * (r - y) + 128.0
+    y8 = jnp.clip(jnp.round(y), 0, 255)
+    u8 = jnp.clip(jnp.round(u[::2, ::2]), 0, 255)
+    v8 = jnp.clip(jnp.round(v[::2, ::2]), 0, 255)
+    return jnp.concatenate([y8, jnp.concatenate([u8, v8], axis=1)],
+                           axis=0)[None]
+
+
+def proxy_features(payload: jax.Array) -> jax.Array:
+    """Wire-size proxy features of a ``[..., P, oh, ow]`` payload batch:
+    (sum log2(1+|d|), zero-delta count, |d|<=2 count) for horizontal and
+    vertical byte deltas -- 6 values per payload, reduced over the last
+    three axes.  The single definition serves the Pallas kernel, the ref
+    oracle, and the CPU XLA twin in ``core.grid_engine``."""
+    a = payload.astype(jnp.int32)
+    dx = jnp.abs(a[..., :, 1:] - a[..., :, :-1]).astype(jnp.float32)
+    dy = jnp.abs(a[..., 1:, :] - a[..., :-1, :]).astype(jnp.float32)
+    axes = (-3, -2, -1)
+    return jnp.stack([
+        jnp.log2(1.0 + dx).sum(axes), (dx == 0).sum(axes).astype(jnp.float32),
+        (dx <= 2).sum(axes).astype(jnp.float32),
+        jnp.log2(1.0 + dy).sum(axes), (dy == 0).sum(axes).astype(jnp.float32),
+        (dy <= 2).sum(axes).astype(jnp.float32),
+    ], axis=-1)
+
+
+def _grid_compute(frame: jax.Array, prev: jax.Array, ry: jax.Array,
+                  rx: jax.Array, by: jax.Array, bx: jax.Array, *,
+                  cs: int, pixel_delta: float
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """The fused per-(setting, frame) pipeline, shared op-for-op with the
+    interpret-mode oracle contract.  All matmuls accumulate in f32."""
+    # knob5 change metric on the raw frame (channel-mean, like
+    # ``knobs.frame_difference``)
+    d = jnp.abs(frame.astype(jnp.float32) - prev.astype(jnp.float32))
+    d = d.mean(axis=-1)
+    changed = (d > pixel_delta).astype(jnp.float32).mean()
+
+    planes = _to_planes(frame, cs)                                 # [P,Hc,W]
+    rs = jnp.einsum("ah,phw->paw", ry, planes)                     # knob1
+    rs = jnp.einsum("bw,paw->pab", rx, rs)
+    rs = jnp.clip(jnp.round(rs), 0, 255)
+    bl = jnp.einsum("ab,pbw->paw", by, rs)                         # knob3
+    bl = jnp.einsum("cw,paw->pac", bx, bl)
+    payload = jnp.clip(jnp.round(bl), 0, 255).astype(jnp.uint8)
+
+    return payload, proxy_features(payload), changed
+
+
+def _grid_kernel(f_ref, p_ref, ry_ref, rx_ref, by_ref, bx_ref,
+                 o_ref, ft_ref, ch_ref, *, cs: int, pixel_delta: float):
+    payload, feats, changed = _grid_compute(
+        f_ref[0], p_ref[0], ry_ref[...], rx_ref[...], by_ref[0], bx_ref[0],
+        cs=cs, pixel_delta=pixel_delta)
+    o_ref[0, 0] = payload
+    ft_ref[0, 0] = feats
+    ch_ref[0, 0] = changed
+
+
+@functools.partial(jax.jit, static_argnames=("cs", "geom", "pixel_delta",
+                                             "interpret"))
+def _grid_call(frames, prev, ry, rx, bys, bxs, *, cs, geom, pixel_delta,
+               interpret):
+    h, w, packed_h, out_h, out_w, n_planes = geom
+    s = bys.shape[0]
+    f = frames.shape[0]
+    return pl.pallas_call(
+        functools.partial(_grid_kernel, cs=cs, pixel_delta=pixel_delta),
+        grid=(s, f),
+        in_specs=[
+            pl.BlockSpec((1, h, w, 3), lambda i, j: (j, 0, 0, 0)),
+            pl.BlockSpec((1, h, w, 3), lambda i, j: (j, 0, 0, 0)),
+            pl.BlockSpec((out_h, packed_h), lambda i, j: (0, 0)),
+            pl.BlockSpec((out_w, w), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, out_h, out_h), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, out_w, out_w), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, n_planes, out_h, out_w),
+                         lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, 1, N_PROXY_FEATURES), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, f, n_planes, out_h, out_w), jnp.uint8),
+            jax.ShapeDtypeStruct((s, f, N_PROXY_FEATURES), jnp.float32),
+            jax.ShapeDtypeStruct((s, f), jnp.float32),
+        ],
+        interpret=interpret,
+    )(frames, prev, ry, rx, bys, bxs)
+
+
+def frame_knob_grid(frames: jax.Array, prev: jax.Array, plan: TransformPlan,
+                    *, pixel_delta: float = 8.0, interpret: bool = False
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Evaluate one plan's settings batch over a clip in a single HBM pass.
+
+    frames/prev: uint8 ``[F, H, W, 3]`` (prev = the clip shifted by one for
+    the knob5 metric).  Returns
+
+      payload [S, F, P, out_h, out_w] uint8   the shipped representation
+                                              (P planes: b/g/r, or one
+                                              gray / packed-yuv plane),
+      feats   [S, F, 6] f32                   wire-size proxy features,
+      changed [S, F] f32                      knob5 changed-pixel fraction
+                                              (setting-independent: every
+                                              row carries the same values).
+    """
+    n, h, w, c = frames.shape
+    assert (h, w) == (plan.in_h, plan.in_w) and c == 3, (frames.shape, plan)
+    geom = (plan.in_h, plan.in_w, plan.packed_h, plan.out_h, plan.out_w,
+            plan.n_planes)
+    return _grid_call(frames, prev, jnp.asarray(plan.ry),
+                      jnp.asarray(plan.rx), jnp.asarray(plan.bys),
+                      jnp.asarray(plan.bxs), cs=plan.cs, geom=geom,
+                      pixel_delta=pixel_delta, interpret=interpret)

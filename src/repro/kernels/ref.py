@@ -12,7 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["quantize_ref", "dequantize_ref", "flash_attention_ref",
-           "decode_attention_ref", "wkv_ref", "frame_knobs_ref"]
+           "decode_attention_ref", "wkv_ref", "frame_knobs_ref",
+           "frame_knob_grid_ref"]
 
 
 # -----------------------------------------------------------------------------
@@ -135,3 +136,37 @@ def frame_knobs_ref(frames: jax.Array, prev: jax.Array, *, blur_k: int = 5,
         pooled = jax.vmap(
             lambda img: jax.vmap(lambda row: jnp.convolve(row, kern, mode="valid"))(img))(padded)
     return pooled, changed
+
+
+# -----------------------------------------------------------------------------
+# generalized knob grid (colorspace + arbitrary resize + blur + proxy feats)
+# -----------------------------------------------------------------------------
+
+
+def frame_knob_grid_ref(frames: jax.Array, prev: jax.Array, plan, *,
+                        pixel_delta: float = 8.0):
+    """Oracle for ``frame_knobs.frame_knob_grid``: one (setting, frame)
+    program at a time via ``lax.map``, so every contraction runs at the
+    exact per-program shapes of the Pallas grid -- bit-exact including the
+    uint8 round/clip after each stage.
+
+    frames/prev: uint8 [F, H, W, 3].  Returns (payload [S, F, P, oh, ow]
+    uint8, feats [S, F, 6] f32, changed [S, F] f32).
+    """
+    from repro.kernels.frame_knobs import _grid_compute
+
+    s = plan.bys.shape[0]
+    f = frames.shape[0]
+    ry = jnp.asarray(plan.ry)
+    rx = jnp.asarray(plan.rx)
+    bys = jnp.asarray(plan.bys)
+    bxs = jnp.asarray(plan.bxs)
+
+    def one(idx):
+        si, fi = idx // f, idx % f
+        return _grid_compute(frames[fi], prev[fi], ry, rx, bys[si], bxs[si],
+                             cs=plan.cs, pixel_delta=pixel_delta)
+
+    payload, feats, changed = jax.lax.map(one, jnp.arange(s * f))
+    return (payload.reshape(s, f, plan.n_planes, plan.out_h, plan.out_w),
+            feats.reshape(s, f, -1), changed.reshape(s, f))

@@ -154,3 +154,71 @@ class TestFrameKnobs:
         assert float(ch_same[0]) == 0.0
         np.testing.assert_allclose(float(ch_moved[0]), (8 * 20) / (32 * 64),
                                    rtol=1e-6)
+
+
+class TestFrameKnobGrid:
+    """Oracle sweep for the generalized grid kernel: every (resolution,
+    colorspace) plan, all blur widths batched, interpret mode vs
+    ``ref.frame_knob_grid_ref`` (bit-exact) and vs the float64 NumPy host
+    pipeline ``knobs.transform_frame`` (within one grey level)."""
+
+    H, W, F = 32, 48, 2
+
+    @pytest.fixture(scope="class")
+    def clip(self):
+        rng = np.random.default_rng(11)
+        base = rng.integers(40, 200, (self.H, self.W, 3))
+        frames = np.clip(base[None] + rng.normal(0, 12, (self.F, self.H,
+                                                         self.W, 3)),
+                         0, 255).astype(np.uint8)
+        prev = np.concatenate([frames[:1], frames[:-1]])
+        return frames, prev
+
+    @pytest.mark.parametrize("res", range(5))
+    @pytest.mark.parametrize("cs", range(3))
+    def test_matches_ref_and_numpy(self, clip, res, cs):
+        from repro.core import knobs as K
+        from repro.kernels.frame_knobs import build_transform_plan, \
+            frame_knob_grid
+
+        frames, prev = clip
+        plan = build_transform_plan(
+            self.H, self.W, scale=K.RESOLUTION_SCALES[res], cs=cs,
+            blur_ks=K.BLUR_KERNELS)
+        pk, fk, ck = frame_knob_grid(jnp.asarray(frames), jnp.asarray(prev),
+                                     plan, interpret=True)
+        pr, fr, cr = ref.frame_knob_grid_ref(jnp.asarray(frames),
+                                             jnp.asarray(prev), plan)
+        # bit-exact against the oracle
+        np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+        np.testing.assert_array_equal(np.asarray(fk), np.asarray(fr))
+        np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+        # one grey level of the float64 host pipeline (f32 vs f64 rounding)
+        for b in range(len(K.BLUR_KERNELS)):
+            for fi in range(self.F):
+                want = K.transform_frame(frames[fi], K.KnobSetting(res, cs, b))
+                got = np.asarray(pk)[b, fi]
+                got = np.moveaxis(got, 0, -1) if cs == 0 else got[0]
+                assert got.shape == want.shape
+                d = np.abs(got.astype(np.int32) - want.astype(np.int32))
+                assert d.max() <= 1
+                assert (d != 0).mean() < 0.01
+
+    def test_change_metric_matches_frame_difference(self, clip):
+        from repro.core import knobs as K
+        from repro.kernels.frame_knobs import build_transform_plan, \
+            frame_knob_grid
+
+        frames, prev = clip
+        plan = build_transform_plan(self.H, self.W, scale=1.0, cs=1,
+                                    blur_ks=(0,))
+        _, _, ch = frame_knob_grid(jnp.asarray(frames), jnp.asarray(prev),
+                                   plan, interpret=True)
+        # knob5 semantics: the kernel's fraction drives the same drop
+        # decision as the host frame_difference at every threshold
+        for fi in range(1, self.F):
+            frac = float(np.asarray(ch)[0, fi])
+            for thresh in K.DIFF_THRESHOLDS:
+                want = K.frame_difference(frames[fi], prev[fi], thresh)
+                got = thresh >= 0.0 and frac <= thresh
+                assert got == want

@@ -139,3 +139,46 @@ class TestFrameLog:
         valid, ts, frames = frame_log_range_query(log, 2.0, 5.0, 8)
         ts = np.asarray(ts)[np.asarray(valid)]
         np.testing.assert_array_equal(ts, [2.0, 3.0, 4.0, 5.0])
+
+
+class TestConcurrentTimestampScan:
+    def test_range_query_monotone_under_wraparound_writes(self):
+        """Regression: ``_timestamps`` used to read entries without the
+        segment read locks, so a wrap-around append racing a reader could
+        overwrite the oldest slot with the newest timestamp mid-scan and
+        hand binary search an unsorted array (misordered range results).
+        With the locks held for the scan, every query sees a consistent,
+        strictly-increasing view."""
+        log = HostLog(32, num_segments=4, topic="race")
+        stop = threading.Event()
+        errors: list[str] = []
+
+        def writer():
+            ts = 0.0
+            while not stop.is_set():
+                ts += 1.0
+                log.append(ts, np.asarray([ts], np.float32))
+
+        def reader():
+            while not stop.is_set():
+                got = [t for t, _ in log.range_query(-np.inf, np.inf)]
+                if any(b <= a for a, b in zip(got, got[1:])):
+                    errors.append(f"unsorted range result: {got}")
+                    return
+                pq = log.point_query(np.inf)
+                if pq is not None and got and pq[0] < got[0]:
+                    errors.append(f"point query behind range head: "
+                                  f"{pq[0]} < {got[0]}")
+                    return
+
+        threads = [threading.Thread(target=writer)] + [
+            threading.Thread(target=reader) for _ in range(3)]
+        for t in threads:
+            t.start()
+        import time
+        time.sleep(0.8)
+        stop.set()
+        for t in threads:
+            t.join(timeout=5.0)
+        assert not errors, errors[0]
+        assert log.appends > 100
