@@ -1,0 +1,127 @@
+"""CI benchmark regression gate for the characterization sweep.
+
+Diffs a freshly produced ``BENCH_characterize.json`` against the committed
+baseline (``benchmarks/baseline_characterize.json``) and FAILS the job when
+the batched engine's perf or fidelity rots:
+
+  * speedup (with and without knob4) dropped more than ``--max-speedup-drop``
+    (default 20%) below the baseline,
+  * the wire-size proxy's median relative error exceeds ``--max-proxy-err``
+    (default 5%),
+  * the batched engine stopped agreeing with the reference oracle (kept
+    sets diverge, or shared-setting accuracies drift past 0.1%).
+
+Speedups are RATIOS of two runs on the same machine, so they transfer
+across runner generations where absolute seconds would not -- but they
+still jitter with runner contention, so the committed baseline pins its
+speedup fields at the LOW end of the observed spread (not a lucky best
+run): the 20% floor then absorbs ordinary noise while a genuine rot of
+the batched path still trips it.  Update the baseline deliberately (fresh
+measurements, conservative speedup floors, in the same PR that changes
+the engine) -- never by loosening the thresholds.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      [--fresh BENCH_characterize.json] \
+      [--baseline benchmarks/baseline_characterize.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_FRESH = os.path.join(os.path.dirname(_HERE),
+                             "BENCH_characterize.json")
+DEFAULT_BASELINE = os.path.join(_HERE, "baseline_characterize.json")
+
+
+def check(fresh: dict, baseline: dict, *, max_speedup_drop: float,
+          max_proxy_err: float) -> list[str]:
+    """Returns the list of violated gate conditions (empty = pass)."""
+    failures: list[str] = []
+
+    def gate_speedup(key: str) -> None:
+        base = baseline.get(key)
+        got = fresh.get(key)
+        if base is None:
+            return                       # baseline predates this metric
+        if got is None:
+            failures.append(f"{key}: missing from fresh results "
+                            f"(baseline {base})")
+            return
+        floor = base * (1.0 - max_speedup_drop)
+        if got < floor:
+            failures.append(
+                f"{key}: {got:.2f}x dropped more than "
+                f"{max_speedup_drop:.0%} below baseline {base:.2f}x "
+                f"(floor {floor:.2f}x)")
+
+    gate_speedup("speedup_vs_seed_path")
+    gate_speedup("speedup_with_artifact")
+
+    err = fresh.get("proxy_median_rel_err")
+    if err is None:
+        failures.append("proxy_median_rel_err: missing from fresh results")
+    elif err > max_proxy_err:
+        failures.append(f"proxy_median_rel_err: {err:.4f} exceeds the "
+                        f"{max_proxy_err:.0%} bound")
+
+    for suffix in ("", "_art"):
+        kb = fresh.get(f"kept_settings_batched{suffix}")
+        kr = fresh.get(f"kept_settings_reference{suffix}")
+        ov = fresh.get(f"kept_overlap{suffix}")
+        if kb is None or kr is None or ov is None:
+            continue
+        if not (kb == kr == ov):
+            failures.append(
+                f"kept set{suffix or ''} diverged: batched={kb} "
+                f"reference={kr} overlap={ov} (must be identical)")
+        acc = fresh.get(f"acc_max_diff_on_shared{suffix}", 0.0)
+        if acc > 1e-3:
+            failures.append(
+                f"acc_max_diff_on_shared{suffix}: {acc} exceeds 1e-3 -- "
+                f"batched detector scoring drifted from the oracle")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", default=DEFAULT_FRESH,
+                    help="benchmark json produced by this CI run")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed baseline json")
+    ap.add_argument("--max-speedup-drop", type=float, default=0.20,
+                    help="allowed fractional speedup regression (0.20=20%%)")
+    ap.add_argument("--max-proxy-err", type=float, default=0.05,
+                    help="allowed wire-size proxy median relative error")
+    args = ap.parse_args()
+
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+
+    failures = check(fresh, baseline,
+                     max_speedup_drop=args.max_speedup_drop,
+                     max_proxy_err=args.max_proxy_err)
+    print(f"fresh:    speedup={fresh.get('speedup_vs_seed_path')}x "
+          f"art={fresh.get('speedup_with_artifact')}x "
+          f"proxy_err={fresh.get('proxy_median_rel_err')}")
+    print(f"baseline: speedup={baseline.get('speedup_vs_seed_path')}x "
+          f"art={baseline.get('speedup_with_artifact')}x "
+          f"proxy_err={baseline.get('proxy_median_rel_err')}")
+    if failures:
+        print(f"\nBENCHMARK REGRESSION GATE FAILED "
+              f"({len(failures)} violation(s)):", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("benchmark regression gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -137,6 +137,9 @@ class QosUpdate:
     status: Status
     applied_cameras: tuple[str, ...]
     subscription_id: str = ""
+    # cameras whose characterization tables were re-swept online as part of
+    # this renegotiation (``update_qos(recharacterize=True)``)
+    recharacterized: tuple[str, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -224,7 +227,8 @@ class SessionedMessagingSystem(Protocol):
                           deadline: float | None = None) -> FrameBatch: ...
     def update_subscription_qos(self, subscription_id: str, *,
                                 latency: float | None = None,
-                                accuracy: float | None = None) -> QosUpdate: ...
+                                accuracy: float | None = None,
+                                recharacterize: bool = False) -> QosUpdate: ...
     def close_subscription(self, subscription_id: str) -> Status: ...
     def subscription_events(self, subscription_id: str) -> list[SessionEvent]: ...
     def subscription_state(self, subscription_id: str) -> SubscriptionState: ...

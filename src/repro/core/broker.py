@@ -36,10 +36,12 @@ from repro.core.api import (BrokerDown, DeliveredFrame, EventKind, FrameBatch,
                             SubscriptionState)
 from repro.core.channel import WirelessChannel
 from repro.core.characterization import CharacterizationTable, LatencyRegression
-from repro.core.controller import ControllerConfig, LatencyController
+from repro.core.controller import (ControllerConfig, JaxControllerTables,
+                                   LatencyController, swap_tables)
 from repro.core import knobs as K
-from repro.core.knobs import apply_knobs, wire_size
+from repro.core.knobs import wire_size
 from repro.core.log import HostLog, LogSegmentStore
+from repro.kernels import frame_knobs as FK
 
 __all__ = ["CamBroker", "EdgeBroker", "NatsLikeSystem", "MezSystem"]
 
@@ -54,6 +56,15 @@ LOG_COPY_COST_PER_MB = 8.0e-3      # frame copy between logs, per
                                    # time is the log copy)
 RPC_DEADLINE = 0.5                 # seconds of virtual time
 
+# Online re-characterization / pre-screen knobs.
+TABLE_CAPACITY = 512               # padded JaxControllerTables rows: tables
+                                   # of any kept-set size share one compiled
+                                   # controller step (no recompile on swap)
+RECHAR_CLIP_LEN = 16               # log-tail frames per online re-sweep
+PRESCREEN_SLACK = 1.25             # proxy overshoot tolerance vs the size
+                                   # budget before stepping a setting down
+PRESCREEN_MAX_CANDIDATES = 3       # bounded candidate walk per frame
+
 
 class CamBroker:
     """Broker + log + controller on one IoT camera node."""
@@ -67,19 +78,33 @@ class CamBroker:
         self.fps = fps
         self.log = HostLog(log_capacity, topic=camera_id)
         self.controller: LatencyController | None = None
+        # device-array twin of the controller's tables, padded to
+        # TABLE_CAPACITY: a jitted controller_step consumer reads these and
+        # survives online re-characterization without recompiling
+        self.jax_tables: JaxControllerTables | None = None
+        self.table_version = 0
         self.store = store
         self.crashed = False
         self._last_sent: np.ndarray | None = None
         self._background: np.ndarray | None = None
         self._bg_memo: K.TransformMemo | None = None
-        # (timestamp, transform key) -> (payload, wire_bytes): fan-out of one
-        # camera to several subscriptions reuses the knob transform + deflate
-        # instead of recomputing them per fetch (simulated latency numbers
-        # are untouched -- the cost model still charges the camera's
-        # per-frame modification overhead).
-        self._payload_cache: dict[tuple, tuple[np.ndarray, int]] = {}
+        # (timestamp, transform key) -> [payload, wire_bytes|None]: fan-out
+        # of one camera to several subscriptions reuses the knob transform +
+        # deflate instead of recomputing them per fetch (simulated latency
+        # numbers are untouched -- the cost model still charges the camera's
+        # per-frame modification overhead).  wire_bytes stays None until a
+        # frame is actually shipped: the pre-screen only ever needs the
+        # payload + proxy features, never exact deflate.
+        self._payload_cache: dict[tuple, list] = {}
+        # last successful re-sweep's (log state, sweep params): a repeat
+        # request over the SAME published frames (e.g. a session-level
+        # update_qos fanning out over subscriptions sharing this camera)
+        # is a no-op instead of a redundant grid sweep
+        self._rechar_memo: tuple | None = None
         self.payload_cache_hits = 0
         self.infeasible_reported = 0
+        self.prescreen_evals = 0
+        self.prescreen_stepdowns = 0
 
     # -- background model (knob4 + subscriber-side degradation) ------------------
     @property
@@ -91,6 +116,7 @@ class CamBroker:
         self._background = bg
         self._bg_memo = K.TransformMemo(bg) if bg is not None else None
         self._payload_cache.clear()
+        self._rechar_memo = None           # sweeps keyed the old background
 
     def degraded_background(self, setting: K.KnobSetting) -> np.ndarray | None:
         """The camera's background model pushed through ``setting``'s
@@ -118,6 +144,66 @@ class CamBroker:
         cfg = dataclasses.replace(cfg, latency_target=latency,
                                   accuracy_target=accuracy)
         self.controller = LatencyController(cfg, table, regression)
+        self._install_jax_tables(table)
+        self._rechar_memo = None           # externally supplied tables
+
+    def _install_jax_tables(self, table: CharacterizationTable) -> None:
+        fresh = JaxControllerTables.from_table(
+            table, capacity=max(TABLE_CAPACITY, len(table.settings)))
+        self.jax_tables = swap_tables(self.jax_tables, fresh)
+        self.table_version += 1
+
+    def recharacterize(self, *, clip_len: int = RECHAR_CLIP_LEN,
+                       min_accuracy: float | None = None,
+                       include_artifact: bool | None = None,
+                       detector_thresh: float = 28.0) -> bool:
+        """Re-sweep the knob grid over this camera's OWN recent frames and
+        hot-swap the result into the live controller (host + jit twin).
+
+        The clip is the log tail (what the camera actually published just
+        now), the background is the installed model, and accuracies are
+        normalized against the full-quality stream's detections -- no
+        labels needed.  ``min_accuracy`` and ``include_artifact`` default
+        to the LIVE table's own floor and knob4 coverage, so a routine
+        ``update_qos(recharacterize=True)`` refreshes measurements without
+        silently reshaping the controller's trade space.  Returns False
+        (leaving the stale tables serving) when the broker has no
+        controller/background yet, the log is too short, the camera
+        geometry is outside the batched engine's coverage, or the re-sweep
+        kept no settings.
+        """
+        if self.crashed:
+            raise BrokerDown(self.camera_id)
+        if self.controller is None or self._background is None:
+            return False
+        live = self.controller.table
+        if min_accuracy is None:
+            min_accuracy = getattr(live, "min_accuracy", 0.90)
+        if include_artifact is None:
+            include_artifact = getattr(live, "includes_artifact", False)
+        memo_key = (self.log.appends, clip_len, min_accuracy,
+                    include_artifact, detector_thresh)
+        if memo_key == self._rechar_memo:
+            return True          # tables already fresh for this log state
+        clip = [f for _, f in self.log.tail(clip_len)]
+        if len(clip) < 4:
+            return False
+        from repro.core import grid_engine
+        try:
+            table, jt = grid_engine.refresh_tables(
+                self._background, clip, min_accuracy=min_accuracy,
+                include_artifact=include_artifact,
+                detector_thresh=detector_thresh, capacity=TABLE_CAPACITY)
+        except ValueError:
+            return False         # odd geometry etc: keep the stale tables
+        if not table.settings:
+            return False
+        self.controller.swap_table(table)
+        self.jax_tables = swap_tables(self.jax_tables, jt)
+        self.table_version += 1
+        self._payload_cache.clear()
+        self._rechar_memo = memo_key
+        return True
 
     def retarget(self, latency: float, accuracy: float) -> bool:
         """Renegotiate bounds on the LIVE controller (v2 ``update_qos``):
@@ -156,6 +242,7 @@ class CamBroker:
         knob_idx = -1
         controller_cost = 0.0
         setting = None
+        decision = None
         infeasible = False
         if controlled and self.controller is not None and latency_feedback is not None:
             decision = self.controller.update(latency_feedback)
@@ -172,18 +259,29 @@ class CamBroker:
             if max_frames is not None and len(out) >= max_frames:
                 break
             if setting is not None:
-                r = self._apply_knobs_cached(ts, frame, setting)
+                eff_setting, eff_idx, entry = setting, knob_idx, None
+                drop = K.frame_difference(frame, self._last_sent,
+                                          K.DIFF_THRESHOLDS[setting.diff])
+                if decision is not None and not drop:
+                    # knob5 short-circuit: a frame the decision drops never
+                    # pays the transform/pre-screen pipeline; the walk is
+                    # pinned to the decision's diff axis, so `drop` stays
+                    # valid for whatever setting the pre-screen picks
+                    eff_setting, eff_idx, entry = self._prescreen(
+                        ts, frame, decision)
+                r = self._apply_knobs_cached(ts, frame, eff_setting,
+                                             entry=entry, drop=drop)
                 controller_cost = r.overhead_ms * 1e-3
                 if r.frame is None:
                     out.append(DeliveredFrame(
                         self.camera_id, ts, None, 0,
                         LatencyBreakdown(controller=controller_cost),
-                        knob_idx, infeasible))
+                        eff_idx, infeasible))
                     continue
                 self._last_sent = frame
-                payload, nbytes = r.frame, r.wire_bytes
+                payload, nbytes, idx = r.frame, r.wire_bytes, eff_idx
             else:
-                payload, nbytes = frame, wire_size(frame)
+                payload, nbytes, idx = frame, wire_size(frame), knob_idx
             net = self.channel.transfer(nbytes, fps=self.fps,
                                         distance_m=self.distance_m)
             copy = LOG_COPY_COST_PER_MB * (
@@ -193,11 +291,91 @@ class CamBroker:
                 LatencyBreakdown(publish_api=PUBLISH_API_COST,
                                  controller=controller_cost,
                                  log_copy=copy, network=net),
-                knob_idx, infeasible))
+                idx, infeasible))
         return out
 
+    def _prescreen(self, ts: float, frame: np.ndarray,
+                   decision) -> tuple[K.KnobSetting, int, list | None]:
+        """Per-frame wire-size pre-screen of the controller's candidate.
+
+        The characterization table's per-setting sizes are CLIP MEDIANS; the
+        frame about to ship can compress far worse (a busy scene after a
+        calm calibration clip) and blow the controller's size budget.  With
+        a proxy-calibrated table (batched engine), the candidate payload's
+        byte-delta features predict its deflate size for free, and an
+        overshooting candidate steps down the table (largest smaller-size
+        setting still above the accuracy bound) BEFORE exact deflate runs --
+        the same CANS-style pre-selection the characterization sweep uses,
+        now on the stream hot path.  Bounded walk; falls back to the
+        controller's own choice when no proxy is installed.  Returns
+        (setting, index, cache entry of the accepted payload) so the
+        caller never re-walks the cache for the frame it ships.
+        """
+        table = self.controller.table
+        # getattr: tables unpickled from pre-proxy benchmark caches lack
+        # the field entirely -- treat them like reference-engine tables
+        proxy = getattr(table, "proxy", None)
+        setting, idx = decision.setting, decision.setting_index
+        if (proxy is None or setting is None or idx < 0
+                or not decision.acted or not decision.feasible):
+            return setting, idx, None
+        budget = float(decision.requested_size)
+        floor = self.controller.config.accuracy_target
+        entry = None
+        for walk in range(PRESCREEN_MAX_CANDIDATES):
+            entry = self._transform_cached(ts, frame, setting)
+            payload = entry[0]
+            self.prescreen_evals += 1
+            if entry[1] is not None:
+                est = float(entry[1])       # exact deflate already known
+            else:
+                feats = FK.proxy_features_host(payload)
+                est = float(proxy.predict(setting.colorspace, payload.nbytes,
+                                          feats, art=setting.artifact > 0))
+            # stop on a fitting candidate, or ship the last-evaluated one
+            # (never step to a setting we won't evaluate: the returned
+            # entry must be the returned setting's payload)
+            if (est <= budget * PRESCREEN_SLACK
+                    or walk == PRESCREEN_MAX_CANDIDATES - 1):
+                break
+            down = table.step_down(idx, floor, diff=setting.diff)
+            if down < 0:
+                break
+            idx = down
+            setting = table.setting_for(idx)
+            self.prescreen_stepdowns += 1
+        return setting, idx, entry
+
+    def _transform_cached(self, ts: float, frame: np.ndarray,
+                          setting: K.KnobSetting) -> list:
+        """The pure knob transform (knob4 -> colorspace -> resize -> blur)
+        memoized per (timestamp, transform key); returns the mutable
+        ``[payload, wire_bytes|None]`` cache entry.  Deflate is filled in
+        lazily by ``_apply_knobs_cached`` only for frames actually shipped,
+        so the pre-screen never pays zlib for rejected candidates."""
+        key = (ts, setting.resolution, setting.colorspace, setting.blur,
+               setting.artifact)
+        entry = self._payload_cache.get(key)
+        if entry is not None:
+            self.payload_cache_hits += 1
+            return entry
+        out = frame
+        mode = K.ARTIFACT_MODES[setting.artifact]
+        if mode != "off":
+            bg = (self.background if self.background is not None
+                  else np.zeros_like(frame))
+            out = K._artifact_removal(out, bg, mode)
+        out = K.transform_frame(out, setting)
+        entry = [out, None]
+        if len(self._payload_cache) >= 512:           # bounded: ring-ish evict
+            self._payload_cache.pop(next(iter(self._payload_cache)))
+        self._payload_cache[key] = entry
+        return entry
+
     def _apply_knobs_cached(self, ts: float, frame: np.ndarray,
-                            setting: K.KnobSetting) -> K.KnobResult:
+                            setting: K.KnobSetting, *,
+                            entry: list | None = None,
+                            drop: bool | None = None) -> K.KnobResult:
         """``apply_knobs`` with the transformed payload memoized per
         (timestamp, transform key).
 
@@ -205,26 +383,23 @@ class CamBroker:
         camera's last *sent* frame) and stays per-call; only the pure
         transform + deflate of a surviving frame is reused, so several
         subscriptions fanning out from one camera pay the image pipeline
-        once.  Numerically identical to calling ``apply_knobs`` directly.
+        once.  ``fetch`` passes the ``drop`` decision it already computed
+        for this (frame, diff threshold) so the O(H*W) differencing never
+        runs twice, and ``entry`` lets the pre-screen hand over the cache
+        entry it already resolved for ``setting`` (no second lookup, no
+        inflated hit counter).  Numerically identical to calling
+        ``apply_knobs`` directly.
         """
-        if K.frame_difference(frame, self._last_sent,
-                              K.DIFF_THRESHOLDS[setting.diff]):
+        if drop is None:
+            drop = K.frame_difference(frame, self._last_sent,
+                                      K.DIFF_THRESHOLDS[setting.diff])
+        if drop:
             return K.KnobResult(None, 0, setting.overhead_ms)
-        key = (ts, setting.resolution, setting.colorspace, setting.blur,
-               setting.artifact)
-        hit = self._payload_cache.get(key)
-        if hit is not None:
-            self.payload_cache_hits += 1
-            payload, nbytes = hit
-        else:
-            r = apply_knobs(frame, dataclasses.replace(setting, diff=0),
-                            background=self.background, last_sent=None)
-            assert r.frame is not None
-            payload, nbytes = r.frame, r.wire_bytes
-            if len(self._payload_cache) >= 512:       # bounded: ring-ish evict
-                self._payload_cache.pop(next(iter(self._payload_cache)))
-            self._payload_cache[key] = (payload, nbytes)
-        return K.KnobResult(payload, nbytes, setting.overhead_ms)
+        if entry is None:
+            entry = self._transform_cached(ts, frame, setting)
+        if entry[1] is None:
+            entry[1] = wire_size(entry[0])
+        return K.KnobResult(entry[0], entry[1], setting.overhead_ms)
 
     # -- fault tolerance -----------------------------------------------------------
     def crash(self) -> None:
@@ -515,13 +690,19 @@ class EdgeBroker:
 
     def update_subscription_qos(self, subscription_id: str, *,
                                 latency: float | None = None,
-                                accuracy: float | None = None) -> QosUpdate:
+                                accuracy: float | None = None,
+                                recharacterize: bool = False) -> QosUpdate:
         """Renegotiate (latency, accuracy) bounds on a LIVE subscription.
 
         The per-camera ``LatencyController`` is retargeted in place (paper
         Fig. 9 SetTarget at runtime): no teardown, no resubscribe, cursors
-        and feedback windows survive.  Cameras that are crashed fail the
-        update individually (RPC_TIMEOUT event) without aborting the rest.
+        and feedback windows survive.  With ``recharacterize``, each
+        camera's knob tables are first re-swept over its own recent frames
+        (``CamBroker.recharacterize``) and hot-swapped into the live
+        controller -- host and jitted twin alike -- so the renegotiated
+        bounds bind against CURRENT scene/network statistics, not the
+        startup calibration clip.  Cameras that are crashed fail the update
+        individually (RPC_TIMEOUT event) without aborting the rest.
         """
         if self.crashed:
             raise RPCTimeout("EdgeBroker down")
@@ -530,6 +711,7 @@ class EdgeBroker:
             return QosUpdate(latency or 0.0, accuracy or 0.0, Status.FAIL,
                              (), subscription_id)
         applied: list[str] = []
+        recharacterized: list[str] = []
         new_lat = new_acc = 0.0
         for cid, cur in rec.cameras.items():
             if cur.detached or cur.failed:
@@ -542,6 +724,10 @@ class EdgeBroker:
             if cam is None:
                 continue
             try:
+                if recharacterize and cam.recharacterize():
+                    recharacterized.append(cid)
+                # retarget AFTER the table swap: the operating point
+                # re-seeds into the freshly characterized size axis
                 if cam.retarget(new_lat, new_acc):
                     applied.append(cid)
             except BrokerDown as e:
@@ -551,7 +737,8 @@ class EdgeBroker:
                     str(e)))
         return QosUpdate(new_lat, new_acc,
                          Status.OK if applied else Status.FAIL,
-                         tuple(applied), subscription_id)
+                         tuple(applied), subscription_id,
+                         recharacterized=tuple(recharacterized))
 
     def close_subscription(self, subscription_id: str) -> Status:
         """Explicit teardown: evicts the record and scrubs the legacy
@@ -580,6 +767,14 @@ class EdgeBroker:
         out = list(rec.events)
         rec.events.clear()
         return out
+
+    def session_subscription_ids(self, session_id: str) -> list[str]:
+        """Live subscription ids of a session (``Session.update_qos`` fans
+        a renegotiation out over these)."""
+        sess = self._sessions.get(session_id)
+        if sess is None:
+            return []
+        return [sid for sid in sess.sub_ids if sid in self._subscriptions]
 
     def session_events(self, session_id: str) -> list[SessionEvent]:
         """Drain pending events across all subscriptions of a session."""

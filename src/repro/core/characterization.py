@@ -25,24 +25,34 @@ Two engines share the semantics:
     settings dimension, wire sizes from the calibrated byte-delta proxy
     (zlib runs once per transform combo instead of once per setting-frame).
     Minutes -> seconds: cheap enough to re-run on live QoS renegotiation.
+    Covers knob4 (``include_artifact=True``) device-side; only non-BGR or
+    odd-geometry cameras need the reference engine.
 
 ``engine="reference"``  the seed per-frame NumPy path, kept verbatim as the
     oracle (exact zlib sizes, host detector).  Also the fallback for
-    knob4 characterization (``include_artifact=True``) and non-BGR or
-    odd-geometry cameras, which the device grid does not cover.
+    non-BGR or odd-geometry cameras, which the device grid does not cover.
+
+``table_from_grid`` scores an already-run ``GridCharacterization`` into a
+table -- the shared back half of the batched engine, also driven by
+``grid_engine.refresh_tables`` for online re-characterization (where the
+full-quality detections stand in for ground truth).
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import TYPE_CHECKING
 
 import numpy as np
 
 from repro.core import detector as det
 from repro.core import knobs as K
 
+if TYPE_CHECKING:
+    from repro.core.grid_engine import GridCharacterization, WireSizeProxy
+
 __all__ = ["LatencyRegression", "CharacterizationTable", "characterize",
-           "fit_latency_regression"]
+           "table_from_grid", "fit_latency_regression"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +87,15 @@ class CharacterizationTable:
     settings          : the characterized knob settings (knob4 excluded by default)
     acc_by_setting    : accuracy of each setting
     size_by_setting   : median wire size of each setting
+    proxy             : the batched engine's calibrated wire-size proxy
+                        (None for reference-engine tables) -- lets
+                        ``CamBroker.fetch`` pre-screen candidate settings
+                        against the controller's size budget without
+                        paying deflate per candidate
+    min_accuracy      : the accuracy floor this table was filtered at --
+                        online re-characterization re-applies the SAME
+                        floor so the trade space doesn't silently shrink
+                        or grow across a refresh
     """
     settings: tuple[K.KnobSetting, ...]
     sizes_sorted: np.ndarray
@@ -84,6 +103,16 @@ class CharacterizationTable:
     best_idx: np.ndarray
     acc_by_setting: np.ndarray
     size_by_setting: np.ndarray
+    proxy: "WireSizeProxy | None" = None
+    min_accuracy: float = 0.90
+
+    @property
+    def includes_artifact(self) -> bool:
+        """Whether knob4 settings survived into this table.  Online
+        re-characterization keys its sweep breadth on this: a live table
+        trading on knob4 must not lose that axis across a refresh (a table
+        that kept none re-sweeps without knob4, the cheaper default)."""
+        return any(s.artifact > 0 for s in self.settings)
 
     def query_size(self, wire_bytes: float) -> tuple[float, int]:
         """size -> (best achievable accuracy, knob-setting index).
@@ -99,6 +128,25 @@ class CharacterizationTable:
     def setting_for(self, idx: int) -> K.KnobSetting:
         return self.settings[idx]
 
+    def step_down(self, idx: int, accuracy_floor: float, *,
+                  diff: int | None = None) -> int:
+        """The next-smaller-size characterized setting that still clears
+        ``accuracy_floor`` -- the candidate walk of ``CamBroker.fetch``'s
+        wire-size pre-screen.  ``diff`` pins the knob5 axis: the pre-screen
+        trades transform fidelity for bytes, it must NOT change the drop
+        semantics the controller decided on mid-walk.  Returns -1 when no
+        smaller setting qualifies."""
+        size = self.size_by_setting[idx]
+        best = -1
+        best_size = -1.0
+        for j, (s, a) in enumerate(zip(self.size_by_setting,
+                                       self.acc_by_setting)):
+            if diff is not None and self.settings[j].diff != diff:
+                continue
+            if s < size and a >= accuracy_floor and s > best_size:
+                best, best_size = j, float(s)
+        return best
+
     # -- jit-ready views ---------------------------------------------------------
     def as_arrays(self) -> dict[str, np.ndarray]:
         return {
@@ -109,7 +157,8 @@ class CharacterizationTable:
 
 
 def _build_table(settings, sizes: np.ndarray, accs: np.ndarray,
-                 min_accuracy: float) -> CharacterizationTable:
+                 min_accuracy: float,
+                 proxy=None) -> CharacterizationTable:
     """keep/sort/prefix-max assembly, shared by both engines."""
     keep = (accs >= min_accuracy) & (sizes > 0)
     settings_kept = tuple(s for s, k in zip(settings, keep) if k)
@@ -138,6 +187,8 @@ def _build_table(settings, sizes: np.ndarray, accs: np.ndarray,
         best_idx=best_idx,
         acc_by_setting=accs_k,
         size_by_setting=sizes_k,
+        proxy=proxy,
+        min_accuracy=min_accuracy,
     )
 
 
@@ -152,26 +203,34 @@ def characterize(camera_factory, *, clip_len: int = 24,
     ``SyntheticCamera`` so every knob setting sees the same clip.
 
     ``engine`` selects the sweep implementation: ``"batched"`` (the
-    device-resident grid engine), ``"reference"`` (the per-frame NumPy
-    oracle), or ``"auto"`` (batched whenever the camera geometry and knob
-    subset support it -- knob4 and non-BGR cameras fall back to reference).
+    device-resident grid engine, knob4 included when asked), ``"reference"``
+    (the per-frame NumPy oracle), or ``"auto"`` (batched whenever the camera
+    geometry supports it -- non-BGR and odd-geometry cameras fall back to
+    reference).  ``engine="batched"`` raises ``ValueError`` on unsupported
+    geometry instead of silently degrading.
     """
     cam = camera_factory()
     bg = cam.background
     clip = [cam.next_frame() for _ in range(clip_len)]
 
+    batched_ok = (bg.ndim == 3 and bg.shape[2] == 3
+                  and bg.shape[0] % 2 == 0 and bg.shape[1] % 2 == 0)
     if engine == "auto":
-        batched_ok = (not include_artifact and bg.ndim == 3
-                      and bg.shape[2] == 3
-                      and bg.shape[0] % 2 == 0 and bg.shape[1] % 2 == 0)
         engine = "batched" if batched_ok else "reference"
     if engine == "batched":
-        if include_artifact:
+        if not batched_ok:
             raise ValueError(
-                "the batched engine does not characterize knob4 "
-                "(artifact removal) -- use engine='reference' or 'auto'")
-        settings, sizes, accs = _sweep_batched(
-            bg, clip, detector_thresh=detector_thresh)
+                f"engine='batched' needs an even-dimension 3-channel "
+                f"background (4:2:0-subsample-able planes); got shape "
+                f"{bg.shape}.  Use engine='reference' for odd geometries, "
+                f"or engine='auto' to fall back automatically.")
+        from repro.core import grid_engine
+        grid = grid_engine.run_grid(bg, [f for _, f, _ in clip],
+                                    detector_thresh=detector_thresh,
+                                    include_artifact=include_artifact)
+        return table_from_grid(grid, [gt for _, _, gt in clip],
+                               min_accuracy=min_accuracy,
+                               include_artifact=include_artifact)
     elif engine == "reference":
         settings, sizes, accs = _sweep_reference(
             bg, clip, include_artifact=include_artifact,
@@ -186,24 +245,33 @@ def characterize(camera_factory, *, clip_len: int = 24,
 # =============================================================================
 
 
-def _sweep_batched(bg, clip, *, detector_thresh: float):
-    from repro.core import grid_engine
+def table_from_grid(grid: "GridCharacterization", gts: list[np.ndarray], *,
+                    min_accuracy: float = 0.90,
+                    include_artifact: bool = False) -> CharacterizationTable:
+    """Score a batched grid sweep into a ``CharacterizationTable``.
 
-    grid = grid_engine.run_grid(bg, [f for _, f, _ in clip],
-                                detector_thresh=detector_thresh)
-    clip_len = len(clip)
-    settings = K.enumerate_settings(include_artifact=False)
+    ``gts`` is one ground-truth box array per clip frame.  Online
+    re-characterization (``grid_engine.refresh_tables``) passes the
+    full-quality combo's own detections here, making accuracies normalized
+    F1 against the unmodified stream -- the controller's actual trade
+    currency -- without needing labels at runtime.
+    """
+    clip_len = len(gts)
+    if include_artifact and not grid.include_artifact:
+        raise ValueError("grid was run without include_artifact; re-run "
+                         "run_grid(include_artifact=True)")
+    settings = K.enumerate_settings(include_artifact=include_artifact)
 
     # per-frame match counts per transform combo, computed once and summed
     # per setting according to its drop pattern (knob5 never changes
     # surviving pixels, so detections are shared across diff thresholds)
-    counts: dict[tuple[int, int, int], np.ndarray] = {}
+    counts: dict[tuple[int, int, int, int], np.ndarray] = {}
     for combo, boxes in grid.dets.items():
         counts[combo] = np.asarray(
-            [det.match_f1(gt, boxes[fi]) for fi, (_, _, gt) in enumerate(clip)],
+            [det.match_f1(gts[fi], boxes[fi]) for fi in range(clip_len)],
             np.int64)
-    gt_sizes = np.asarray([len(gt) for _, _, gt in clip], np.int64)
-    base = counts[(0, 0, 0)].sum(axis=0)
+    gt_sizes = np.asarray([len(gt) for gt in gts], np.int64)
+    base = counts[(0, 0, 0, 0)].sum(axis=0)
     base_f1 = det.f1_from_counts(*base)
 
     drop_patterns = {di: grid.drop_pattern(thresh)
@@ -212,7 +280,7 @@ def _sweep_batched(bg, clip, *, detector_thresh: float):
     sizes = np.zeros(len(settings))
     accs = np.zeros(len(settings))
     for si, s in enumerate(settings):
-        combo = (s.resolution, s.colorspace, s.blur)
+        combo = (s.resolution, s.colorspace, s.blur, s.artifact)
         drops = drop_patterns[s.diff]
         kept = ~drops
         c = counts[combo][kept].sum(axis=0)
@@ -222,7 +290,8 @@ def _sweep_batched(bg, clip, *, detector_thresh: float):
         accs[si] = f1 / base_f1 if base_f1 > 0 else 0.0
         kept_sizes = grid.sizes[combo][kept[:clip_len]]
         sizes[si] = float(np.median(kept_sizes)) if kept_sizes.size else 0.0
-    return settings, sizes, accs
+    return _build_table(settings, sizes, accs, min_accuracy,
+                        proxy=grid.proxy)
 
 
 # =============================================================================

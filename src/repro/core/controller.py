@@ -11,6 +11,14 @@ Two implementations with identical control law:
                           a compiled step, where it drives the approximate-
                           collective knob (core/approx_comm.py).
 
+``JaxControllerTables`` are TRACED inputs of ``controller_step``: padded to a
+fixed ``capacity`` with an ``n_valid`` row count, a freshly characterized
+table (``grid_engine.refresh_tables``) hot-swaps into a compiled step with no
+recompile -- ``swap_tables`` reuses the live tables' donated device buffers.
+That closes the online re-characterization loop: ``Session.update_qos``
+re-runs the batched sweep and the very next compiled step consumes the new
+tables.
+
 Control law (Algorithm 1):
 
     nominal   = Regression^-1(latency_target)              # bytes
@@ -28,6 +36,7 @@ auto-scaled from the regression slope so they are expressed in natural units
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +47,7 @@ from repro.core.knobs import KnobSetting
 
 __all__ = ["ControllerConfig", "ControlDecision", "LatencyController",
            "JaxControllerTables", "ControllerState", "controller_init",
-           "controller_step"]
+           "controller_step", "swap_tables"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +113,18 @@ class LatencyController:
                           self.table.sizes_sorted[-1])))
         self._current = int(idx)
 
+    def swap_table(self, table: CharacterizationTable) -> None:
+        """Hot-swap a freshly characterized table (online
+        re-characterization).  Unlike ``set_target`` this keeps the PI
+        state: the integral carries over (network conditions did not reset
+        just because the tables did) and only the operating point is
+        re-seeded into the new table's size axis."""
+        self.table = table
+        _, idx = table.query_size(
+            float(np.clip(self._nominal, table.sizes_sorted[0],
+                          table.sizes_sorted[-1])))
+        self._current = int(idx)
+
     def update(self, latency_sampled: float) -> ControlDecision:
         cfg = self.config
         error = latency_sampled - cfg.latency_target
@@ -152,23 +173,79 @@ class LatencyController:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class JaxControllerTables:
-    """Characterization tables as device arrays (sorted by size)."""
-    sizes_sorted: jax.Array   # f32[n]
-    best_acc: jax.Array       # f32[n]
-    best_idx: jax.Array       # i32[n]
+    """Characterization tables as device arrays (sorted by size).
+
+    Every field is a pytree LEAF, so the whole object is a traced input of
+    ``controller_step`` -- refreshed values flow into a compiled step
+    without retracing.  ``from_table(capacity=)`` pads the row axis to a
+    fixed size (``sizes_sorted`` with +inf so ``searchsorted`` never lands
+    in the padding) and records the live row count in ``n_valid``; tables
+    of any kept-set size then share ONE compiled step, which is what makes
+    online re-characterization swap-in free.
+    """
+    sizes_sorted: jax.Array   # f32[capacity], +inf beyond n_valid
+    best_acc: jax.Array       # f32[capacity]
+    best_idx: jax.Array       # i32[capacity], -1 beyond n_valid
+    n_valid: jax.Array = None  # i32[], live rows (defaults to capacity)
+
+    def __post_init__(self):
+        if self.n_valid is None:
+            self.n_valid = jnp.asarray(self.sizes_sorted.shape[0], jnp.int32)
 
     def tree_flatten(self):
-        return ((self.sizes_sorted, self.best_acc, self.best_idx), None)
+        return ((self.sizes_sorted, self.best_acc, self.best_idx,
+                 self.n_valid), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children)
 
     @classmethod
-    def from_table(cls, table: CharacterizationTable) -> "JaxControllerTables":
+    def from_table(cls, table: CharacterizationTable, *,
+                   capacity: int | None = None) -> "JaxControllerTables":
         a = table.as_arrays()
-        return cls(jnp.asarray(a["sizes_sorted"]), jnp.asarray(a["best_acc"]),
-                   jnp.asarray(a["best_idx"]))
+        n = a["sizes_sorted"].shape[0]
+        cap = n if capacity is None else int(capacity)
+        if cap < n:
+            raise ValueError(f"capacity {cap} < {n} characterized settings")
+        pad = cap - n
+        sizes = np.concatenate([a["sizes_sorted"],
+                                np.full(pad, np.inf, np.float32)])
+        acc = np.concatenate([a["best_acc"], np.zeros(pad, np.float32)])
+        idx = np.concatenate([a["best_idx"], np.full(pad, -1, np.int32)])
+        return cls(jnp.asarray(sizes), jnp.asarray(acc), jnp.asarray(idx),
+                   jnp.asarray(n, jnp.int32))
+
+
+def swap_tables(live: JaxControllerTables | None,
+                fresh: JaxControllerTables) -> JaxControllerTables:
+    """Hot-swap refreshed tables into a running compiled consumer.
+
+    With matching capacities the swap is shape-stable (no recompile of any
+    jitted step consuming the tables); on accelerator backends the live
+    tables' buffers are donated so XLA reuses them in place instead of
+    allocating.  Shape mismatch (capacity changed) falls through to the
+    fresh tables -- consumers recompile once, which is the correct cost.
+    """
+    if live is None:
+        return fresh
+    live_leaves = jax.tree_util.tree_leaves(live)
+    fresh_leaves = jax.tree_util.tree_leaves(fresh)
+    if any(l.shape != f.shape or l.dtype != f.dtype
+           for l, f in zip(live_leaves, fresh_leaves)):
+        return fresh
+    if jax.default_backend() == "cpu":
+        # donation is a no-op on CPU; skip the jit round-trip (and its
+        # "donated buffers were not usable" warning)
+        return fresh
+    return _swap_tables_donated(live, fresh)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _swap_tables_donated(live: JaxControllerTables,
+                         fresh: JaxControllerTables) -> JaxControllerTables:
+    del live  # buffers reused by XLA for the identically-shaped output
+    return fresh
 
 
 @jax.tree_util.register_pytree_node_class
@@ -188,11 +265,19 @@ class ControllerState:
         return cls(*children)
 
 
-def controller_init(tables: JaxControllerTables) -> ControllerState:
-    n = tables.best_idx.shape[0]
+def controller_init(tables: JaxControllerTables, *,
+                    start_idx: int | jax.Array | None = None
+                    ) -> ControllerState:
+    """Initial state: the highest-fidelity characterized setting, or an
+    explicit ``start_idx`` (e.g. the host controller's seeded operating
+    point, for lockstep host/jit comparisons)."""
+    if start_idx is None:
+        start = jnp.take(tables.best_idx, tables.n_valid - 1)
+    else:
+        start = jnp.asarray(start_idx)
     return ControllerState(
         integral=jnp.zeros((), jnp.float32),
-        current_idx=tables.best_idx[n - 1].astype(jnp.int32),
+        current_idx=start.astype(jnp.int32),
         feasible=jnp.ones((), bool),
         last_error=jnp.zeros((), jnp.float32),
     )
@@ -206,6 +291,10 @@ def controller_step(state: ControllerState, latency_sampled: jax.Array,
                     alpha_i: float = 0.25, integral_clip: float = 1.0,
                     relax: bool = True) -> tuple[ControllerState, jax.Array]:
     """One PI update, fully traceable.  Returns (new_state, knob_index).
+
+    ``tables`` is a TRACED input: hot-swapped tables (same capacity, any
+    ``n_valid``) flow through a compiled caller with no retrace -- see
+    ``swap_tables`` / ``JaxControllerTables.from_table(capacity=)``.
 
     knob_index is an i32 scalar indexing the characterized settings; -1 when
     no feasible setting exists (the compiled consumer falls back to the
@@ -226,9 +315,11 @@ def controller_step(state: ControllerState, latency_sampled: jax.Array,
     integral = jnp.where(act, new_integral, state.integral)
 
     size = nominal + k1 * error + k2 * integral
-    size = jnp.clip(size, tables.sizes_sorted[0], tables.sizes_sorted[-1])
+    # clip into the LIVE size range (padding rows carry +inf)
+    hi = jnp.take(tables.sizes_sorted, tables.n_valid - 1)
+    size = jnp.clip(size, tables.sizes_sorted[0], hi)
     pos = jnp.searchsorted(tables.sizes_sorted, size, side="right") - 1
-    pos = jnp.clip(pos, 0, tables.sizes_sorted.shape[0] - 1)
+    pos = jnp.clip(pos, 0, tables.n_valid - 1)
     accuracy = tables.best_acc[pos]
     idx = tables.best_idx[pos]
 

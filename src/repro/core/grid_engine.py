@@ -53,7 +53,7 @@ from repro.core import knobs as K
 from repro.kernels import frame_knobs as FK
 
 __all__ = ["GridCharacterization", "WireSizeProxy", "run_grid",
-           "PIXEL_DELTA"]
+           "refresh_tables", "PIXEL_DELTA"]
 
 PIXEL_DELTA = 8.0        # knobs.frame_difference's noise-robust change delta
 _FRAME_BUCKET = 16       # frame-axis padding so jit caches are shared
@@ -76,21 +76,49 @@ def _payload_gray(payload: jax.Array) -> jax.Array:
     return pf[..., 0, :, :]
 
 
-@functools.partial(jax.jit, static_argnames=("cs",))
-def _transform_group(frames: jax.Array, ry, rx, bys, bxs, cs: int):
+@functools.partial(jax.jit, static_argnames=("cs", "art_modes"))
+def _transform_group(frames: jax.Array, ry, rx, bys, bxs, cs: int,
+                     bg=None, enable=None,
+                     art_modes: tuple[int, ...] = (0,)):
     """XLA twin of the Pallas ``frame_knob_grid``, batched over (settings,
     frames): payload u8 [S,F,P,oh,ow], proxy feats [S,F,6], and the
     detector's background diff [S,F-1,gh,gw] (frame 0 is the background).
 
-    The colorspace stage is the kernel's own ``_to_planes`` vmapped over the
-    clip, so the twin cannot drift from the Pallas math.
+    The colorspace/artifact stages are the kernel's own helpers vmapped over
+    the clip, so the twin cannot drift from the Pallas math.  ``art_modes``
+    is the plan's own mode tuple (artifact-major setting blocks of
+    ``S // len(art_modes)`` blur settings each): each block applies the
+    mask of its ACTUAL mode id, exactly like the kernel's per-setting
+    ``art_ids``.  ``enable`` exempts the background/padding frames from
+    knob4.
     """
-    planes = jax.vmap(lambda fr: FK._to_planes(fr, cs))(frames)   # [F,P,Hc,W]
+    n_art = len(art_modes)
 
-    rs = jnp.einsum("ah,fphw->fpaw", ry, planes)                  # knob1
-    rs = jnp.einsum("bw,fpaw->fpab", rx, rs)
-    rs = jnp.clip(jnp.round(rs), 0, 255)
-    bl = jnp.einsum("sab,fpbw->sfpaw", bys, rs)                   # knob3
+    def pipeline(fr):
+        planes = jax.vmap(lambda f: FK._to_planes(f, cs))(fr)     # [F,P,Hc,W]
+        rs = jnp.einsum("ah,fphw->fpaw", ry, planes)              # knob1
+        rs = jnp.einsum("bw,fpaw->fpab", rx, rs)
+        return jnp.clip(jnp.round(rs), 0, 255)
+
+    if art_modes == (0,):
+        resized = pipeline(frames)[None]                          # [1,F,P,a,b]
+    else:
+        movers, contours = jax.vmap(
+            lambda f: FK._artifact_masks(f, bg, thresh=FK.ARTIFACT_THRESH)
+        )(frames)
+        off = (enable == 0)[:, None, None]
+        keep_of_mode = {0: None, 1: movers | off, 2: contours | off}
+        resized = jnp.stack([
+            pipeline(frames if keep_of_mode[mode] is None
+                     else jnp.where(keep_of_mode[mode][..., None], frames,
+                                    jnp.zeros_like(frames)))
+            for mode in art_modes])                               # [A,F,P,a,b]
+
+    s = bys.shape[0]
+    per = s // n_art
+    bl = jnp.concatenate([
+        jnp.einsum("sab,fpbw->sfpaw", bys[a * per:(a + 1) * per], resized[a])
+        for a in range(n_art)])                                   # knob3
     bl = jnp.einsum("scw,sfpaw->sfpac", bxs, bl)
     payload = jnp.clip(jnp.round(bl), 0, 255).astype(jnp.uint8)
 
@@ -180,37 +208,41 @@ def _change_counts(frames: jax.Array) -> jax.Array:
 
 @dataclasses.dataclass
 class WireSizeProxy:
-    """Per-colorspace linear model: zlib_level1_bytes ~= coeffs . [n_bytes,
-    feats(6), 1].  Calibrated per characterization run on one real deflate
-    measurement per (resolution, colorspace, blur) combo, so the estimate
-    tracks the scene's actual texture statistics."""
-    coeffs: np.ndarray                  # [3, 8]
+    """Per-(colorspace, knob4-on/off) linear model: zlib_level1_bytes ~=
+    coeffs . [n_bytes, feats(6), 1].  Calibrated per characterization run on
+    one real deflate measurement per (resolution, colorspace, blur, artifact)
+    combo, so the estimate tracks the scene's actual texture statistics.
+    Artifact-removed payloads (mostly zeros, long deflate runs) live in a
+    different compression regime than dense ones, hence the separate fit."""
+    coeffs: np.ndarray                  # [3, 2, 8]
     median_rel_err: float               # on the calibration pairs
     max_rel_err: float
 
-    def predict(self, cs: int, payload_bytes: int, feats: np.ndarray
-                ) -> np.ndarray:
+    def predict(self, cs: int, payload_bytes: int, feats: np.ndarray, *,
+                art: bool = False) -> np.ndarray:
         x = np.concatenate([
             np.full(feats.shape[:-1] + (1,), float(payload_bytes)),
             np.asarray(feats, np.float64),
             np.ones(feats.shape[:-1] + (1,))], axis=-1)
-        return np.maximum(x @ self.coeffs[cs], _MIN_WIRE_BYTES)
+        return np.maximum(x @ self.coeffs[cs, int(art)], _MIN_WIRE_BYTES)
 
 
-def _fit_proxy(samples: list[tuple[int, int, np.ndarray, int]]
+def _fit_proxy(samples: list[tuple[int, int, int, np.ndarray, int]]
                ) -> WireSizeProxy:
-    """samples: (cs, payload_bytes, feats[6], zlib_bytes) calibration rows."""
-    coeffs = np.zeros((3, FK.N_PROXY_FEATURES + 2))
+    """samples: (cs, art, payload_bytes, feats[6], zlib_bytes) rows."""
+    coeffs = np.zeros((3, 2, FK.N_PROXY_FEATURES + 2))
     rels: list[float] = []
     for cs in range(3):
-        rows = [s for s in samples if s[0] == cs]
-        if not rows:
-            continue
-        a = np.stack([np.concatenate([[n], f, [1.0]]) for _, n, f, _ in rows])
-        y = np.asarray([z for *_, z in rows], np.float64)
-        coeffs[cs], *_ = np.linalg.lstsq(a, y, rcond=None)
-        pred = np.maximum(a @ coeffs[cs], _MIN_WIRE_BYTES)
-        rels.extend(np.abs(pred - y) / np.maximum(y, 1.0))
+        for art in range(2):
+            rows = [s for s in samples if s[0] == cs and (s[1] > 0) == art]
+            if not rows:
+                continue
+            a = np.stack([np.concatenate([[n], f, [1.0]])
+                          for _, _, n, f, _ in rows])
+            y = np.asarray([z for *_, z in rows], np.float64)
+            coeffs[cs, art], *_ = np.linalg.lstsq(a, y, rcond=None)
+            pred = np.maximum(a @ coeffs[cs, art], _MIN_WIRE_BYTES)
+            rels.extend(np.abs(pred - y) / np.maximum(y, 1.0))
     rels_arr = np.asarray(rels) if rels else np.zeros(1)
     return WireSizeProxy(coeffs, float(np.median(rels_arr)),
                          float(rels_arr.max()))
@@ -231,14 +263,16 @@ def _wire_payload(payload_sf: np.ndarray, cs: int) -> np.ndarray:
 @dataclasses.dataclass
 class GridCharacterization:
     """Everything ``characterize()`` needs, for every (resolution,
-    colorspace, blur) combo over the calibration clip."""
-    combos: tuple[tuple[int, int, int], ...]
-    dets: dict[tuple[int, int, int], list[np.ndarray]]   # boxes, orig coords
-    sizes: dict[tuple[int, int, int], np.ndarray]        # [F] proxy bytes
+    colorspace, blur, artifact) combo over the calibration clip.  Combos
+    are 4-tuples; without ``include_artifact`` the artifact slot is 0."""
+    combos: tuple[tuple[int, int, int, int], ...]
+    dets: dict[tuple[int, int, int, int], list[np.ndarray]]  # boxes, orig coords
+    sizes: dict[tuple[int, int, int, int], np.ndarray]       # [F] proxy bytes
     change_counts: np.ndarray                            # [F, F] int32
     pixels: int                                          # H*W of the camera
     proxy: WireSizeProxy
     zlib_calls: int
+    include_artifact: bool = False
 
     def change_fraction(self, i: int, j: int) -> float:
         """frame_difference's dissimilarity between clip frames i and j,
@@ -332,12 +366,16 @@ def _label_host(mask: np.ndarray) -> tuple[np.ndarray, int]:
 
 def run_grid(background: np.ndarray, frames: list[np.ndarray], *,
              detector_thresh: float = 28.0, min_area: int = 12,
+             include_artifact: bool = False,
              use_pallas: bool | None = None) -> GridCharacterization:
-    """Characterize every (resolution, colorspace, blur) combo over a clip.
+    """Characterize every (resolution, colorspace, blur[, artifact]) combo
+    over a clip.
 
     ``background``/``frames``: uint8 [H, W, 3] with even H, W (the Pallas /
     XLA grid path needs 4:2:0-subsample-able planes; ``characterize`` falls
-    back to the NumPy reference engine otherwise).
+    back to the NumPy reference engine otherwise).  ``include_artifact``
+    triples the settings batch of every group with knob4's movers/contours
+    modes, run device-side against the raw background.
 
     Device work is dispatched with a bounded lookahead (JAX dispatch is
     asynchronous), so transforms for the next groups overlap the host-side
@@ -353,6 +391,7 @@ def run_grid(background: np.ndarray, frames: list[np.ndarray], *,
         # the XLA twin (same math, batched einsums).
         use_pallas = jax.default_backend() == "tpu"
 
+    art_modes = (0, 1, 2) if include_artifact else (0,)
     n_clip = len(frames)
     n_real = n_clip + 1                                  # +1: background
     n_pad = -(-n_real // _FRAME_BUCKET) * _FRAME_BUCKET
@@ -360,6 +399,12 @@ def run_grid(background: np.ndarray, frames: list[np.ndarray], *,
                      + [background] * (n_pad - n_real)).astype(np.uint8)
     fj = jnp.asarray(stack)
     prevj = jnp.asarray(np.concatenate([stack[:1], stack[:-1]]))
+    bgj = jnp.asarray(background.astype(np.uint8))
+    # knob4 must not fire on frame 0 (the detector's background payload)
+    # or on the padding tail
+    enable = np.zeros(n_pad, np.int32)
+    enable[1:n_real] = 1
+    enj = jnp.asarray(enable)
 
     change_counts_dev = _change_counts(
         jnp.asarray(np.stack(frames).astype(np.uint8)))
@@ -368,14 +413,20 @@ def run_grid(background: np.ndarray, frames: list[np.ndarray], *,
         res, cs = res_cs
         plan = FK.build_transform_plan(
             h, w, scale=K.RESOLUTION_SCALES[res], cs=cs,
-            blur_ks=K.BLUR_KERNELS)
+            blur_ks=K.BLUR_KERNELS, art_modes=art_modes)
         if use_pallas:
-            payload, feats, _ = FK.frame_knob_grid(fj, prevj, plan)
+            payload, feats, _ = FK.frame_knob_grid(
+                fj, prevj, plan,
+                background=bgj if include_artifact else None,
+                art_enable=enj if include_artifact else None)
             diff = _payload_diff(payload)
         else:
             payload, feats, diff = _transform_group(
                 fj, jnp.asarray(plan.ry), jnp.asarray(plan.rx),
-                jnp.asarray(plan.bys), jnp.asarray(plan.bxs), cs)
+                jnp.asarray(plan.bys), jnp.asarray(plan.bxs), cs,
+                bg=bgj if include_artifact else None,
+                enable=enj if include_artifact else None,
+                art_modes=art_modes)
         return res_cs, plan, (payload, feats, diff)
 
     todo = [(res, cs) for res in range(len(K.RESOLUTION_SCALES))
@@ -383,9 +434,10 @@ def run_grid(background: np.ndarray, frames: list[np.ndarray], *,
     lookahead = 2
     in_flight = [dispatch(rc) for rc in todo[:lookahead]]
 
-    dets: dict[tuple[int, int, int], list[np.ndarray]] = {}
-    feats_all: dict[tuple[int, int, int], np.ndarray] = {}
-    cal_samples: list[tuple[int, int, np.ndarray, int]] = []
+    n_blur = len(K.BLUR_KERNELS)
+    dets: dict[tuple[int, int, int, int], list[np.ndarray]] = {}
+    feats_all: dict[tuple[int, int, int, int], np.ndarray] = {}
+    cal_samples: list[tuple[int, int, int, np.ndarray, int]] = []
     plan_of_cs: dict[tuple[int, int], FK.TransformPlan] = {}
 
     for gi in range(len(todo)):
@@ -396,8 +448,9 @@ def run_grid(background: np.ndarray, frames: list[np.ndarray], *,
         diff_np = np.asarray(diff[:, :n_clip])           # [S, F, gh, gw]
         feats_np = np.asarray(feats[:, 1:n_real])        # [S, F, 6]
         s_dim, f_dim = diff_np.shape[:2]
-        # only the calibration frame of each blur setting ever needs its
-        # payload on the host -- slice on device, don't ship the batch
+        # only the calibration frame of each (blur, artifact) setting ever
+        # needs its payload on the host -- slice on device, don't ship the
+        # batch
         cal_idx = np.asarray([1 + (res * s_dim + b) % n_clip
                               for b in range(s_dim)])
         cal_payloads = np.asarray(payload[jnp.arange(s_dim),
@@ -427,22 +480,65 @@ def run_grid(background: np.ndarray, frames: list[np.ndarray], *,
         boxes = _segment_boxes_batch(ids, diff_np.reshape(-1, gh, gw),
                                      background_label=bg_label,
                                      sy=sy, sx=sx, min_px=min_px)
-        for b in range(s_dim):
-            combo = (res, cs, b)
-            feats_all[combo] = feats_np[b]
-            dets[combo] = boxes[b * f_dim:b * f_dim + n_clip]
-            wire = _wire_payload(cal_payloads[b], cs)
-            cal_samples.append((cs, plan.payload_bytes,
-                                feats_np[b, cal_idx[b] - 1],
+        for s_i in range(s_dim):
+            art, b = int(plan.art_ids[s_i]), s_i % n_blur
+            combo = (res, cs, b, art)
+            feats_all[combo] = feats_np[s_i]
+            dets[combo] = boxes[s_i * f_dim:s_i * f_dim + n_clip]
+            wire = _wire_payload(cal_payloads[s_i], cs)
+            cal_samples.append((cs, art, plan.payload_bytes,
+                                feats_np[s_i, cal_idx[s_i] - 1],
                                 len(zlib.compress(wire.tobytes(), 1))))
 
     proxy = _fit_proxy(cal_samples)
     sizes = {
-        (res, cs, b): proxy.predict(cs, plan_of_cs[(res, cs)].payload_bytes,
-                                    feats_all[(res, cs, b)])
-        for (res, cs, b) in feats_all
+        (res, cs, b, art): proxy.predict(
+            cs, plan_of_cs[(res, cs)].payload_bytes,
+            feats_all[(res, cs, b, art)], art=art > 0)
+        for (res, cs, b, art) in feats_all
     }
     return GridCharacterization(
         combos=tuple(sorted(feats_all)), dets=dets, sizes=sizes,
         change_counts=np.asarray(change_counts_dev), pixels=h * w,
-        proxy=proxy, zlib_calls=len(cal_samples))
+        proxy=proxy, zlib_calls=len(cal_samples),
+        include_artifact=include_artifact)
+
+
+# =============================================================================
+# Online re-characterization (live tables for the controller)
+# =============================================================================
+
+
+def refresh_tables(background: np.ndarray, frames: list[np.ndarray], *,
+                   gts: list[np.ndarray] | None = None,
+                   min_accuracy: float = 0.90,
+                   include_artifact: bool = False,
+                   detector_thresh: float = 28.0,
+                   capacity: int | None = None):
+    """Re-run the batched sweep over a LIVE clip and emit controller-ready
+    tables: ``(CharacterizationTable, JaxControllerTables)``.
+
+    This is the online (CANS-style) re-characterization entry point: the
+    clip is whatever the camera recently published (``CamBroker`` feeds its
+    log tail), and -- absent labels -- the full-quality combo's own
+    detections act as pseudo-ground-truth, so accuracies are normalized F1
+    against the unmodified stream, exactly the quantity the controller
+    trades against latency.  Pass ``gts`` to score against real labels
+    instead (the offline ``characterize`` path).
+
+    ``capacity`` pads the device tables to a fixed row count so a jitted
+    ``controller_step`` consumes refreshed tables with NO recompile (see
+    ``controller.swap_tables``).
+    """
+    from repro.core import characterization as C
+    from repro.core.controller import JaxControllerTables
+
+    grid = run_grid(background, frames, detector_thresh=detector_thresh,
+                    include_artifact=include_artifact)
+    if gts is None:
+        gts = grid.dets[(0, 0, 0, 0)]
+    table = C.table_from_grid(grid, gts, min_accuracy=min_accuracy,
+                              include_artifact=include_artifact)
+    if capacity is not None:
+        capacity = max(capacity, len(table.settings))
+    return table, JaxControllerTables.from_table(table, capacity=capacity)

@@ -79,6 +79,24 @@ class Session:
         """Drain pending events across all of this session's subscriptions."""
         return self._edge.session_events(self.session_id)
 
+    def update_qos(self, *, latency: float | None = None,
+                   accuracy: float | None = None,
+                   recharacterize: bool = False) -> list[QosUpdate]:
+        """Renegotiate bounds across EVERY subscription of this session.
+
+        With ``recharacterize=True`` each camera first re-sweeps its knob
+        tables over its own recent frames (the batched grid engine runs in
+        seconds, cheap enough to fold into a renegotiation) and hot-swaps
+        them into its live controller before the new bounds are applied --
+        online re-characterization, per the CANS self-configuration model.
+        Returns one ``QosUpdate`` per subscription.
+        """
+        return [self._edge.update_subscription_qos(
+                    sid, latency=latency, accuracy=accuracy,
+                    recharacterize=recharacterize)
+                for sid in self._edge.session_subscription_ids(
+                    self.session_id)]
+
     @property
     def closed(self) -> bool:
         return self._closed
@@ -115,11 +133,20 @@ class Subscription:
                                             deadline=deadline)
 
     def update_qos(self, *, latency: float | None = None,
-                   accuracy: float | None = None) -> QosUpdate:
+                   accuracy: float | None = None,
+                   recharacterize: bool = False) -> QosUpdate:
         """Renegotiate bounds live: per-camera controllers retarget in place,
-        cursors/windows survive, no teardown or resubscribe."""
+        cursors/windows survive, no teardown or resubscribe.
+
+        ``recharacterize=True`` additionally re-runs the batched knob-grid
+        sweep on each camera's recent frames and hot-swaps the fresh tables
+        into the live controller (and its jitted twin) before retargeting,
+        so the new bounds are enforced against current conditions
+        (``QosUpdate.recharacterized`` lists the cameras that re-swept).
+        """
         return self._edge.update_subscription_qos(
-            self.subscription_id, latency=latency, accuracy=accuracy)
+            self.subscription_id, latency=latency, accuracy=accuracy,
+            recharacterize=recharacterize)
 
     def events(self) -> list[SessionEvent]:
         """Drain this subscription's INFEASIBLE / RPC_TIMEOUT notifications."""

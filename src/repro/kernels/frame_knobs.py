@@ -12,17 +12,23 @@ future work.  Two kernels implement that offload, TPU-native:
                      a clip evaluates a whole batch of knob settings.  Per
                      (setting, frame) grid program it applies
 
-  1. knob2 colorspace: BGR planes / gray / packed 4:2:0 YUV (Y on top,
+  1. knob4 artifact removal: background subtraction against a per-call
+     background frame (channel-mean |f - bg| > 18, cross dilation, keep
+     movers or just their contours, zero the rest) -- the per-setting mode
+     id selects off/movers/contours, and a per-frame enable flag lets the
+     caller exempt the background/padding frames, so knob4 characterization
+     no longer falls back to the minutes-long NumPy path,
+  2. knob2 colorspace: BGR planes / gray / packed 4:2:0 YUV (Y on top,
      U|V below -- the exact wire layout of ``knobs._to_colorspace``),
-  2. knob1 resolution: arbitrary-factor bilinear resize expressed as a pair
+  3. knob1 resolution: arbitrary-factor bilinear resize expressed as a pair
      of per-axis operator matrices (``Ry @ plane @ Rx^T``) so any
      ``RESOLUTION_SCALES`` entry runs on the MXU -- the old kernel's 2x2
      mean pool is the special case ``scale=0.5``,
-  3. knob3 blur: every ``BLUR_KERNELS`` width as per-setting edge-clamped
+  4. knob3 blur: every ``BLUR_KERNELS`` width as per-setting edge-clamped
      band matrices (``By[s] @ img @ Bx[s]^T``),
-  4. knob5 change metric: fraction of pixels changed vs. the previous
+  5. knob5 change metric: fraction of pixels changed vs. the previous
      frame (``|f - prev| > pixel_delta`` after channel-mean),
-  5. wire-size proxy features: per-payload horizontal/vertical byte-delta
+  6. wire-size proxy features: per-payload horizontal/vertical byte-delta
      statistics (sum of log2(1+|d|), zero-delta count, |d|<=2 count) that
      ``core.grid_engine`` calibrates against zlib level-1 -- so deflate
      never runs on the characterization hot path.
@@ -51,9 +57,11 @@ from jax.experimental import pallas as pl
 
 __all__ = ["frame_knobs", "TransformPlan", "build_transform_plan",
            "frame_knob_grid", "resize_operator", "blur_operator",
-           "proxy_features", "N_PROXY_FEATURES"]
+           "proxy_features", "proxy_features_host", "N_PROXY_FEATURES",
+           "ARTIFACT_THRESH"]
 
 N_PROXY_FEATURES = 6   # (log2-sum, zero-count, <=2-count) x (dx, dy)
+ARTIFACT_THRESH = 18.0  # knobs._artifact_removal's default mask threshold
 
 
 # =============================================================================
@@ -159,14 +167,18 @@ def blur_operator(n: int, k: int) -> np.ndarray:
 @dataclasses.dataclass(frozen=True)
 class TransformPlan:
     """Device-ready operators for one (resolution, colorspace) group of the
-    knob grid, batching every blur width of that group.
+    knob grid, batching every (artifact mode, blur width) pair of that group.
 
-    The plan fully determines output geometry, so one ``pallas_call`` (or
-    its XLA twin in ``ref``) covers ``len(blur_ks)`` settings per frame.
+    The settings axis is artifact-major: setting ``a * len(blur_ks) + b``
+    pairs artifact mode ``art_modes[a]`` with blur width ``blur_ks[b]``
+    (``art_ids``/``blur_ids`` carry the per-setting values).  The plan fully
+    determines output geometry, so one ``pallas_call`` (or its XLA twin in
+    ``ref``) covers ``n_settings`` settings per frame.
     """
     cs: int                    # CS_BGR / CS_GRAY / CS_YUV420
     scale: float
     blur_ks: tuple[int, ...]
+    art_modes: tuple[int, ...]  # knob4 modes batched (0=off, 1=movers, 2=contours)
     in_h: int                  # camera frame height
     in_w: int
     packed_h: int              # post-colorspace height (h + h//2 for yuv420)
@@ -177,10 +189,16 @@ class TransformPlan:
     rx: np.ndarray             # [out_w, in_w]
     bys: np.ndarray            # [S, out_h, out_h]
     bxs: np.ndarray            # [S, out_w, out_w]
+    art_ids: np.ndarray        # [S] i32, per-setting artifact mode
+    blur_ids: np.ndarray       # [S] i32, per-setting blur width
 
     @property
     def n_settings(self) -> int:
-        return len(self.blur_ks)
+        return len(self.blur_ks) * len(self.art_modes)
+
+    @property
+    def with_artifact(self) -> bool:
+        return bool((self.art_ids != 0).any())
 
     @property
     def payload_bytes(self) -> int:
@@ -188,7 +206,8 @@ class TransformPlan:
 
 
 def build_transform_plan(h: int, w: int, *, scale: float, cs: int,
-                         blur_ks: tuple[int, ...]) -> TransformPlan:
+                         blur_ks: tuple[int, ...],
+                         art_modes: tuple[int, ...] = (0,)) -> TransformPlan:
     """Build the operator bundle for one (resolution, colorspace) group.
 
     Requires even ``h``/``w`` for yuv420 (4:2:0 subsampling); the host
@@ -200,13 +219,20 @@ def build_transform_plan(h: int, w: int, *, scale: float, cs: int,
     ry = resize_operator(packed_h, max(1, int(round(packed_h * scale))), scale)
     rx = resize_operator(w, max(1, int(round(w * scale))), scale)
     out_h, out_w = ry.shape[0], rx.shape[0]
-    bys = np.stack([blur_operator(out_h, k) for k in blur_ks])
-    bxs = np.stack([blur_operator(out_w, k) for k in blur_ks])
+    by_of = {k: blur_operator(out_h, k) for k in blur_ks}
+    bx_of = {k: blur_operator(out_w, k) for k in blur_ks}
+    pairs = [(a, k) for a in art_modes for k in blur_ks]   # artifact-major
+    bys = np.stack([by_of[k] for _, k in pairs])
+    bxs = np.stack([bx_of[k] for _, k in pairs])
+    art_ids = np.asarray([a for a, _ in pairs], np.int32)
+    blur_ids = np.asarray([k for _, k in pairs], np.int32)
     return TransformPlan(cs=cs, scale=scale, blur_ks=tuple(blur_ks),
+                         art_modes=tuple(art_modes),
                          in_h=h, in_w=w, packed_h=packed_h,
                          out_h=out_h, out_w=out_w,
                          n_planes=3 if cs == CS_BGR else 1,
-                         ry=ry, rx=rx, bys=bys, bxs=bxs)
+                         ry=ry, rx=rx, bys=bys, bxs=bxs,
+                         art_ids=art_ids, blur_ids=blur_ids)
 
 
 def _to_planes(frame: jax.Array, cs: int) -> jax.Array:
@@ -227,6 +253,44 @@ def _to_planes(frame: jax.Array, cs: int) -> jax.Array:
                            axis=0)[None]
 
 
+def _artifact_masks(frame: jax.Array, bg: jax.Array, *,
+                    thresh: float) -> tuple[jax.Array, jax.Array]:
+    """knob4 keep-masks (movers, contours) of one uint8 [H, W, 3] frame
+    against the raw background -- the exact semantics of
+    ``knobs._artifact_removal``: channel-mean abs diff > thresh, cross
+    dilation (false borders), contours = dilated minus its cross erosion
+    (true borders)."""
+    d = jnp.abs(frame.astype(jnp.float32) - bg.astype(jnp.float32))
+    mask = d.mean(axis=-1) > thresh
+    fr = jnp.zeros_like(mask[:1, :])
+    fc = jnp.zeros_like(mask[:, :1])
+    m = mask
+    m = m | jnp.concatenate([fr, mask[:-1, :]], axis=0)
+    m = m | jnp.concatenate([mask[1:, :], fr], axis=0)
+    m = m | jnp.concatenate([fc, mask[:, :-1]], axis=1)
+    m = m | jnp.concatenate([mask[:, 1:], fc], axis=1)
+    tr = jnp.ones_like(m[:1, :])
+    tc = jnp.ones_like(m[:, :1])
+    er = m
+    er = er & jnp.concatenate([tr, m[:-1, :]], axis=0)
+    er = er & jnp.concatenate([m[1:, :], tr], axis=0)
+    er = er & jnp.concatenate([tc, m[:, :-1]], axis=1)
+    er = er & jnp.concatenate([m[:, 1:], tc], axis=1)
+    return m, m & ~er
+
+
+def _apply_artifact(frame: jax.Array, bg: jax.Array, mode: jax.Array, *,
+                    thresh: float) -> jax.Array:
+    """Apply knob4 with a traced per-setting ``mode`` scalar (0 off,
+    1 movers, 2 contours): both masks are computed and the live one is
+    selected, so one kernel instance serves the whole settings batch."""
+    movers, contours = _artifact_masks(frame, bg, thresh=thresh)
+    keep = jnp.where(mode == 1, movers,
+                     jnp.where(mode == 2, contours,
+                               jnp.ones_like(movers)))
+    return jnp.where(keep[..., None], frame, jnp.zeros_like(frame))
+
+
 def proxy_features(payload: jax.Array) -> jax.Array:
     """Wire-size proxy features of a ``[..., P, oh, ow]`` payload batch:
     (sum log2(1+|d|), zero-delta count, |d|<=2 count) for horizontal and
@@ -245,18 +309,44 @@ def proxy_features(payload: jax.Array) -> jax.Array:
     ], axis=-1)
 
 
+def proxy_features_host(payload: np.ndarray) -> np.ndarray:
+    """NumPy twin of ``proxy_features`` for one host payload (any shape with
+    at least 2 dims; a 2-D payload is treated as one plane).  Used by
+    ``CamBroker.fetch``'s per-frame candidate pre-screen, where dispatching
+    a jitted op per frame would cost more than the feature math itself."""
+    a = np.asarray(payload).astype(np.int64)
+    if a.ndim == 2:
+        a = a[None]                      # packed/gray -> one plane
+    else:
+        a = np.moveaxis(a, -1, 0)        # interleaved HxWxC -> planes
+    dx = np.abs(a[:, :, 1:] - a[:, :, :-1]).astype(np.float32)
+    dy = np.abs(a[:, 1:, :] - a[:, :-1, :]).astype(np.float32)
+    return np.asarray([
+        np.log2(1.0 + dx).sum(), float((dx == 0).sum()),
+        float((dx <= 2).sum()),
+        np.log2(1.0 + dy).sum(), float((dy == 0).sum()),
+        float((dy <= 2).sum()),
+    ], np.float32)
+
+
 def _grid_compute(frame: jax.Array, prev: jax.Array, ry: jax.Array,
                   rx: jax.Array, by: jax.Array, bx: jax.Array, *,
-                  cs: int, pixel_delta: float
+                  cs: int, pixel_delta: float,
+                  bg: jax.Array | None = None,
+                  art_mode: jax.Array | None = None,
+                  art_thresh: float = ARTIFACT_THRESH,
                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """The fused per-(setting, frame) pipeline, shared op-for-op with the
     interpret-mode oracle contract.  All matmuls accumulate in f32."""
     # knob5 change metric on the raw frame (channel-mean, like
-    # ``knobs.frame_difference``)
+    # ``knobs.frame_difference``) -- measured BEFORE knob4, matching
+    # ``knobs.apply_knobs``' pipeline order
     d = jnp.abs(frame.astype(jnp.float32) - prev.astype(jnp.float32))
     d = d.mean(axis=-1)
     changed = (d > pixel_delta).astype(jnp.float32).mean()
 
+    if bg is not None:
+        frame = _apply_artifact(frame, bg, art_mode, thresh=art_thresh)
     planes = _to_planes(frame, cs)                                 # [P,Hc,W]
     rs = jnp.einsum("ah,phw->paw", ry, planes)                     # knob1
     rs = jnp.einsum("bw,paw->pab", rx, rs)
@@ -278,19 +368,50 @@ def _grid_kernel(f_ref, p_ref, ry_ref, rx_ref, by_ref, bx_ref,
     ch_ref[0, 0] = changed
 
 
+def _grid_kernel_art(f_ref, p_ref, bg_ref, en_ref, am_ref, ry_ref, rx_ref,
+                     by_ref, bx_ref, o_ref, ft_ref, ch_ref, *, cs: int,
+                     pixel_delta: float, art_thresh: float):
+    # per-frame enable gates knob4 off for the background / padding frames
+    mode = am_ref[0] * en_ref[0]
+    payload, feats, changed = _grid_compute(
+        f_ref[0], p_ref[0], ry_ref[...], rx_ref[...], by_ref[0], bx_ref[0],
+        cs=cs, pixel_delta=pixel_delta, bg=bg_ref[...], art_mode=mode,
+        art_thresh=art_thresh)
+    o_ref[0, 0] = payload
+    ft_ref[0, 0] = feats
+    ch_ref[0, 0] = changed
+
+
 @functools.partial(jax.jit, static_argnames=("cs", "geom", "pixel_delta",
-                                             "interpret"))
+                                             "art_thresh", "interpret"))
 def _grid_call(frames, prev, ry, rx, bys, bxs, *, cs, geom, pixel_delta,
-               interpret):
+               interpret, bg=None, art_enable=None, art_ids=None,
+               art_thresh=ARTIFACT_THRESH):
     h, w, packed_h, out_h, out_w, n_planes = geom
     s = bys.shape[0]
     f = frames.shape[0]
+    with_art = bg is not None
+    if with_art:
+        kernel = functools.partial(_grid_kernel_art, cs=cs,
+                                   pixel_delta=pixel_delta,
+                                   art_thresh=art_thresh)
+        extra_in = [
+            pl.BlockSpec((h, w, 3), lambda i, j: (0, 0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ]
+        extra_args = (bg, art_enable, art_ids)
+    else:
+        kernel = functools.partial(_grid_kernel, cs=cs,
+                                   pixel_delta=pixel_delta)
+        extra_in, extra_args = [], ()
     return pl.pallas_call(
-        functools.partial(_grid_kernel, cs=cs, pixel_delta=pixel_delta),
+        kernel,
         grid=(s, f),
         in_specs=[
             pl.BlockSpec((1, h, w, 3), lambda i, j: (j, 0, 0, 0)),
             pl.BlockSpec((1, h, w, 3), lambda i, j: (j, 0, 0, 0)),
+            *extra_in,
             pl.BlockSpec((out_h, packed_h), lambda i, j: (0, 0)),
             pl.BlockSpec((out_w, w), lambda i, j: (0, 0)),
             pl.BlockSpec((1, out_h, out_h), lambda i, j: (i, 0, 0)),
@@ -308,16 +429,24 @@ def _grid_call(frames, prev, ry, rx, bys, bxs, *, cs, geom, pixel_delta,
             jax.ShapeDtypeStruct((s, f), jnp.float32),
         ],
         interpret=interpret,
-    )(frames, prev, ry, rx, bys, bxs)
+    )(frames, prev, *extra_args, ry, rx, bys, bxs)
 
 
 def frame_knob_grid(frames: jax.Array, prev: jax.Array, plan: TransformPlan,
-                    *, pixel_delta: float = 8.0, interpret: bool = False
+                    *, background: jax.Array | None = None,
+                    art_enable: jax.Array | None = None,
+                    pixel_delta: float = 8.0,
+                    art_thresh: float = ARTIFACT_THRESH,
+                    interpret: bool = False
                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Evaluate one plan's settings batch over a clip in a single HBM pass.
 
     frames/prev: uint8 ``[F, H, W, 3]`` (prev = the clip shifted by one for
-    the knob5 metric).  Returns
+    the knob5 metric).  Plans with knob4 settings additionally need
+    ``background`` (uint8 ``[H, W, 3]``, the raw background model) and may
+    pass ``art_enable`` (i32 ``[F]``, default all-on) to exempt individual
+    frames -- ``core.grid_engine`` exempts the background/padding frames it
+    prepends for the detector diff.  Returns
 
       payload [S, F, P, out_h, out_w] uint8   the shipped representation
                                               (P planes: b/g/r, or one
@@ -331,7 +460,17 @@ def frame_knob_grid(frames: jax.Array, prev: jax.Array, plan: TransformPlan,
     assert (h, w) == (plan.in_h, plan.in_w) and c == 3, (frames.shape, plan)
     geom = (plan.in_h, plan.in_w, plan.packed_h, plan.out_h, plan.out_w,
             plan.n_planes)
+    if plan.with_artifact and background is None:
+        raise ValueError("plan batches knob4 settings; pass background=")
+    kwargs = {}
+    if background is not None:
+        if art_enable is None:
+            art_enable = jnp.ones((n,), jnp.int32)
+        kwargs = dict(bg=jnp.asarray(background),
+                      art_enable=jnp.asarray(art_enable, jnp.int32),
+                      art_ids=jnp.asarray(plan.art_ids),
+                      art_thresh=art_thresh)
     return _grid_call(frames, prev, jnp.asarray(plan.ry),
                       jnp.asarray(plan.rx), jnp.asarray(plan.bys),
                       jnp.asarray(plan.bxs), cs=plan.cs, geom=geom,
-                      pixel_delta=pixel_delta, interpret=interpret)
+                      pixel_delta=pixel_delta, interpret=interpret, **kwargs)

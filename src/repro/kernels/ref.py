@@ -144,28 +144,47 @@ def frame_knobs_ref(frames: jax.Array, prev: jax.Array, *, blur_k: int = 5,
 
 
 def frame_knob_grid_ref(frames: jax.Array, prev: jax.Array, plan, *,
-                        pixel_delta: float = 8.0):
+                        background: jax.Array | None = None,
+                        art_enable: jax.Array | None = None,
+                        pixel_delta: float = 8.0,
+                        art_thresh: float | None = None):
     """Oracle for ``frame_knobs.frame_knob_grid``: one (setting, frame)
     program at a time via ``lax.map``, so every contraction runs at the
     exact per-program shapes of the Pallas grid -- bit-exact including the
     uint8 round/clip after each stage.
 
-    frames/prev: uint8 [F, H, W, 3].  Returns (payload [S, F, P, oh, ow]
+    frames/prev: uint8 [F, H, W, 3].  Plans batching knob4 settings need
+    ``background`` (and optionally ``art_enable`` [F], default all-on),
+    mirroring the kernel's inputs.  Returns (payload [S, F, P, oh, ow]
     uint8, feats [S, F, 6] f32, changed [S, F] f32).
     """
-    from repro.kernels.frame_knobs import _grid_compute
+    from repro.kernels.frame_knobs import ARTIFACT_THRESH, _grid_compute
 
+    if art_thresh is None:
+        art_thresh = ARTIFACT_THRESH
     s = plan.bys.shape[0]
     f = frames.shape[0]
     ry = jnp.asarray(plan.ry)
     rx = jnp.asarray(plan.rx)
     bys = jnp.asarray(plan.bys)
     bxs = jnp.asarray(plan.bxs)
+    with_art = background is not None
+    if plan.with_artifact and not with_art:
+        raise ValueError("plan batches knob4 settings; pass background=")
+    if with_art:
+        bg = jnp.asarray(background)
+        art_ids = jnp.asarray(plan.art_ids)
+        enable = (jnp.ones((f,), jnp.int32) if art_enable is None
+                  else jnp.asarray(art_enable, jnp.int32))
 
     def one(idx):
         si, fi = idx // f, idx % f
+        kwargs = {}
+        if with_art:
+            kwargs = dict(bg=bg, art_mode=art_ids[si] * enable[fi],
+                          art_thresh=art_thresh)
         return _grid_compute(frames[fi], prev[fi], ry, rx, bys[si], bxs[si],
-                             cs=plan.cs, pixel_delta=pixel_delta)
+                             cs=plan.cs, pixel_delta=pixel_delta, **kwargs)
 
     payload, feats, changed = jax.lax.map(one, jnp.arange(s * f))
     return (payload.reshape(s, f, plan.n_planes, plan.out_h, plan.out_w),

@@ -1,19 +1,23 @@
-"""Batched characterization engine vs the per-frame reference oracle, the
-wire-size proxy's calibration bound, and the knob-pipeline satellites
-(YUV packing round-trip, transform memo, broker payload reuse)."""
+"""Batched characterization engine vs the per-frame reference oracle (knob4
+included), the wire-size proxy's calibration bound, online
+re-characterization (``refresh_tables`` / ``CamBroker.recharacterize``),
+the broker's pre-screen, and the knob-pipeline satellites (YUV packing
+round-trip, transform memo, broker payload reuse)."""
 
 import zlib
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import detector as det
 from repro.core import grid_engine
 from repro.core import knobs as K
-from repro.core.broker import CamBroker, MezSystem
+from repro.core.broker import TABLE_CAPACITY, CamBroker, MezSystem
 from repro.core.channel import calibrated_channel
 from repro.core.characterization import characterize, fit_latency_regression
 from repro.data.camera import CameraConfig, SyntheticCamera
+from repro.kernels import frame_knobs as FK
 
 CAMF = lambda: SyntheticCamera(CameraConfig(dynamics="medium", seed=7))
 CLIP_LEN = 8
@@ -71,10 +75,13 @@ class TestEngineEquivalence:
         np.testing.assert_array_equal(a.sizes_sorted, b.sizes_sorted)
         np.testing.assert_array_equal(a.best_acc, b.best_acc)
 
-    def test_auto_falls_back_for_artifact_knob(self):
+    def test_auto_covers_artifact_knob_batched(self):
+        """knob4 no longer forces the reference fallback: auto resolves to
+        the batched engine and still characterizes artifact settings."""
         tbl = characterize(CAMF, clip_len=3, include_artifact=True,
                            min_accuracy=0.0)
         assert any(s.artifact > 0 for s in tbl.settings)
+        assert tbl.proxy is not None       # batched-engine fingerprint
 
     def test_controller_closed_loop_on_batched_table(self, tables):
         """The proxy-sized table drives the PI loop to its latency bound."""
@@ -97,14 +104,243 @@ class TestEngineEquivalence:
         assert np.percentile(lats[8:], 95) < 0.14
 
 
+class TestKnob4Equivalence:
+    """knob4 on device: ``characterize(engine='batched',
+    include_artifact=True)`` against the NumPy reference oracle."""
+
+    @pytest.fixture(scope="class")
+    def art_tables(self):
+        return (characterize(CAMF, clip_len=6, engine="batched",
+                             include_artifact=True),
+                characterize(CAMF, clip_len=6, engine="reference",
+                             include_artifact=True))
+
+    def test_kept_settings_identical(self, art_tables):
+        batched, reference = art_tables
+        assert set(batched.settings) == set(reference.settings)
+
+    def test_accuracies_agree(self, art_tables):
+        batched, reference = art_tables
+        accb = dict(zip(batched.settings, batched.acc_by_setting))
+        accr = dict(zip(reference.settings, reference.acc_by_setting))
+        diffs = np.asarray([abs(accb[s] - accr[s])
+                            for s in set(accb) & set(accr)])
+        assert np.median(diffs) == 0.0
+        assert diffs.max() <= 0.05
+
+    def test_artifact_settings_scored(self):
+        """The batched engine actually scores knob4 settings (visible with
+        the accuracy floor dropped) instead of skipping them."""
+        tbl = characterize(CAMF, clip_len=3, engine="batched",
+                           include_artifact=True, min_accuracy=0.0)
+        art = [s for s in tbl.settings if s.artifact > 0]
+        assert len(art) > 0
+        assert tbl.proxy is not None
+
+    def test_odd_geometry_raises_clear_error(self):
+        """Regression: engine='batched' must REFUSE unsupported odd
+        geometry loudly -- the seed behaviour was a silent minutes-long
+        fallback to the reference path."""
+        camf = lambda: SyntheticCamera(CameraConfig(
+            dynamics="medium", seed=7, height=30, width=41))
+        with pytest.raises(ValueError, match="even-dimension"):
+            characterize(camf, clip_len=2, engine="batched")
+        # the error must point at the escape hatches
+        try:
+            characterize(camf, clip_len=2, engine="batched")
+        except ValueError as e:
+            assert "reference" in str(e) and "auto" in str(e)
+
+
+class TestOnlineRecharacterization:
+    def test_refresh_tables_pseudo_gt(self):
+        """``refresh_tables`` characterizes an unlabeled live clip: the
+        full-quality detections act as ground truth, so the unmodified
+        setting scores accuracy 1.0 and the table is controller-ready."""
+        cam = CAMF()
+        bg = cam.background
+        clip = [cam.next_frame()[1] for _ in range(6)]
+        table, jt = grid_engine.refresh_tables(bg, clip, capacity=64)
+        assert len(table.settings) > 0
+        assert table.proxy is not None
+        full = table.settings.index(K.KnobSetting(0, 0, 0, 0, 0))
+        np.testing.assert_allclose(table.acc_by_setting[full], 1.0)
+        assert jt.sizes_sorted.shape[0] == 64
+        assert int(jt.n_valid) == len(table.settings)
+        assert np.isinf(np.asarray(jt.sizes_sorted)[int(jt.n_valid):]).all()
+
+    def test_cambroker_recharacterize_swaps_live_tables(self, tables):
+        batched, _ = tables
+        ch = calibrated_channel(seed=3)
+        sys = MezSystem(ch)
+        cam = sys.add_camera("cam0")
+        src = CAMF()
+        cam.background = src.background
+        sizes = np.linspace(batched.sizes_sorted[0],
+                            batched.sizes_sorted[-1], 8)
+        reg = fit_latency_regression(sizes, ch.regression_points(sizes, n=1))
+        cam.set_target(0.1, 0.9, batched, reg)
+        v0 = cam.table_version
+        assert cam.jax_tables is not None          # installed by set_target
+        for ts, f, _ in src.stream(6):
+            cam.publish(ts, f)
+        assert cam.recharacterize(clip_len=6)
+        assert cam.table_version == v0 + 1
+        assert cam.controller.table is not batched
+        assert cam.controller.table.proxy is not None
+        assert int(cam.jax_tables.n_valid) == len(cam.controller.table.settings)
+        assert cam.jax_tables.sizes_sorted.shape[0] >= TABLE_CAPACITY
+        # the refreshed table still drives fetch end to end
+        out = cam.fetch(0.0, 10.0, latency_feedback=0.1)
+        assert any(d.frame is not None for d in out)
+
+    def test_recharacterize_without_state_is_refused(self):
+        cam = CamBroker("cam0", calibrated_channel(seed=1))
+        assert not cam.recharacterize()            # no controller yet
+
+    def test_recharacterize_preserves_floor_and_knob4(self):
+        """A refresh must not silently reshape the trade space: the live
+        table's accuracy floor and knob4 coverage carry over by default."""
+        tbl = characterize(CAMF, clip_len=4, engine="batched",
+                           include_artifact=True, min_accuracy=0.0)
+        assert tbl.includes_artifact
+        ch = calibrated_channel(seed=3)
+        sys = MezSystem(ch)
+        cam = sys.add_camera("cam0")
+        src = CAMF()
+        cam.background = src.background
+        sizes = np.linspace(tbl.sizes_sorted[0], tbl.sizes_sorted[-1], 8)
+        reg = fit_latency_regression(sizes, ch.regression_points(sizes, n=1))
+        cam.set_target(0.1, 0.5, tbl, reg)
+        for ts, f, _ in src.stream(4):
+            cam.publish(ts, f)
+        assert cam.recharacterize(clip_len=4)
+        fresh = cam.controller.table
+        assert fresh is not tbl
+        assert fresh.min_accuracy == 0.0           # floor carried over
+        assert fresh.includes_artifact             # knob4 axis survived
+
+
+class TestTransformGroupTwin:
+    def test_honors_actual_mode_ids(self):
+        """The XLA twin must key knob4 masks by the plan's ACTUAL mode ids
+        (like the kernel's per-setting art_ids), not by block position --
+        regression for art_modes=(0, 2) applying the movers mask to the
+        contours block."""
+        rng = np.random.default_rng(3)
+        h, w, f = 16, 24, 2
+        bg = rng.integers(40, 200, (h, w, 3)).astype(np.uint8)
+        frames = np.clip(bg[None] + rng.normal(0, 5, (f, h, w, 3)),
+                         0, 255).astype(np.uint8)
+        frames[1, 4:10, 6:14] = 250
+        prev = np.concatenate([frames[:1], frames[:-1]])
+        enable = np.ones(f, np.int32)
+        plan = FK.build_transform_plan(h, w, scale=1.0, cs=0,
+                                       blur_ks=(0,), art_modes=(0, 2))
+        from repro.kernels import ref
+        pr, _, _ = ref.frame_knob_grid_ref(
+            jnp.asarray(frames), jnp.asarray(prev), plan,
+            background=jnp.asarray(bg), art_enable=jnp.asarray(enable))
+        pt, _, _ = grid_engine._transform_group(
+            jnp.asarray(frames), jnp.asarray(plan.ry),
+            jnp.asarray(plan.rx), jnp.asarray(plan.bys),
+            jnp.asarray(plan.bxs), 0, bg=jnp.asarray(bg),
+            enable=jnp.asarray(enable), art_modes=(0, 2))
+        d = np.abs(np.asarray(pt).astype(np.int32)
+                   - np.asarray(pr).astype(np.int32))
+        assert d.max() <= 1                        # same masks, same math
+
+
+class TestWireSizePrescreen:
+    def test_proxy_features_host_matches_device(self):
+        rng = np.random.default_rng(5)
+        frame = rng.integers(0, 256, (24, 32, 3)).astype(np.uint8)
+        for cs in range(3):
+            for blur in (0, 2):
+                s = K.KnobSetting(1, cs, blur)
+                wire = K.transform_frame(frame, s)
+                got = FK.proxy_features_host(wire)
+                # device layout: planes
+                planes = (jnp.moveaxis(jnp.asarray(wire), -1, 0)
+                          if wire.ndim == 3 else jnp.asarray(wire)[None])
+                want = np.asarray(FK.proxy_features(planes))
+                np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-2)
+
+    def _broker(self, table, accuracy=0.9):
+        ch = calibrated_channel(seed=3)
+        sys = MezSystem(ch)
+        cam = sys.add_camera("cam0")
+        src = CAMF()
+        cam.background = src.background
+        sizes = np.linspace(table.sizes_sorted[0], table.sizes_sorted[-1], 8)
+        reg = fit_latency_regression(sizes, ch.regression_points(sizes, n=1))
+        cam.set_target(0.1, accuracy, table, reg)
+        return cam, src
+
+    def test_fetch_runs_prescreen_on_acting_decisions(self, tables):
+        batched, _ = tables
+        cam, src = self._broker(batched)
+        for ts, f, _ in src.stream(4):
+            cam.publish(ts, f)
+        out = cam.fetch(0.0, 10.0, latency_feedback=0.25)
+        assert cam.prescreen_evals > 0             # features ran in fetch
+        assert all(f.knob_index >= 0 for f in out if f.frame is not None)
+
+    def test_overshooting_candidate_steps_down(self, tables):
+        """A candidate whose predicted wire size blows the controller's
+        budget is stepped down the table from byte-delta features alone --
+        deflate never runs on the rejected candidate."""
+        from repro.core.controller import ControlDecision
+        batched, _ = tables
+        cam, src = self._broker(batched, accuracy=0.0)
+        ts, frame, _ = src.next_frame()
+        # the PI asked for the HIGHEST-fidelity setting but granted only a
+        # third of its clip-median bytes (interference mid-renegotiation)
+        idx = int(np.argmax(batched.size_by_setting))
+        budget = float(batched.size_by_setting[idx]) * 0.3
+        decision = ControlDecision(True, batched.setting_for(idx), idx,
+                                   1.0, budget, 0.05, True)
+        eff_setting, eff_idx, entry = cam._prescreen(ts, frame, decision)
+        assert cam.prescreen_stepdowns > 0
+        assert eff_idx != idx
+        assert (batched.size_by_setting[eff_idx]
+                < batched.size_by_setting[idx])
+        # the returned entry is the ACCEPTED setting's payload...
+        key = (ts, eff_setting.resolution, eff_setting.colorspace,
+               eff_setting.blur, eff_setting.artifact)
+        assert cam._payload_cache[key] is entry
+        # ...and no deflate was paid along the walk
+        assert all(e[1] is None for e in cam._payload_cache.values())
+
+    def test_prescreen_inert_without_proxy(self, tables):
+        """Reference-engine tables carry no proxy: fetch must behave
+        exactly as before (no evals, controller decision shipped as-is)."""
+        _, reference = tables
+        assert reference.proxy is None
+        ch = calibrated_channel(seed=3)
+        sys = MezSystem(ch)
+        cam = sys.add_camera("cam0")
+        src = CAMF()
+        cam.background = src.background
+        sizes = np.linspace(reference.sizes_sorted[0],
+                            reference.sizes_sorted[-1], 8)
+        reg = fit_latency_regression(sizes, ch.regression_points(sizes, n=1))
+        cam.set_target(0.1, 0.9, reference, reg)
+        for ts, f, _ in src.stream(4):
+            cam.publish(ts, f)
+        out = cam.fetch(0.0, 10.0, latency_feedback=0.25)
+        assert cam.prescreen_evals == 0
+        assert len(out) == 4
+
+
 class TestWireSizeProxy:
     def test_median_error_vs_zlib(self, grid):
         """Acceptance bound: proxy within 10% median relative error of
         real zlib level-1 across the whole (res, cs, blur) x frame grid."""
         bg, clip, g = grid
         rels = []
-        for (res, cs, b), pred in g.sizes.items():
-            setting = K.KnobSetting(res, cs, b)
+        for (res, cs, b, art), pred in g.sizes.items():
+            setting = K.KnobSetting(res, cs, b, art)
             for fi, (_, frame, _) in enumerate(clip):
                 payload = K.transform_frame(frame, setting)
                 true = len(zlib.compress(
@@ -121,8 +357,8 @@ class TestWireSizeProxy:
         """Sanity: the proxy ranks a downscaled gray payload far below the
         full-resolution BGR one."""
         _, _, g = grid
-        full = float(np.median(g.sizes[(0, 0, 0)]))
-        tiny = float(np.median(g.sizes[(4, 1, 0)]))
+        full = float(np.median(g.sizes[(0, 0, 0, 0)]))
+        tiny = float(np.median(g.sizes[(4, 1, 0, 0)]))
         assert tiny < 0.25 * full
 
 

@@ -11,9 +11,10 @@ from repro.core.channel import calibrated_channel
 from repro.core.characterization import (CharacterizationTable,
                                          LatencyRegression, characterize,
                                          fit_latency_regression)
-from repro.core.controller import (ControllerConfig, JaxControllerTables,
-                                   LatencyController, controller_init,
-                                   controller_step)
+from repro.core.controller import (ControllerConfig, ControllerState,
+                                   JaxControllerTables, LatencyController,
+                                   controller_init, controller_step,
+                                   swap_tables)
 from repro.core.knobs import KnobSetting
 from repro.data.camera import CameraConfig, SyntheticCamera
 
@@ -121,6 +122,92 @@ class TestJaxController:
         state, idxs = run(state, lats)
         assert idxs.shape == (5,)
         assert bool((idxs >= -1).all())
+
+
+class TestHotSwapTables:
+    """Online re-characterization contract: refreshed tables flow into a
+    compiled ``controller_step`` as traced inputs -- same decisions as the
+    host controller, and NO recompile across the swap."""
+
+    def _step_fn(self, cfg, regression):
+        @jax.jit
+        def step(state, lat, tables):
+            return controller_step(
+                state, lat, tables, latency_target=cfg.latency_target,
+                accuracy_target=cfg.accuracy_target, slope=regression.slope,
+                intercept=regression.intercept,
+                error_threshold=cfg.error_threshold,
+                alpha_p=cfg.alpha_p, alpha_i=cfg.alpha_i)
+        return step
+
+    def test_swapped_tables_match_host_decision_sequence(self, regression):
+        """After an ``update_qos``-style retarget + table refresh, the jit
+        step's knob choices track the host ``LatencyController`` decision
+        for decision on the SAME swapped tables."""
+        cap = 64
+        tbl_a = synthetic_table(32)
+        tbl_b = synthetic_table(20, smin=3.2e3, smax=71e3)
+        cfg = ControllerConfig(0.050, 0.90)
+        host = LatencyController(cfg, tbl_a, regression)
+        jt = JaxControllerTables.from_table(tbl_a, capacity=cap)
+        step = self._step_fn(cfg, regression)
+        state = controller_init(jt, start_idx=host._current)
+
+        def run(samples, state, jt):
+            for lat in samples:
+                dh = host.update(lat)
+                state, idx = step(state, lat, jt)
+                assert int(idx) == dh.setting_index, lat
+            return state
+
+        state = run([0.31, 0.22, 0.113, 0.051, 0.047, 0.033], state, jt)
+
+        # live refresh: host swaps its table, the jit twin swaps arrays of
+        # the SAME capacity (different n_valid) into the same compiled step
+        host.swap_table(tbl_b)
+        fresh = JaxControllerTables.from_table(tbl_b, capacity=cap)
+        jt = swap_tables(jt, fresh)
+        assert int(jt.n_valid) == 20
+        state = ControllerState(                  # re-seed like the host did
+            integral=state.integral,
+            current_idx=jnp.asarray(host._current, jnp.int32),
+            feasible=state.feasible, last_error=state.last_error)
+        run([0.027, 0.192, 0.094, 0.052, 0.041], state, jt)
+
+        # the whole sequence -- both tables -- used ONE compiled step
+        assert step._cache_size() == 1
+
+    def test_capacity_padding_is_inert(self, regression):
+        """Padded and unpadded tables produce identical step outputs."""
+        tbl = synthetic_table(24)
+        exact = JaxControllerTables.from_table(tbl)
+        padded = JaxControllerTables.from_table(tbl, capacity=128)
+        cfg = ControllerConfig(0.050, 0.92)
+        se, sp = controller_init(exact), controller_init(padded)
+        assert int(se.current_idx) == int(sp.current_idx)
+        for lat in [0.28, 0.11, 0.06, 0.049, 0.038]:
+            se, ie = controller_step(
+                se, lat, exact, latency_target=cfg.latency_target,
+                accuracy_target=cfg.accuracy_target, slope=regression.slope,
+                intercept=regression.intercept)
+            sp, ip = controller_step(
+                sp, lat, padded, latency_target=cfg.latency_target,
+                accuracy_target=cfg.accuracy_target, slope=regression.slope,
+                intercept=regression.intercept)
+            assert int(ie) == int(ip)
+            np.testing.assert_allclose(float(se.integral),
+                                       float(sp.integral))
+
+    def test_capacity_too_small_rejected(self):
+        tbl = synthetic_table(32)
+        with pytest.raises(ValueError, match="capacity"):
+            JaxControllerTables.from_table(tbl, capacity=8)
+
+    def test_swap_shape_mismatch_falls_through(self):
+        a = JaxControllerTables.from_table(synthetic_table(16), capacity=32)
+        b = JaxControllerTables.from_table(synthetic_table(16), capacity=64)
+        out = swap_tables(a, b)
+        assert out.sizes_sorted.shape[0] == 64    # fresh wins, no error
 
 
 class TestClosedLoop:

@@ -222,3 +222,95 @@ class TestFrameKnobGrid:
                 want = K.frame_difference(frames[fi], prev[fi], thresh)
                 got = thresh >= 0.0 and frac <= thresh
                 assert got == want
+
+
+class TestFrameKnobGridArtifact:
+    """knob4 (artifact removal / background subtraction) as a device-side
+    per-setting operator: interpret-mode kernel vs ``frame_knob_grid_ref``
+    (bit-exact) and vs the host ``knobs.apply_knobs`` pipeline (within one
+    grey level), with the per-frame enable gating the characterization
+    engine relies on."""
+
+    H, W, F = 32, 48, 3
+
+    @pytest.fixture(scope="class")
+    def scene(self):
+        rng = np.random.default_rng(23)
+        base = rng.integers(40, 200, (self.H, self.W, 3))
+        bg = np.clip(base + rng.normal(0, 2, base.shape), 0,
+                     255).astype(np.uint8)
+        frames = np.clip(base[None] + rng.normal(0, 10, (self.F, self.H,
+                                                         self.W, 3)),
+                         0, 255).astype(np.uint8)
+        frames[1, 8:16, 10:22] = 245            # a bright mover
+        frames[2, 20:28, 30:42] = 8             # a dark mover
+        prev = np.concatenate([frames[:1], frames[:-1]])
+        return frames, prev, bg
+
+    @pytest.mark.parametrize("res,cs", [(0, 0), (2, 1), (1, 2), (4, 0)])
+    def test_matches_ref_and_numpy(self, scene, res, cs):
+        from repro.core import knobs as K
+        from repro.kernels.frame_knobs import build_transform_plan, \
+            frame_knob_grid
+
+        frames, prev, bg = scene
+        plan = build_transform_plan(
+            self.H, self.W, scale=K.RESOLUTION_SCALES[res], cs=cs,
+            blur_ks=(0, 5, 10), art_modes=(0, 1, 2))
+        pk, fk, ck = frame_knob_grid(jnp.asarray(frames), jnp.asarray(prev),
+                                     plan, background=jnp.asarray(bg),
+                                     interpret=True)
+        pr, fr, cr = ref.frame_knob_grid_ref(
+            jnp.asarray(frames), jnp.asarray(prev), plan,
+            background=jnp.asarray(bg))
+        np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+        np.testing.assert_array_equal(np.asarray(fk), np.asarray(fr))
+        np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+        # vs the host pipeline: artifact removal then transform, one grey
+        n_blur = 3
+        for a in range(3):
+            for b in range(n_blur):
+                si = a * n_blur + b
+                for fi in range(self.F):
+                    s = K.KnobSetting(res, cs, [0, 1, 3][b], a, 0)
+                    r = K.apply_knobs(frames[fi], s, background=bg,
+                                      last_sent=None)
+                    got = np.asarray(pk)[si, fi]
+                    got = np.moveaxis(got, 0, -1) if cs == 0 else got[0]
+                    assert got.shape == r.frame.shape
+                    d = np.abs(got.astype(np.int32)
+                               - r.frame.astype(np.int32))
+                    assert d.max() <= 1
+                    assert (d != 0).mean() < 0.02
+
+    def test_enable_gates_artifact_per_frame(self, scene):
+        from repro.core import knobs as K
+        from repro.kernels.frame_knobs import build_transform_plan, \
+            frame_knob_grid
+
+        frames, prev, bg = scene
+        plan = build_transform_plan(self.H, self.W, scale=1.0, cs=1,
+                                    blur_ks=(0,), art_modes=(1,))
+        enable = np.asarray([0, 1, 1], np.int32)
+        pk, _, _ = frame_knob_grid(jnp.asarray(frames), jnp.asarray(prev),
+                                   plan, background=jnp.asarray(bg),
+                                   art_enable=jnp.asarray(enable),
+                                   interpret=True)
+        # frame 0: knob4 disabled -> plain transform of the raw frame
+        want = K.transform_frame(frames[0], K.KnobSetting(0, 1, 0))
+        d = np.abs(np.asarray(pk)[0, 0, 0].astype(np.int32)
+                   - want.astype(np.int32))
+        assert d.max() <= 1
+        # frames 1/2: knob4 live -> static background zeroed
+        assert (np.asarray(pk)[0, 1] == 0).mean() > 0.5
+
+    def test_artifact_plan_requires_background(self, scene):
+        from repro.kernels.frame_knobs import build_transform_plan, \
+            frame_knob_grid
+
+        frames, prev, _ = scene
+        plan = build_transform_plan(self.H, self.W, scale=1.0, cs=0,
+                                    blur_ks=(0,), art_modes=(0, 1))
+        with pytest.raises(ValueError, match="background"):
+            frame_knob_grid(jnp.asarray(frames), jnp.asarray(prev), plan,
+                            interpret=True)

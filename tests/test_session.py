@@ -151,6 +151,40 @@ class TestQosRenegotiation:
         assert all(d.wire_bytes >= size_tight * 0.5 for d in batch.delivered)
         sess.close()
 
+    def test_update_qos_recharacterize_hot_swaps_tables(self, table):
+        """``update_qos(recharacterize=True)`` re-sweeps the camera's knob
+        tables from its own recent frames and hot-swaps them into the live
+        controller (host + padded jit twin) before applying the bounds."""
+        sys = build_system(table, n_cams=1, frames=20)
+        sess, sub = open_sub(sys, "cam0")
+        for _ in range(3):
+            sub.poll(max_frames=4)
+        cam = sys.cams["cam0"]
+        v0 = cam.table_version
+        q = sub.update_qos(latency=0.080, recharacterize=True)
+        assert q.status is Status.OK
+        assert q.recharacterized == ("cam0",)
+        assert cam.table_version == v0 + 1
+        assert cam.controller.table is not table   # fresh live-clip table
+        assert cam.controller.table.proxy is not None
+        assert cam.controller.config.latency_target == 0.080
+        assert int(cam.jax_tables.n_valid) == len(cam.controller.table.settings)
+        assert sub.poll(max_frames=4)              # stream survives the swap
+        sess.close()
+
+    def test_session_update_qos_fans_out(self, table):
+        sys = build_system(table, n_cams=2, frames=10)
+        sess = MezClient(sys).open_session("app")
+        sub0 = sess.subscribe("cam0", 0.0, 100.0, latency=0.1, accuracy=0.9)
+        sub1 = sess.subscribe("cam1", 0.0, 100.0, latency=0.1, accuracy=0.9)
+        updates = sess.update_qos(latency=0.050)
+        assert len(updates) == 2
+        assert {u.subscription_id for u in updates} == {
+            sub0.subscription_id, sub1.subscription_id}
+        assert all(u.status is Status.OK for u in updates)
+        assert sys.cams["cam0"].controller.config.latency_target == 0.050
+        sess.close()
+
     def test_update_qos_on_closed_subscription_fails(self, table):
         sys = build_system(table)
         sess, sub = open_sub(sys, "cam0")
