@@ -1,4 +1,5 @@
-"""CI benchmark regression gate for the characterization sweep.
+"""CI benchmark regression gate for the characterization sweep and the
+fleet control plane.
 
 Diffs a freshly produced ``BENCH_characterize.json`` against the committed
 baseline (``benchmarks/baseline_characterize.json``) and FAILS the job when
@@ -20,9 +21,18 @@ the batched path still trips it.  Update the baseline deliberately (fresh
 measurements, conservative speedup floors, in the same PR that changes
 the engine) -- never by loosening the thresholds.
 
+When ``BENCH_fleet.json`` exists (produced by ``benchmarks.fleet_sweep``),
+the fleet gate also runs against ``benchmarks/baseline_fleet.json``: the
+vmapped fleet step must stay sublinear in camera count
+(``scaling_256_over_64`` under the committed ceiling -- linear would be
+4.0), keep a healthy speedup over the per-camera jitted-dispatch loop, and
+compile exactly once across the sweep.
+
   PYTHONPATH=src python -m benchmarks.check_regression \
       [--fresh BENCH_characterize.json] \
-      [--baseline benchmarks/baseline_characterize.json]
+      [--baseline benchmarks/baseline_characterize.json] \
+      [--fleet-fresh BENCH_fleet.json] \
+      [--fleet-baseline benchmarks/baseline_fleet.json]
 """
 
 from __future__ import annotations
@@ -36,6 +46,9 @@ _HERE = os.path.dirname(os.path.abspath(__file__))
 DEFAULT_FRESH = os.path.join(os.path.dirname(_HERE),
                              "BENCH_characterize.json")
 DEFAULT_BASELINE = os.path.join(_HERE, "baseline_characterize.json")
+DEFAULT_FLEET_FRESH = os.path.join(os.path.dirname(_HERE),
+                                   "BENCH_fleet.json")
+DEFAULT_FLEET_BASELINE = os.path.join(_HERE, "baseline_fleet.json")
 
 
 def check(fresh: dict, baseline: dict, *, max_speedup_drop: float,
@@ -87,6 +100,39 @@ def check(fresh: dict, baseline: dict, *, max_speedup_drop: float,
     return failures
 
 
+def check_fleet(fresh: dict, baseline: dict) -> list[str]:
+    """Gate BENCH_fleet.json against the committed conservative thresholds.
+    Returns the violated conditions (empty = pass)."""
+    failures: list[str] = []
+    scaling = fresh.get("scaling_256_over_64")
+    ceiling = baseline.get("max_scaling_256_over_64")
+    if scaling is None:
+        failures.append("scaling_256_over_64: missing from fleet results")
+    elif ceiling is not None and scaling > ceiling:
+        failures.append(
+            f"scaling_256_over_64: {scaling:.2f} exceeds the committed "
+            f"ceiling {ceiling:.2f} (linear would be 4.0) -- the fleet "
+            f"step stopped being ~flat in camera count")
+    speedup = fresh.get("speedup_vs_python_loop_64")
+    floor = baseline.get("min_speedup_vs_python_loop_64")
+    if speedup is None:
+        failures.append("speedup_vs_python_loop_64: missing from fleet "
+                        "results")
+    elif floor is not None and speedup < floor:
+        failures.append(
+            f"speedup_vs_python_loop_64: {speedup:.1f}x fell below the "
+            f"committed floor {floor:.1f}x -- one compiled vmapped step "
+            f"should beat 64 per-camera dispatches comfortably")
+    cache = fresh.get("cache_size")
+    max_cache = baseline.get("max_cache_size", 1)
+    if cache is None:
+        failures.append("cache_size: missing from fleet results")
+    elif cache > max_cache:
+        failures.append(f"cache_size: {cache} compiled variants (> "
+                        f"{max_cache}) -- the fleet step retraced")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh", default=DEFAULT_FRESH,
@@ -97,6 +143,10 @@ def main() -> int:
                     help="allowed fractional speedup regression (0.20=20%%)")
     ap.add_argument("--max-proxy-err", type=float, default=0.05,
                     help="allowed wire-size proxy median relative error")
+    ap.add_argument("--fleet-fresh", default=DEFAULT_FLEET_FRESH,
+                    help="fleet-scaling benchmark json (gated when present)")
+    ap.add_argument("--fleet-baseline", default=DEFAULT_FLEET_BASELINE,
+                    help="committed fleet gate thresholds")
     args = ap.parse_args()
 
     with open(args.fresh) as fh:
@@ -113,6 +163,22 @@ def main() -> int:
     print(f"baseline: speedup={baseline.get('speedup_vs_seed_path')}x "
           f"art={baseline.get('speedup_with_artifact')}x "
           f"proxy_err={baseline.get('proxy_median_rel_err')}")
+    if os.path.exists(args.fleet_fresh):
+        with open(args.fleet_fresh) as fh:
+            fleet_fresh = json.load(fh)
+        with open(args.fleet_baseline) as fh:
+            fleet_baseline = json.load(fh)
+        failures += check_fleet(fleet_fresh, fleet_baseline)
+
+        def fmt(key: str, spec: str) -> str:
+            v = fleet_fresh.get(key)
+            return format(v, spec) if isinstance(v, (int, float)) else str(v)
+
+        print(f"fleet:    scaling_256/64={fmt('scaling_256_over_64', '.2f')} "
+              f"speedup_vs_loop={fmt('speedup_vs_python_loop_64', '.1f')}x "
+              f"cache={fleet_fresh.get('cache_size')}")
+    else:
+        print(f"fleet:    {args.fleet_fresh} absent -- fleet gate skipped")
     if failures:
         print(f"\nBENCHMARK REGRESSION GATE FAILED "
               f"({len(failures)} violation(s)):", file=sys.stderr)

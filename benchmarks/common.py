@@ -10,6 +10,7 @@ import time
 import numpy as np
 
 from repro.core.characterization import CharacterizationTable, characterize
+from repro.core.knobs import KnobSetting
 from repro.data.camera import CameraConfig, SyntheticCamera
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/bench")
@@ -25,6 +26,19 @@ def ensure_dir() -> None:
 def camera_factory(dynamics: str, seed: int = 7, camera_id: str = "cam0"):
     return lambda: SyntheticCamera(CameraConfig(
         camera_id=camera_id, dynamics=dynamics, seed=seed))
+
+
+def synthetic_controller_table(n: int = 24, *, smin: float = 2e3,
+                               smax: float = 9e4) -> CharacterizationTable:
+    """Deterministic monotone size->accuracy table built without running
+    the detector or zlib -- shared scaffolding for the fleet benchmark and
+    the scenario/fleet test suites (one definition, not three copies)."""
+    sizes = np.linspace(smin, smax, n)
+    accs = 0.90 + 0.10 * (sizes - smin) / (smax - smin)
+    settings = tuple(KnobSetting(resolution=i % 5) for i in range(n))
+    return CharacterizationTable(
+        settings=settings, sizes_sorted=sizes, best_acc=accs,
+        best_idx=np.arange(n), acc_by_setting=accs, size_by_setting=sizes)
 
 
 _TABLES: dict | None = None

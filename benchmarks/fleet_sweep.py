@@ -1,0 +1,220 @@
+"""Fleet-scaling benchmark: per-step dispatch cost of the vmapped fleet
+controller step at 64 / 128 / 256 cameras -> ``BENCH_fleet.json``.
+
+The claim under test: driving N per-camera PI controllers as ONE compiled
+``fleet_controller_step`` makes per-step cost ~FLAT in camera count (the
+Python/dispatch overhead is paid once, not N times), where the pre-fleet
+path -- one jitted ``controller_step`` call per camera -- scales linearly.
+Measured numbers:
+
+  * ``us_per_step``            compiled fleet step, per camera count
+  * ``scaling_256_over_64``    flatness: ratio of step cost at 4x the fleet
+  * ``python_loop_us_per_step_64``   64 per-camera jitted dispatches
+  * ``speedup_vs_python_loop_64``    fleet step vs that loop
+  * ``decide_us_per_step_64``  the full broker-facing ``FleetController.
+                               decide`` tick (sync + dispatch + readback +
+                               host decision objects)
+  * ``cache_size``             compiled variants across the whole sweep of
+                               one fleet (must stay 1 per fleet instance)
+
+CI gates these via ``benchmarks/check_regression.py`` against the
+conservative thresholds committed in ``benchmarks/baseline_fleet.json``.
+
+  PYTHONPATH=src python -m benchmarks.fleet_sweep [--repeats 5]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (RESULTS_DIR, emit, ensure_dir,
+                               synthetic_controller_table)
+from repro.core.characterization import LatencyRegression
+from repro.core.controller import (ControllerConfig, ControllerParams,
+                                   FleetController, JaxControllerTables,
+                                   LatencyController, _controller_step_core,
+                                   controller_init, fleet_controller_init,
+                                   fleet_controller_step, stack_params,
+                                   stack_tables)
+ROOT_OUT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_fleet.json")
+
+CAPACITY = 512          # broker TABLE_CAPACITY: the deployed padding
+FLEET_SIZES = (64, 128, 256)
+STEPS = 200
+
+synthetic_table = synthetic_controller_table
+
+
+def build_fleet_arrays(n: int):
+    """Stacked tables/params/state for n cameras with varied live rows."""
+    reg = LatencyRegression(slope=1.2e-6, intercept=0.008)
+    rows, params = [], []
+    for i in range(n):
+        tbl = synthetic_table(12 + i % 29, smin=2e3 + 37.0 * i,
+                              smax=9e4 - 101.0 * i)
+        rows.append(JaxControllerTables.from_table(tbl, capacity=CAPACITY))
+        params.append(ControllerParams.from_scalars(
+            latency_target=0.040 + 0.001 * (i % 17),
+            accuracy_target=0.90 + 0.002 * (i % 4),
+            slope=reg.slope, intercept=reg.intercept))
+    tables = stack_tables(rows)
+    return tables, stack_params(params), fleet_controller_init(tables)
+
+
+BURST = 25          # steps per timed burst
+
+
+def time_fleet_steps(sizes, *, steps: int, repeats: int) -> dict[int, float]:
+    """Per-step wall time of the compiled fleet step for every fleet size.
+
+    Noise-robust on shared runners: many SHORT bursts (min over bursts --
+    a deschedule spike poisons one burst, not a whole measurement) with the
+    fleet sizes INTERLEAVED, so a noisy period degrades every size equally
+    instead of landing on whichever size happened to run then.
+    """
+    fleets = {}
+    for n in sizes:
+        tables, params, state = build_fleet_arrays(n)
+        step = jax.jit(lambda st, lat, tb, pr: fleet_controller_step(
+            st, lat, tb, pr))
+        rng = np.random.default_rng(n)
+        lat_series = [jnp.asarray(
+            rng.uniform(0.005, 0.5, n).astype(np.float32))
+            for _ in range(8)]
+        state, _ = step(state, lat_series[0], tables, params)   # compile
+        jax.block_until_ready(state.integral)
+        fleets[n] = [step, state, tables, params, lat_series]
+    bursts = max(1, (steps * repeats) // BURST)
+    best = {n: float("inf") for n in sizes}
+    for b in range(bursts):
+        for n in sizes:
+            step, s, tables, params, lat_series = fleets[n]
+            t0 = time.perf_counter()
+            for k in range(BURST):
+                s, _ = step(s, lat_series[k % len(lat_series)], tables,
+                            params)
+            jax.block_until_ready(s.integral)
+            best[n] = min(best[n], (time.perf_counter() - t0) / BURST)
+            fleets[n][1] = s
+    for n in sizes:
+        assert fleets[n][0]._cache_size() == 1
+    return {n: best[n] * 1e6 for n in sizes}
+
+
+def time_python_loop(n: int, *, steps: int, repeats: int) -> float:
+    """The pre-fleet path: one jitted controller_step dispatch per camera."""
+    reg = LatencyRegression(slope=1.2e-6, intercept=0.008)
+    cams = []
+    step = jax.jit(lambda st, lat, tb, pr: _controller_step_core(
+        st, lat, tb, pr))
+    for i in range(n):
+        tbl = synthetic_table(12 + i % 29, smin=2e3 + 37.0 * i,
+                              smax=9e4 - 101.0 * i)
+        jt = JaxControllerTables.from_table(tbl, capacity=CAPACITY)
+        pr = ControllerParams.from_scalars(
+            latency_target=0.040 + 0.001 * (i % 17),
+            accuracy_target=0.90 + 0.002 * (i % 4),
+            slope=reg.slope, intercept=reg.intercept)
+        cams.append((controller_init(jt), jt, pr))
+    rng = np.random.default_rng(n)
+    lats = rng.uniform(0.005, 0.5, size=(8, n)).astype(np.float32)
+    # compile once (shared shapes across cameras)
+    st0, aux = step(cams[0][0], jnp.float32(0.1), cams[0][1], cams[0][2])
+    jax.block_until_ready(st0.integral)
+    best = float("inf")
+    for _ in range(repeats):
+        states = [c[0] for c in cams]
+        t0 = time.perf_counter()
+        for k in range(steps):
+            row = lats[k % len(lats)]
+            for i, (_, jt, pr) in enumerate(cams):
+                states[i], aux = step(states[i], row[i], jt, pr)
+        jax.block_until_ready(states[-1].integral)
+        best = min(best, (time.perf_counter() - t0) / steps)
+    return best * 1e6
+
+
+def time_decide(n: int, *, steps: int, repeats: int) -> float:
+    """End-to-end broker tick: FleetController.decide (sync + compiled
+    dispatch + device readback + ControlDecision construction)."""
+    reg = LatencyRegression(slope=1.2e-6, intercept=0.008)
+
+    class _Cam:
+        def __init__(self, i):
+            self.camera_id = f"cam{i:03d}"
+            tbl = synthetic_table(12 + i % 29, smin=2e3 + 37.0 * i,
+                                  smax=9e4 - 101.0 * i)
+            self.controller = LatencyController(
+                ControllerConfig(0.040 + 0.001 * (i % 17),
+                                 0.90 + 0.002 * (i % 4)), tbl, reg)
+            self.table_version = 0
+            self.qos_version = 0
+
+    cams = [_Cam(i) for i in range(n)]
+    fleet = FleetController(cams, capacity=CAPACITY)
+    rng = np.random.default_rng(n)
+    fbs = [{c.camera_id: float(x) for c, x in
+            zip(cams, rng.uniform(0.005, 0.5, n))} for _ in range(4)]
+    fleet.decide(fbs[0])                     # compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for k in range(steps):
+            fleet.decide(fbs[k % len(fbs)])
+        best = min(best, (time.perf_counter() - t0) / steps)
+    assert fleet.cache_size() == 1
+    return best * 1e6
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="best-of-N timing repeats (CI runners are noisy)")
+    ap.add_argument("--steps", type=int, default=STEPS)
+    args = ap.parse_args()
+
+    out: dict = {"fleet_sizes": list(FLEET_SIZES), "capacity": CAPACITY,
+                 "steps": args.steps, "us_per_step": {},
+                 "us_per_camera": {}}
+    measured = time_fleet_steps(FLEET_SIZES, steps=args.steps,
+                                repeats=args.repeats)
+    for n in FLEET_SIZES:
+        us = measured[n]
+        out["us_per_step"][str(n)] = us
+        out["us_per_camera"][str(n)] = us / n
+        print(f"fleet n={n:4d}: {us:9.1f} us/step  ({us / n:6.2f} us/cam)")
+    lo, hi = str(FLEET_SIZES[0]), str(FLEET_SIZES[-1])
+    out["scaling_256_over_64"] = (out["us_per_step"][hi]
+                                  / out["us_per_step"][lo])
+    loop_us = time_python_loop(FLEET_SIZES[0], steps=max(args.steps // 4, 25),
+                               repeats=max(args.repeats - 2, 2))
+    out["python_loop_us_per_step_64"] = loop_us
+    out["speedup_vs_python_loop_64"] = loop_us / out["us_per_step"][lo]
+    out["decide_us_per_step_64"] = time_decide(
+        FLEET_SIZES[0], steps=max(args.steps // 4, 25),
+        repeats=max(args.repeats - 2, 2))
+    out["cache_size"] = 1                   # asserted inside the timers
+
+    ensure_dir()
+    emit("BENCH_fleet", out["us_per_step"][lo],
+         f"scaling={out['scaling_256_over_64']:.2f};"
+         f"speedup={out['speedup_vs_python_loop_64']:.1f}x", out)
+    with open(ROOT_OUT, "w") as fh:
+        json.dump(out, fh, indent=1)
+        fh.write("\n")
+    print(f"python-loop n=64: {loop_us:9.1f} us/step -> "
+          f"{out['speedup_vs_python_loop_64']:.1f}x speedup; "
+          f"decide n=64: {out['decide_us_per_step_64']:.1f} us/step")
+    print(f"artifacts: {ROOT_OUT} + {RESULTS_DIR}/BENCH_fleet.json")
+
+
+if __name__ == "__main__":
+    main()

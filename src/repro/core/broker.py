@@ -36,7 +36,8 @@ from repro.core.api import (BrokerDown, DeliveredFrame, EventKind, FrameBatch,
                             SubscriptionState)
 from repro.core.channel import WirelessChannel
 from repro.core.characterization import CharacterizationTable, LatencyRegression
-from repro.core.controller import (ControllerConfig, JaxControllerTables,
+from repro.core.controller import (ControlDecision, ControllerConfig,
+                                   FleetController, JaxControllerTables,
                                    LatencyController, swap_tables)
 from repro.core import knobs as K
 from repro.core.knobs import wire_size
@@ -83,6 +84,9 @@ class CamBroker:
         # survives online re-characterization without recompiling
         self.jax_tables: JaxControllerTables | None = None
         self.table_version = 0
+        # bumped on every retarget/set_target: a FleetController diffing
+        # this counter knows when to rewrite the camera's params lane
+        self.qos_version = 0
         self.store = store
         self.crashed = False
         self._last_sent: np.ndarray | None = None
@@ -145,6 +149,7 @@ class CamBroker:
                                   accuracy_target=accuracy)
         self.controller = LatencyController(cfg, table, regression)
         self._install_jax_tables(table)
+        self.qos_version += 1
         self._rechar_memo = None           # externally supplied tables
 
     def _install_jax_tables(self, table: CharacterizationTable) -> None:
@@ -215,6 +220,7 @@ class CamBroker:
         if self.controller is None:
             return False
         self.controller.set_target(latency, accuracy)
+        self.qos_version += 1
         return True
 
     # -- Publish (camera -> camera-node log) -------------------------------------
@@ -227,14 +233,20 @@ class CamBroker:
     def fetch(self, t_start: float, t_stop: float, *,
               latency_feedback: float | None = None,
               controlled: bool = True,
-              max_frames: int | None = None) -> list[DeliveredFrame]:
+              max_frames: int | None = None,
+              decision: ControlDecision | None = None
+              ) -> list[DeliveredFrame]:
         """Serve the frames in [t_start, t_stop] across the wireless channel.
 
         ``latency_feedback`` is the subscriber-observed p95 latency of the
         previous window -- the controller's sensor input.  ``max_frames``
         bounds the batch so the subscriber's control loop samples latency at
         its configured interval (paper: "the network latency is measured
-        again at the next sampling interval").
+        again at the next sampling interval").  ``decision`` injects a
+        pre-made control decision (the fleet-backed ``EdgeBroker`` computes
+        decisions for ALL cameras of a session in one compiled vmapped step
+        and hands each camera its lane) -- the host controller is then not
+        consulted for this fetch.
         """
         if self.crashed:
             raise BrokerDown(self.camera_id)
@@ -242,9 +254,14 @@ class CamBroker:
         knob_idx = -1
         controller_cost = 0.0
         setting = None
-        decision = None
         infeasible = False
-        if controlled and self.controller is not None and latency_feedback is not None:
+        if controlled and self.controller is not None and decision is not None:
+            infeasible = decision.acted and not decision.feasible
+            if infeasible:
+                self.infeasible_reported += 1
+            setting = decision.setting
+            knob_idx = decision.setting_index
+        elif controlled and self.controller is not None and latency_feedback is not None:
             decision = self.controller.update(latency_feedback)
             infeasible = not decision.feasible
             if infeasible:
@@ -448,6 +465,11 @@ class _Subscription:
     rr_offset: int = 0
     events: deque = dataclasses.field(
         default_factory=lambda: deque(maxlen=256))
+    # fleet control plane: one vmapped compiled controller step drives all
+    # cameras of the subscription (built lazily once every camera has a
+    # live controller; None until then / when not requested)
+    want_fleet: bool = False
+    fleet: FleetController | None = None
 
 
 @dataclasses.dataclass
@@ -539,7 +561,8 @@ class EdgeBroker:
                             controlled: bool = True,
                             feedback_window: int = 8,
                             credit_limit: int = 2,
-                            retarget: bool = True) -> str:
+                            retarget: bool = True,
+                            fleet: bool = False) -> str:
         """Register a (possibly multi-camera) subscription on a session.
 
         With ``retarget`` (the default), each spec's (latency, accuracy)
@@ -549,6 +572,13 @@ class EdgeBroker:
         (bounds there are set out-of-band via ``CamBroker.set_target``).
         A camera that is crashed at create time is marked failed and
         surfaces on the event stream at the first poll.
+
+        With ``fleet``, every poll drives ALL cameras of the subscription
+        through ONE compiled vmapped controller step (``FleetController``)
+        instead of one host PI update per camera -- per-poll control-plane
+        cost is ~flat in camera count.  Requires ``controlled``; cameras
+        whose controllers are installed later join the fleet lazily at the
+        first poll where every camera is ready.
         """
         if self.crashed:
             raise RPCTimeout("EdgeBroker down")
@@ -557,6 +587,8 @@ class EdgeBroker:
             raise RPCTimeout(f"unknown session {session_id}")
         if not specs:
             raise ValueError("subscription needs at least one camera spec")
+        if fleet and not controlled:
+            raise ValueError("fleet control plane requires controlled=True")
         for spec in specs:
             if spec.camera_id not in self._cams:
                 raise RPCTimeout(f"unknown camera {spec.camera_id}")
@@ -564,7 +596,8 @@ class EdgeBroker:
         cameras = {spec.camera_id: _CamCursor(spec, spec.t_start)
                    for spec in specs}
         rec = _Subscription(sub_id, session_id, sess.application_id, cameras,
-                            controlled, feedback_window, credit_limit)
+                            controlled, feedback_window, credit_limit,
+                            want_fleet=fleet)
         if retarget:
             for spec in specs:
                 try:
@@ -580,7 +613,25 @@ class EdgeBroker:
         for spec in specs:
             self._sub_index.setdefault(
                 (sess.application_id, spec.camera_id), []).append(sub_id)
+        if fleet:
+            self._ensure_fleet(rec)      # build now if controllers are live
         return sub_id
+
+    def _ensure_fleet(self, rec: _Subscription) -> FleetController | None:
+        """Build the subscription's fleet control plane once every camera
+        has a live controller; until then polls fall back to the per-camera
+        host path.  Lane order is the sorted camera-id order (stable across
+        polls and restarts)."""
+        if rec.fleet is not None or not rec.want_fleet:
+            return rec.fleet
+        cams = []
+        for cid in sorted(rec.cameras):
+            cam = self._cams.get(cid)
+            if cam is None or cam.controller is None:
+                return None
+            cams.append(cam)
+        rec.fleet = FleetController(cams, capacity=TABLE_CAPACITY)
+        return rec.fleet
 
     def poll_subscription(self, subscription_id: str, *,
                           max_frames: int = 16,
@@ -613,6 +664,28 @@ class EdgeBroker:
             rec.rr_offset += 1
             order = active[k:] + active[:k]
             share = max(1, max_frames // len(order))
+            decisions: dict[str, ControlDecision] | None = None
+            fleet = self._ensure_fleet(rec) if rec.controlled else None
+            if fleet is not None:
+                # ONE compiled vmapped step decides for every serving
+                # camera of the poll (a fleet-wide control tick).  Cameras
+                # without feedback yet hold their operating point (their
+                # lane sees zero error); cameras whose broker is already
+                # down are left out entirely -- the host path never
+                # consults their controller either (fetch raises first).
+                # Note the tick covers every serving camera even when a
+                # saturated ``max_frames`` ends the fetch loop early; with
+                # the default share/credit sizing every camera is fetched
+                # each poll and fleet decisions match the host path
+                # exactly.
+                fb: dict[str, float | None] = {}
+                for cid in order:
+                    cam = self._cams.get(cid)
+                    if cam is None or cam.crashed:
+                        continue
+                    w = rec.cameras[cid].window
+                    fb[cid] = float(np.percentile(w, 95)) if w else None
+                decisions = fleet.decide(fb)
             for cid in order:
                 if len(out) >= max_frames:
                     break
@@ -623,7 +696,9 @@ class EdgeBroker:
                         and time.monotonic() - t0 > deadline):
                     break
                 self._fetch_into(rec, cid, min(share, max_frames - len(out)),
-                                 out)
+                                 out,
+                                 decision=(decisions.get(cid)
+                                           if decisions else None))
         out.sort(key=lambda d: (d.timestamp, d.camera_id))
         if not out:
             cams = rec.cameras.values()
@@ -634,8 +709,11 @@ class EdgeBroker:
         return FrameBatch(tuple(out), subscription_id)
 
     def _fetch_into(self, rec: _Subscription, camera_id: str, budget: int,
-                    out: list[DeliveredFrame]) -> None:
-        """One on-demand fetch round for one camera of a subscription."""
+                    out: list[DeliveredFrame], *,
+                    decision: ControlDecision | None = None) -> None:
+        """One on-demand fetch round for one camera of a subscription.
+        ``decision`` carries the camera's lane of a fleet control tick; the
+        host controller is then bypassed for this fetch."""
         cur = rec.cameras[camera_id]
         budget = min(budget, rec.credit_limit)
         if budget <= 0:
@@ -647,13 +725,16 @@ class EdgeBroker:
                 EventKind.RPC_TIMEOUT, camera_id, rec.sub_id, cur.cursor,
                 "camera unregistered"))
             return
-        feedback = (float(np.percentile(cur.window, 95))
-                    if cur.window else None)
+        feedback = None
+        if decision is None:
+            feedback = (float(np.percentile(cur.window, 95))
+                        if cur.window else None)
         try:
             frames = cam.fetch(cur.cursor, cur.spec.t_stop,
                                latency_feedback=feedback,
                                controlled=rec.controlled,
-                               max_frames=budget)
+                               max_frames=budget,
+                               decision=decision)
         except BrokerDown as e:
             cur.failed = True
             rec.events.append(SessionEvent(
@@ -740,6 +821,30 @@ class EdgeBroker:
                          tuple(applied), subscription_id,
                          recharacterized=tuple(recharacterized))
 
+    def reattach_camera(self, subscription_id: str, camera_id: str) -> Status:
+        """Re-admit a recovered camera into a live subscription.
+
+        A camera that crashed mid-stream is marked failed and stops being
+        polled; after the node reboots (``CamBroker.recover``) the scenario
+        /operator re-attaches it here.  The cursor resumes exactly where it
+        stopped -- frames published while the camera was down are still in
+        its log and are delivered late rather than lost (at-most-once is
+        preserved; nothing is re-fetched).  FAIL when the subscription or
+        camera is unknown, or the camera is still crashed; OK (idempotent)
+        when the camera was never failed.
+        """
+        if self.crashed:
+            raise RPCTimeout("EdgeBroker down")
+        rec = self._subscriptions.get(subscription_id)
+        if rec is None:
+            return Status.FAIL
+        cur = rec.cameras.get(camera_id)
+        cam = self._cams.get(camera_id)
+        if cur is None or cam is None or cam.crashed:
+            return Status.FAIL
+        cur.failed = False
+        return Status.OK
+
     def close_subscription(self, subscription_id: str) -> Status:
         """Explicit teardown: evicts the record and scrubs the legacy
         (application, camera) index so the registry stays O(live
@@ -758,6 +863,14 @@ class EdgeBroker:
                 if not ids:
                     del self._sub_index[key]
         return Status.OK
+
+    def subscription_fleet(self, subscription_id: str
+                           ) -> FleetController | None:
+        """The live fleet control plane of a fleet-backed subscription
+        (None for host-path subscriptions) -- introspection for parity
+        tests and the fleet-scaling benchmark."""
+        rec = self._subscriptions.get(subscription_id)
+        return rec.fleet if rec is not None else None
 
     def subscription_events(self, subscription_id: str) -> list[SessionEvent]:
         """Drain pending out-of-band events for a subscription."""

@@ -104,6 +104,16 @@ class WirelessChannel:
     def num_active(self) -> int:
         return max(1, len(self._active))
 
+    def set_interference(self, factor: float) -> None:
+        """Set the external-interference multiplier in place (paper
+        Section 2.2).  The scenario harness scripts this over virtual time
+        (spikes, ramps); the config stays an immutable value object --
+        mutation is a whole-config replace, so captured references to the
+        old config stay coherent."""
+        if factor <= 0:
+            raise ValueError(f"interference factor must be > 0, got {factor}")
+        self.config = dataclasses.replace(self.config, interference=factor)
+
     # -- the latency law -------------------------------------------------------
     def contention(self, n: int, size_bytes: float, fps: float) -> float:
         c = self.config

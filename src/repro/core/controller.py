@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +48,9 @@ from repro.core.knobs import KnobSetting
 
 __all__ = ["ControllerConfig", "ControlDecision", "LatencyController",
            "JaxControllerTables", "ControllerState", "controller_init",
-           "controller_step", "swap_tables"]
+           "controller_step", "swap_tables", "ControllerParams", "StepAux",
+           "stack_tables", "stack_params", "fleet_controller_init",
+           "fleet_controller_step", "fleet_swap_tables", "FleetController"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -283,6 +286,141 @@ def controller_init(tables: JaxControllerTables, *,
     )
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ControllerParams:
+    """The control-law constants of Algorithm 1 as TRACED leaves.
+
+    For one camera every leaf is a scalar; ``stack_params`` stacks N of
+    them into ``f32[N]`` lanes for the vmapped fleet step.  The gains are
+    precomputed host-side in float64 (``k1``/``k2``/``nominal``) exactly as
+    ``LatencyController`` does, so a compiled step fed these params is
+    numerically identical to the scalar-kwarg ``controller_step`` -- and a
+    per-camera retarget (new targets, same shapes) flows into a compiled
+    consumer without retracing.
+    """
+    latency_target: jax.Array    # f32
+    accuracy_target: jax.Array   # f32
+    error_threshold: jax.Array   # f32
+    k1: jax.Array                # f32, -alpha_p / slope (bytes per second)
+    k2: jax.Array                # f32, -alpha_i / slope
+    nominal: jax.Array           # f32, Regression^-1(latency_target), bytes
+    integral_clip: jax.Array     # f32
+    relax: jax.Array             # bool
+
+    def tree_flatten(self):
+        return ((self.latency_target, self.accuracy_target,
+                 self.error_threshold, self.k1, self.k2, self.nominal,
+                 self.integral_clip, self.relax), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def from_scalars(cls, *, latency_target: float, accuracy_target: float,
+                     slope: float, intercept: float,
+                     error_threshold: float = 0.010, alpha_p: float = 0.8,
+                     alpha_i: float = 0.25, integral_clip: float = 1.0,
+                     relax: bool = True) -> "ControllerParams":
+        k1 = -alpha_p / max(slope, 1e-12)
+        k2 = -alpha_i / max(slope, 1e-12)
+        nominal = max(0.0, (latency_target - intercept) / max(slope, 1e-12))
+        return cls(jnp.float32(latency_target), jnp.float32(accuracy_target),
+                   jnp.float32(error_threshold), jnp.float32(k1),
+                   jnp.float32(k2), jnp.float32(nominal),
+                   jnp.float32(integral_clip), jnp.asarray(relax))
+
+    @classmethod
+    def from_controller(cls, host: "LatencyController") -> "ControllerParams":
+        """Mirror a live host controller's law (gains/nominal copied verbatim
+        from the float64 host state, so fleet decisions track host decisions)."""
+        cfg = host.config
+        return cls(jnp.float32(cfg.latency_target),
+                   jnp.float32(cfg.accuracy_target),
+                   jnp.float32(cfg.error_threshold), jnp.float32(host.k1),
+                   jnp.float32(host.k2), jnp.float32(host._nominal),
+                   jnp.float32(cfg.integral_clip), jnp.asarray(cfg.relax))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class StepAux:
+    """Per-step decision detail (everything ``CamBroker.fetch`` needs to act
+    on a decision without re-running the host control law)."""
+    idx: jax.Array             # i32, chosen setting (-1 = none / raw frames)
+    feasible: jax.Array        # bool, accuracy floor met at the size budget
+    acted: jax.Array           # bool, outside the error band this step
+    error: jax.Array           # f32, latency error (seconds)
+    requested_size: jax.Array  # f32, PI output (bytes), nominal when holding
+    accuracy: jax.Array        # f32, best accuracy at the size budget
+
+    def tree_flatten(self):
+        return ((self.idx, self.feasible, self.acted, self.error,
+                 self.requested_size, self.accuracy), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _controller_step_core(state: ControllerState, latency_sampled: jax.Array,
+                          tables: JaxControllerTables,
+                          params: ControllerParams, *,
+                          best_effort: bool = False
+                          ) -> tuple[ControllerState, StepAux]:
+    """One PI update with traced params -- the shared scalar/fleet core.
+
+    ``best_effort`` selects the infeasible-step semantics: False keeps the
+    raw jittable contract (knob index -> -1, consumer falls back to raw
+    frames); True mirrors the host ``LatencyController`` (serve the
+    best-accuracy setting within budget, notify via the feasible flag) --
+    what the fleet-backed broker path uses.
+    """
+    lat = jnp.asarray(latency_sampled, jnp.float32)
+    error = lat - params.latency_target
+    act = (error > params.error_threshold) | (
+        params.relax & (error < -params.error_threshold))
+
+    new_integral = jnp.clip(state.integral + error,
+                            -params.integral_clip, params.integral_clip)
+    integral = jnp.where(act, new_integral, state.integral)
+
+    size = params.nominal + params.k1 * error + params.k2 * integral
+    # clip into the LIVE size range (padding rows carry +inf)
+    hi = jnp.take(tables.sizes_sorted, tables.n_valid - 1)
+    size = jnp.clip(size, tables.sizes_sorted[0], hi)
+    pos = jnp.searchsorted(tables.sizes_sorted, size, side="right") - 1
+    pos = jnp.clip(pos, 0, tables.n_valid - 1)
+    accuracy = tables.best_acc[pos]
+    idx = tables.best_idx[pos]
+
+    ok = accuracy >= params.accuracy_target
+    if best_effort:
+        # host semantics: _current moves to the best-effort setting even on
+        # an infeasible step (idx >= 0 guard matches the host's)
+        chosen = jnp.where(idx >= 0, idx, state.current_idx)
+    else:
+        chosen = jnp.where(ok, idx, -1)
+    new_idx = jnp.where(act, chosen, state.current_idx)
+    new_feasible = jnp.where(act, ok, state.feasible)
+    new_state = ControllerState(
+        integral=integral,
+        current_idx=new_idx.astype(jnp.int32),
+        feasible=new_feasible,
+        last_error=error,
+    )
+    # decision-shaped feasibility mirrors the host: an acted step reports
+    # whether the floor was met, a hold reports whether a live setting is
+    # being served (the STATE keeps the sticky flag for jit consumers)
+    aux = StepAux(idx=new_state.current_idx,
+                  feasible=jnp.where(act, ok, new_state.current_idx >= 0),
+                  acted=act, error=error,
+                  requested_size=jnp.where(act, size, params.nominal),
+                  accuracy=accuracy)
+    return new_state, aux
+
+
 def controller_step(state: ControllerState, latency_sampled: jax.Array,
                     tables: JaxControllerTables, *,
                     latency_target: float, accuracy_target: float,
@@ -301,35 +439,271 @@ def controller_step(state: ControllerState, latency_sampled: jax.Array,
     highest-fidelity payload and flags infeasibility, matching the paper's
     "notify the application" semantics).
     """
-    lat = jnp.asarray(latency_sampled, jnp.float32)
-    error = lat - latency_target
-    act = error > error_threshold
-    if relax:
-        act = act | (error < -error_threshold)
-
-    k1 = -alpha_p / max(slope, 1e-12)
-    k2 = -alpha_i / max(slope, 1e-12)
-    nominal = max(0.0, (latency_target - intercept) / max(slope, 1e-12))
-
-    new_integral = jnp.clip(state.integral + error, -integral_clip, integral_clip)
-    integral = jnp.where(act, new_integral, state.integral)
-
-    size = nominal + k1 * error + k2 * integral
-    # clip into the LIVE size range (padding rows carry +inf)
-    hi = jnp.take(tables.sizes_sorted, tables.n_valid - 1)
-    size = jnp.clip(size, tables.sizes_sorted[0], hi)
-    pos = jnp.searchsorted(tables.sizes_sorted, size, side="right") - 1
-    pos = jnp.clip(pos, 0, tables.n_valid - 1)
-    accuracy = tables.best_acc[pos]
-    idx = tables.best_idx[pos]
-
-    ok = accuracy >= accuracy_target
-    new_idx = jnp.where(act, jnp.where(ok, idx, -1), state.current_idx)
-    new_feasible = jnp.where(act, ok, state.feasible)
-    new_state = ControllerState(
-        integral=integral,
-        current_idx=new_idx.astype(jnp.int32),
-        feasible=new_feasible,
-        last_error=error,
-    )
+    params = ControllerParams.from_scalars(
+        latency_target=latency_target, accuracy_target=accuracy_target,
+        slope=slope, intercept=intercept, error_threshold=error_threshold,
+        alpha_p=alpha_p, alpha_i=alpha_i, integral_clip=integral_clip,
+        relax=relax)
+    new_state, _ = _controller_step_core(state, latency_sampled, tables,
+                                         params)
     return new_state, new_state.current_idx
+
+
+# =============================================================================
+# Fleet control plane: all cameras of a session in ONE compiled step
+# =============================================================================
+
+
+def stack_tables(tables: "Sequence[JaxControllerTables]"
+                 ) -> JaxControllerTables:
+    """Stack per-camera tables along a leading fleet axis.
+
+    Every table must share one capacity (``JaxControllerTables.from_table``
+    with a common ``capacity=``); per-camera ``n_valid`` row counts may
+    differ freely -- that is what makes a per-camera hot-swap free.
+    """
+    caps = {t.sizes_sorted.shape[-1] for t in tables}
+    if len(caps) != 1:
+        raise ValueError(f"stack_tables needs one shared capacity, got {caps}")
+    return jax.tree_util.tree_map(lambda *leaves: jnp.stack(leaves), *tables)
+
+
+def stack_params(params: "Sequence[ControllerParams]") -> ControllerParams:
+    """Stack per-camera control-law params along a leading fleet axis."""
+    return jax.tree_util.tree_map(lambda *leaves: jnp.stack(leaves), *params)
+
+
+def fleet_controller_init(tables: JaxControllerTables, *,
+                          start_idx=None) -> ControllerState:
+    """Stacked initial state for a fleet of N cameras (tables stacked along
+    the leading axis).  ``start_idx`` seeds per-camera operating points
+    (i32[N]); default is each camera's highest-fidelity setting."""
+    n = tables.sizes_sorted.shape[0]
+    if start_idx is None:
+        start = jax.vmap(lambda t: jnp.take(t.best_idx, t.n_valid - 1))(tables)
+    else:
+        start = jnp.asarray(start_idx)
+    return ControllerState(
+        integral=jnp.zeros((n,), jnp.float32),
+        current_idx=start.astype(jnp.int32),
+        feasible=jnp.ones((n,), bool),
+        last_error=jnp.zeros((n,), jnp.float32),
+    )
+
+
+def fleet_controller_step(states: ControllerState, latencies: jax.Array,
+                          tables: JaxControllerTables,
+                          params: ControllerParams
+                          ) -> tuple[ControllerState, StepAux]:
+    """One PI update for a WHOLE fleet: ``controller_step`` vmapped over the
+    leading camera axis of every input, so N cameras cost one compiled
+    dispatch instead of N (per-step Python overhead is ~flat in N).
+
+    Uses host (best-effort) infeasible semantics -- this is the step the
+    fleet-backed ``EdgeBroker.poll_subscription`` drives, and the broker's
+    contract is the paper's "notify the application AND keep serving the
+    best-accuracy setting within budget".
+    """
+    lats = jnp.asarray(latencies, jnp.float32)
+    return jax.vmap(
+        functools.partial(_controller_step_core, best_effort=True)
+    )(states, lats, tables, params)
+
+
+def fleet_swap_tables(live: JaxControllerTables, index,
+                      fresh: JaxControllerTables) -> JaxControllerTables:
+    """Hot-swap a SUBSET of per-camera tables inside a stacked fleet.
+
+    ``index`` is an int (one camera) or int sequence; ``fresh`` is one
+    table (capacity matching the stack) or a stack of ``len(index)`` tables.
+    Shapes are unchanged, so every compiled consumer of the stack keeps its
+    cache -- re-characterizing camera 17 of 256 never recompiles the fleet
+    step.  Capacity mismatch is an error (grow the stack deliberately via
+    ``FleetController`` instead)."""
+    idx = jnp.atleast_1d(jnp.asarray(index, jnp.int32))
+    cap_live = live.sizes_sorted.shape[-1]
+    cap_fresh = fresh.sizes_sorted.shape[-1]
+    if cap_live != cap_fresh:
+        raise ValueError(f"fleet_swap_tables: capacity mismatch "
+                         f"(stack {cap_live}, fresh {cap_fresh})")
+
+    def put(leaf_live, leaf_fresh):
+        leaf_fresh = jnp.asarray(leaf_fresh)
+        if leaf_fresh.ndim == leaf_live.ndim - 1:      # single row
+            leaf_fresh = leaf_fresh[None]
+        return leaf_live.at[idx].set(leaf_fresh)
+
+    return jax.tree_util.tree_map(put, live, fresh)
+
+
+def _set_lane(tree, i: int, row):
+    """Write one fleet lane of a stacked pytree (state/params row update)."""
+    return jax.tree_util.tree_map(
+        lambda stacked, v: stacked.at[i].set(v), tree, row)
+
+
+class FleetController:
+    """Host-side orchestrator: N per-camera PI controllers as ONE vmapped,
+    jitted ``fleet_controller_step``.
+
+    Built over live ``CamBroker``-like objects (anything carrying
+    ``camera_id``, ``controller``, ``table_version``, ``qos_version``); the
+    brokers' host controllers stay the source of truth for tables, targets
+    and law constants, while the PI *state* (integral, operating point)
+    lives here on device.  ``sync()`` diffs the brokers' version counters
+    and hot-swaps changed lanes (tables via ``fleet_swap_tables``, targets
+    via a params-row write) without recompiling; only a table that outgrows
+    the shared capacity rebuilds the stack, which recompiles once -- the
+    correct cost.
+    """
+
+    HISTORY_LIMIT = 4096
+
+    def __init__(self, cams, *, capacity: int | None = None,
+                 record_history: bool = False):
+        cams = list(cams)
+        if not cams:
+            raise ValueError("FleetController needs at least one camera")
+        for cam in cams:
+            if cam.controller is None:
+                raise ValueError(
+                    f"camera {cam.camera_id!r} has no controller installed")
+        self._cams = cams
+        self.cam_ids = [c.camera_id for c in cams]
+        need = max(len(c.controller.table.settings) for c in cams)
+        self.capacity = max(need, capacity or 0)
+        self.record_history = record_history
+        self.history: "deque" = deque(maxlen=self.HISTORY_LIMIT)
+        # wrap in a per-instance function object: jax.jit keys its tracing
+        # cache on the callable, so each fleet gets its own cache and
+        # ``cache_size()`` counts THIS fleet's compiled variants only
+        self._step = jax.jit(
+            lambda st, lat, tb, pr: fleet_controller_step(st, lat, tb, pr))
+        self._build_stack()
+
+    # -- stack assembly ------------------------------------------------------
+    def _build_stack(self) -> None:
+        rows = [JaxControllerTables.from_table(c.controller.table,
+                                               capacity=self.capacity)
+                for c in self._cams]
+        self.tables = stack_tables(rows)
+        self.params = stack_params(
+            [ControllerParams.from_controller(c.controller)
+             for c in self._cams])
+        start = np.asarray([c.controller._current for c in self._cams],
+                           np.int32)
+        state = fleet_controller_init(self.tables, start_idx=start)
+        self.state = ControllerState(
+            integral=jnp.asarray([c.controller.integral for c in self._cams],
+                                 jnp.float32),
+            current_idx=state.current_idx,
+            feasible=state.feasible,
+            last_error=state.last_error)
+        self._table_versions = [c.table_version for c in self._cams]
+        self._qos_versions = [c.qos_version for c in self._cams]
+
+    def cache_size(self) -> int:
+        """Compiled-variant count of the fleet step (1 = no recompiles)."""
+        return self._step._cache_size()
+
+    def __len__(self) -> int:
+        return len(self._cams)
+
+    # -- live reconfiguration ------------------------------------------------
+    def sync(self) -> None:
+        """Fold per-camera retargets / table refreshes into the stack.
+
+        Called at the top of every ``decide``; O(N) integer compares when
+        nothing changed.  A retarget rewrites the camera's params lane and
+        mirrors the host's state reset (integral, re-seeded operating
+        point); a table refresh hot-swaps the camera's table lane and
+        re-seeds the operating point while the integral carries over --
+        exactly the host-side ``set_target`` / ``swap_table`` contracts.
+        """
+        table_swapped = [cam.table_version != self._table_versions[i]
+                         for i, cam in enumerate(self._cams)]
+        retargeted = [cam.qos_version != self._qos_versions[i]
+                      for i, cam in enumerate(self._cams)]
+        need = max(len(c.controller.table.settings) for c in self._cams)
+        if need > self.capacity:
+            # at least one refreshed table outgrew the shared padding: grow
+            # to the whole fleet's requirement at once and rebuild the
+            # stack -- ONE deliberate recompile.  The fleet lanes, not the
+            # (stale in fleet mode) host fields, own the live PI state, so
+            # it is carried across the rebuild; changed lanes re-seed below.
+            self.capacity = need
+            state = self.state
+            self._build_stack()
+            self.state = state
+        else:
+            for i, cam in enumerate(self._cams):
+                ctl = cam.controller
+                if table_swapped[i]:
+                    fresh = JaxControllerTables.from_table(
+                        ctl.table, capacity=self.capacity)
+                    self.tables = fleet_swap_tables(self.tables, i, fresh)
+                    self._table_versions[i] = cam.table_version
+                if retargeted[i]:
+                    self.params = _set_lane(
+                        self.params, i, ControllerParams.from_controller(ctl))
+                    self._qos_versions[i] = cam.qos_version
+        for i, cam in enumerate(self._cams):
+            if not (table_swapped[i] or retargeted[i]):
+                continue
+            ctl = cam.controller
+            # mirror the host contracts: both paths re-seed the operating
+            # point; only a RETARGET resets the integral (``set_target``)
+            # -- a bare table swap carries it (``swap_table``: the network
+            # didn't reset with the tables)
+            integral = (self.state.integral.at[i].set(ctl.integral)
+                        if retargeted[i] else self.state.integral)
+            self.state = ControllerState(
+                integral=integral,
+                current_idx=self.state.current_idx.at[i].set(ctl._current),
+                feasible=self.state.feasible,
+                last_error=self.state.last_error)
+
+    # -- the fleet tick ------------------------------------------------------
+    def decide(self, feedback) -> dict[str, ControlDecision]:
+        """One control tick for the whole fleet.
+
+        ``feedback`` maps camera_id -> observed p95 latency (seconds), or
+        None for cameras with no samples yet.  None lanes are fed their own
+        latency target (zero error -> in-band hold, state untouched), so a
+        single compiled dispatch still covers every camera.  Returns one
+        host-shaped ``ControlDecision`` per camera.
+        """
+        self.sync()
+        n = len(self._cams)
+        lat = np.empty(n, np.float32)
+        fed = np.zeros(n, bool)
+        for i, (cid, cam) in enumerate(zip(self.cam_ids, self._cams)):
+            f = feedback.get(cid)
+            fed[i] = f is not None
+            lat[i] = (f if f is not None
+                      else cam.controller.config.latency_target)
+        new_state, aux = self._step(self.state, jnp.asarray(lat),
+                                    self.tables, self.params)
+        self.state = new_state
+        a = jax.device_get(aux)
+        decisions: dict[str, ControlDecision] = {}
+        for i, (cid, cam) in enumerate(zip(self.cam_ids, self._cams)):
+            idx = int(a.idx[i])
+            tbl = cam.controller.table
+            decisions[cid] = ControlDecision(
+                feasible=bool(a.feasible[i]),
+                setting=tbl.setting_for(idx) if idx >= 0 else None,
+                setting_index=idx,
+                predicted_accuracy=float(a.accuracy[i]),
+                requested_size=float(a.requested_size[i]),
+                error=float(a.error[i]),
+                acted=bool(a.acted[i]))
+        if self.record_history:
+            self.history.append({
+                "lat": lat.tolist(), "fed": fed.tolist(),
+                "idx": np.asarray(a.idx).tolist(),
+                "acted": np.asarray(a.acted).tolist(),
+                "feasible": np.asarray(a.feasible).tolist(),
+                "table_versions": list(self._table_versions),
+            })
+        return decisions

@@ -1,0 +1,550 @@
+"""Declarative, seeded scenario DSL + trace-driven closed-loop harness.
+
+The paper's headline result -- tolerating up to 10x latency variation with a
+worst-case normalized-F1 drop of 4.2% (Section 6) -- and the broker-
+benchmarking literature's lesson that edge-messaging claims only hold up
+under systematic multi-scenario stress both want the same thing: scripted,
+bit-reproducible experiments over the REAL system, not ad-hoc loops.  This
+module provides that:
+
+  * ``ScenarioSpec`` declares a fleet of synthetic cameras, shared QoS
+    bounds, and a timeline of ``events`` over a VIRTUAL clock (stream
+    seconds: frame N of a 5 fps camera carries timestamp N/5).
+  * Events script ``WirelessChannel`` dynamics -- interference spikes,
+    congestion ramps (phantom transmitters joining the collision domain),
+    per-camera distance drift, peer churn -- and component faults: camera
+    crash -> recover, edge-broker crash -> recover, live QoS renegotiation
+    with optional online re-characterization.
+  * ``run_scenario`` drives a full v2 ``Session`` closed loop (optionally on
+    the fleet control plane: all cameras per poll in ONE compiled vmapped
+    controller step) and emits a per-frame trace: latency breakdown total,
+    wire bytes, knob index, table-predicted normalized F1, infeasibility.
+
+Everything is deterministic given the spec's seed, which makes scenario
+traces committable golden files: ``ScenarioResult.compact()`` is a stable
+JSON shape asserted bit-for-bit in CI (tests/golden/).
+
+Example -- the paper-claim scenario (10x latency inflation absorbed):
+
+    spec = ScenarioSpec(
+        name="latency-10x",
+        cameras=tuple(CameraSpec(f"cam{i}") for i in range(5)),
+        frames=60, latency=0.100, accuracy=0.95,
+        events=(InterferenceSpike(start=4.0, end=9.0, factor=10.0),),
+    )
+    result = run_scenario(spec)
+    drop = 1 - result.mean_accuracy(4.0, 9.0) / result.mean_accuracy(2.0, 4.0)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.api import RPCTimeout
+from repro.core.broker import MezSystem
+from repro.core.channel import calibrated_channel
+from repro.core.characterization import (CharacterizationTable, characterize,
+                                         fit_latency_regression)
+from repro.core.session import MezClient
+from repro.data.camera import CameraConfig, SyntheticCamera
+
+__all__ = [
+    "CameraSpec", "ScenarioSpec", "ScenarioResult", "TraceRow",
+    "InterferenceSpike", "CongestionRamp", "DistanceDrift",
+    "PeerJoin", "PeerLeave", "CameraCrash", "CameraRecover",
+    "EdgeCrash", "EdgeRecover", "QosChange", "TableRefresh",
+    "run_scenario",
+]
+
+
+# =============================================================================
+# The DSL: camera fleet + timeline events
+# =============================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class CameraSpec:
+    """One synthetic IoT camera node of the scenario fleet."""
+    camera_id: str
+    dynamics: str = "complex"          # simple | medium | complex
+    distance_m: float = 6.0
+    fps: float = 5.0
+    seed: int = 7
+
+
+# -- continuous (windowed) channel dynamics -----------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class InterferenceSpike:
+    """External interference multiplying channel latency by ``factor`` over
+    [start, end) of virtual time (paper Section 2.2's microwave-oven
+    experiment, scripted).  Overlapping spikes compound multiplicatively."""
+    start: float
+    end: float
+    factor: float
+
+    def factor_at(self, t: float) -> float:
+        return self.factor if self.start <= t < self.end else 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CongestionRamp:
+    """``peers`` phantom transmitters join the collision domain linearly
+    over [start, end) and stay until ``leave_at`` (None = forever): CSMA/CA
+    contention grows super-linearly with active transmitters (Table 1)."""
+    start: float
+    end: float
+    peers: int
+    leave_at: float | None = None
+
+    def peers_at(self, t: float) -> int:
+        if t < self.start:
+            return 0
+        if self.leave_at is not None and t >= self.leave_at:
+            return 0
+        if t >= self.end:
+            return self.peers
+        span = max(self.end - self.start, 1e-9)
+        return int(self.peers * (t - self.start) / span)
+
+
+@dataclasses.dataclass(frozen=True)
+class DistanceDrift:
+    """One camera drifts linearly from its spec distance to ``to_m`` over
+    [start, end) (Table 2's 6 m -> 12 m effect, scripted as motion)."""
+    camera_id: str
+    start: float
+    end: float
+    to_m: float
+
+    def distance_at(self, t: float, from_m: float) -> float:
+        if t < self.start:
+            return from_m
+        if t >= self.end:
+            return self.to_m
+        frac = (t - self.start) / max(self.end - self.start, 1e-9)
+        return from_m + (self.to_m - from_m) * frac
+
+
+# -- one-shot events ----------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PeerJoin:
+    """A foreign transmitter (not one of our cameras) joins the channel."""
+    at: float
+    node_id: str
+
+
+@dataclasses.dataclass(frozen=True)
+class PeerLeave:
+    at: float
+    node_id: str
+
+
+@dataclasses.dataclass(frozen=True)
+class CameraCrash:
+    """IoT camera node fault (paper Section 4.4): RPCs time out, the
+    subscription marks the camera failed and keeps streaming the rest."""
+    at: float
+    camera_id: str
+
+
+@dataclasses.dataclass(frozen=True)
+class CameraRecover:
+    """Node reboot + re-attach: the cursor resumes where it stopped and
+    frames published during the outage are delivered late, not lost."""
+    at: float
+    camera_id: str
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeCrash:
+    """Edge-broker fault: every poll times out until recovery."""
+    at: float
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeRecover:
+    at: float
+
+
+@dataclasses.dataclass(frozen=True)
+class QosChange:
+    """Live renegotiation mid-scenario (``Subscription.update_qos``), with
+    optional online re-characterization of every camera's knob tables."""
+    at: float
+    latency: float | None = None
+    accuracy: float | None = None
+    recharacterize: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class TableRefresh:
+    """Online re-sweep of ONE camera's knob tables from its own recent
+    frames (``CamBroker.recharacterize``); a fleet-backed subscription
+    hot-swaps the refreshed lane into its compiled step, no recompile."""
+    at: float
+    camera_id: str
+
+
+_CONTINUOUS = (InterferenceSpike, CongestionRamp, DistanceDrift)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """A complete, seeded scenario: fleet + QoS + timeline.
+
+    ``frames`` is per camera; the virtual clock runs in stream seconds
+    (camera fps maps frames to timestamps).  ``fleet`` selects the fleet
+    control plane (one compiled vmapped controller step per poll).
+    """
+    name: str
+    cameras: tuple[CameraSpec, ...] = (CameraSpec("cam0"),)
+    frames: int = 40
+    seed: int = 3
+    workload: str | None = "jaad"
+    latency: float = 0.100             # seconds, p95 upper bound
+    accuracy: float = 0.95             # normalized F1 lower bound
+    controlled: bool = True
+    fleet: bool = False
+    credit_limit: int = 2
+    feedback_window: int = 8
+    max_frames_per_poll: int | None = None   # default: n_cameras * credit
+    clip_len: int = 12                 # characterization clip length
+    min_accuracy: float = 0.90         # characterization keep floor
+    record_decisions: bool = False     # keep fleet decision history (parity)
+    events: tuple = ()
+
+
+# =============================================================================
+# Trace rows and results
+# =============================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceRow:
+    """One delivered (or knob5-dropped) frame of the scenario trace."""
+    camera_id: str
+    timestamp: float
+    latency_s: float | None        # None for dropped frames
+    wire_bytes: int
+    knob_index: int
+    accuracy: float | None         # table-predicted normalized F1 (1.0 = raw)
+    infeasible: bool
+    dropped: bool
+
+    def as_list(self) -> list:
+        return [self.camera_id, self.timestamp, self.latency_s,
+                self.wire_bytes, self.knob_index, self.accuracy,
+                int(self.infeasible), int(self.dropped)]
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    """Per-frame traces + the event log of one scenario run."""
+    name: str
+    rows: list[TraceRow]
+    events_log: list[dict]
+    fleet_history: list[dict]
+    camera_ids: tuple[str, ...]
+    # compiled-variant count of the fleet step at scenario end (None for
+    # host-path runs): 1 proves every retarget/table hot-swap stayed inside
+    # one compiled dispatch
+    fleet_cache_size: int | None = None
+
+    # -- trace queries -------------------------------------------------------
+    def select(self, t0: float | None = None, t1: float | None = None, *,
+               camera_id: str | None = None,
+               delivered_only: bool = True) -> list[TraceRow]:
+        out = []
+        for r in self.rows:
+            if t0 is not None and r.timestamp < t0:
+                continue
+            if t1 is not None and r.timestamp >= t1:
+                continue
+            if camera_id is not None and r.camera_id != camera_id:
+                continue
+            if delivered_only and r.dropped:
+                continue
+            out.append(r)
+        return out
+
+    def mean_accuracy(self, t0: float | None = None,
+                      t1: float | None = None, *,
+                      camera_id: str | None = None) -> float:
+        accs = [r.accuracy for r in self.select(t0, t1, camera_id=camera_id)
+                if r.accuracy is not None]
+        return float(np.mean(accs)) if accs else float("nan")
+
+    def min_accuracy(self, t0: float | None = None,
+                     t1: float | None = None) -> float:
+        accs = [r.accuracy for r in self.select(t0, t1)
+                if r.accuracy is not None]
+        return float(min(accs)) if accs else float("nan")
+
+    def p95_latency_ms(self, t0: float | None = None,
+                       t1: float | None = None, *,
+                       camera_id: str | None = None) -> float:
+        lats = [r.latency_s for r in self.select(t0, t1, camera_id=camera_id)
+                if r.latency_s is not None]
+        return float(np.percentile(lats, 95) * 1e3) if lats else float("nan")
+
+    def summary(self) -> dict:
+        per_cam = {}
+        for cid in self.camera_ids:
+            rows = self.select(camera_id=cid)
+            per_cam[cid] = {
+                "delivered": len(rows),
+                "dropped": sum(1 for r in self.rows
+                               if r.camera_id == cid and r.dropped),
+                "p95_ms": self.p95_latency_ms(camera_id=cid),
+                "mean_accuracy": self.mean_accuracy(camera_id=cid),
+                "infeasible": sum(1 for r in rows if r.infeasible),
+            }
+        return {
+            "name": self.name,
+            "frames": len(self.rows),
+            "p95_ms": self.p95_latency_ms(),
+            "mean_accuracy": self.mean_accuracy(),
+            "min_accuracy": self.min_accuracy(),
+            "events": len(self.events_log),
+            "per_camera": per_cam,
+        }
+
+    # -- golden-trace serialization ------------------------------------------
+    def compact(self) -> dict:
+        """Stable JSON shape for golden-trace regression tests: full-precision
+        floats (``repr`` round-trip), schema-versioned."""
+        return {
+            "schema": 1,
+            "name": self.name,
+            "cameras": list(self.camera_ids),
+            "columns": ["camera_id", "timestamp", "latency_s", "wire_bytes",
+                        "knob_index", "accuracy", "infeasible", "dropped"],
+            "rows": [r.as_list() for r in self.rows],
+            "events": self.events_log,
+        }
+
+    def to_json(self, *, indent: int | None = None) -> str:
+        return json.dumps(self.compact(), indent=indent)
+
+
+# =============================================================================
+# The engine
+# =============================================================================
+
+
+class _Engine:
+    """Applies the spec's timeline to the live system at each clock tick."""
+
+    def __init__(self, spec: ScenarioSpec, system: MezSystem, session,
+                 subscription, events_log: list[dict]):
+        self.spec = spec
+        self.system = system
+        self.session = session
+        self.sub = subscription
+        self.log = events_log
+        self.continuous = [e for e in spec.events
+                           if isinstance(e, _CONTINUOUS)]
+        self.oneshot = sorted(
+            (e for e in spec.events if not isinstance(e, _CONTINUOUS)),
+            key=lambda e: e.at)
+        self._fired = 0
+        self._base_interference = system.channel.config.interference
+        self._base_distance = {c.camera_id: c.distance_m
+                               for c in spec.cameras}
+        self._ghosts: list[str] = []
+
+    def next_oneshot_after(self, t: float) -> float | None:
+        for e in self.oneshot[self._fired:]:
+            if e.at > t:
+                return e.at
+        return None
+
+    def tick(self, t: float) -> None:
+        # one-shots due at or before t, each exactly once, in timeline order
+        while self._fired < len(self.oneshot) and \
+                self.oneshot[self._fired].at <= t:
+            ev = self.oneshot[self._fired]
+            self._fired += 1
+            self._apply_oneshot(ev, t)
+        # continuous dynamics re-evaluated every tick
+        ch = self.system.channel
+        interference = self._base_interference
+        ghosts_wanted = 0
+        for e in self.continuous:
+            if isinstance(e, InterferenceSpike):
+                interference *= e.factor_at(t)
+            elif isinstance(e, CongestionRamp):
+                ghosts_wanted += e.peers_at(t)
+            elif isinstance(e, DistanceDrift):
+                cam = self.system.cams.get(e.camera_id)
+                if cam is not None:
+                    cam.distance_m = e.distance_at(
+                        t, self._base_distance.get(e.camera_id, 6.0))
+        if interference != ch.config.interference:
+            ch.set_interference(interference)
+        while len(self._ghosts) < ghosts_wanted:
+            gid = f"__ghost{len(self._ghosts)}"
+            self._ghosts.append(gid)
+            ch.activate(gid)
+        while len(self._ghosts) > ghosts_wanted:
+            ch.deactivate(self._ghosts.pop())
+
+    def _apply_oneshot(self, ev, t: float) -> None:
+        entry = {"t": t, "at": ev.at, "kind": type(ev).__name__}
+        if isinstance(ev, PeerJoin):
+            self.system.channel.activate(ev.node_id)
+        elif isinstance(ev, PeerLeave):
+            self.system.channel.deactivate(ev.node_id)
+        elif isinstance(ev, CameraCrash):
+            self.system.cams[ev.camera_id].crash()
+            entry["camera_id"] = ev.camera_id
+        elif isinstance(ev, CameraRecover):
+            self.system.cams[ev.camera_id].recover()
+            status = self.system.edge.reattach_camera(
+                self.sub.subscription_id, ev.camera_id)
+            entry["camera_id"] = ev.camera_id
+            entry["reattach"] = status.value
+        elif isinstance(ev, EdgeCrash):
+            self.system.edge.crash()
+        elif isinstance(ev, EdgeRecover):
+            self.system.edge.recover()
+        elif isinstance(ev, QosChange):
+            q = self.sub.update_qos(latency=ev.latency, accuracy=ev.accuracy,
+                                    recharacterize=ev.recharacterize)
+            entry["status"] = q.status.value
+            entry["recharacterized"] = list(q.recharacterized)
+        elif isinstance(ev, TableRefresh):
+            cam = self.system.cams[ev.camera_id]
+            entry["camera_id"] = ev.camera_id
+            entry["refreshed"] = cam.recharacterize()
+        else:
+            raise TypeError(f"unknown scenario event {type(ev).__name__}")
+        self.log.append(entry)
+
+
+def run_scenario(
+    spec: ScenarioSpec, *,
+    table_provider: Callable[[str], CharacterizationTable] | None = None,
+    tables: Mapping[str, CharacterizationTable] | None = None,
+) -> ScenarioResult:
+    """Build the fleet, run the scripted closed loop, return the trace.
+
+    ``table_provider`` maps a dynamics name to a ``CharacterizationTable``
+    (tests inject synthetic or cached tables; default runs the batched
+    ``characterize`` sweep once per distinct dynamics).  ``tables`` is a
+    pre-resolved mapping taking precedence over the provider.
+    """
+    resolved: dict[str, CharacterizationTable] = dict(tables or {})
+
+    def table_for(dynamics: str, seed: int) -> CharacterizationTable:
+        if dynamics not in resolved:
+            if table_provider is not None:
+                resolved[dynamics] = table_provider(dynamics)
+            else:
+                resolved[dynamics] = characterize(
+                    lambda: SyntheticCamera(CameraConfig(
+                        dynamics=dynamics, seed=seed)),
+                    clip_len=spec.clip_len,
+                    min_accuracy=spec.min_accuracy)
+        return resolved[dynamics]
+
+    ch = calibrated_channel(seed=spec.seed, workload=spec.workload)
+    system = MezSystem(ch)
+    n_cams = len(spec.cameras)
+    fps = max(c.fps for c in spec.cameras)
+    for cs in spec.cameras:
+        cam = system.add_camera(cs.camera_id, distance_m=cs.distance_m,
+                                fps=cs.fps)
+        src = SyntheticCamera(CameraConfig(
+            camera_id=cs.camera_id, dynamics=cs.dynamics, seed=cs.seed,
+            fps=cs.fps))
+        cam.background = src.background
+        tbl = table_for(cs.dynamics, cs.seed)
+        sizes = np.linspace(tbl.sizes_sorted[0], tbl.sizes_sorted[-1], 16)
+        reg = fit_latency_regression(
+            sizes, ch.regression_points(sizes, n=n_cams))
+        cam.set_target(spec.latency, spec.accuracy, tbl, reg)
+        for ts, frame, _ in src.stream(spec.frames):
+            cam.publish(ts, frame)
+
+    client = MezClient(system)
+    events_log: list[dict] = []
+    rows: list[TraceRow] = []
+    max_frames = spec.max_frames_per_poll or n_cams * spec.credit_limit
+    sess = client.open_session(f"scenario-{spec.name}")
+    try:
+        sub = sess.subscribe([c.camera_id for c in spec.cameras],
+                             0.0, spec.frames / fps,
+                             latency=spec.latency, accuracy=spec.accuracy,
+                             controlled=spec.controlled, fleet=spec.fleet,
+                             feedback_window=spec.feedback_window,
+                             credit_limit=spec.credit_limit)
+        fleet = system.edge.subscription_fleet(sub.subscription_id)
+        if fleet is not None and spec.record_decisions:
+            fleet.record_history = True
+        engine = _Engine(spec, system, sess, sub, events_log)
+        clock = 0.0
+        while True:
+            engine.tick(clock)
+            try:
+                batch = sub.poll(max_frames=max_frames)
+            except RPCTimeout as e:
+                # edge down / all cameras unreachable: skip virtual time
+                # forward to the next scripted event (recovery) -- or end
+                # the scenario when nothing is scheduled to change
+                events_log.append({"t": clock, "kind": "RPCTimeout",
+                                   "detail": str(e)})
+                nxt = engine.next_oneshot_after(clock)
+                if nxt is None:
+                    break
+                clock = nxt
+                continue
+            if not batch:
+                break
+            for d in batch.frames:
+                cam = system.cams.get(d.camera_id)
+                acc = None
+                if d.frame is not None:
+                    if d.knob_index >= 0 and cam is not None \
+                            and cam.controller is not None:
+                        acc = float(cam.controller.table.acc_by_setting[
+                            d.knob_index])
+                    else:
+                        acc = 1.0          # raw frame = full fidelity
+                rows.append(TraceRow(
+                    camera_id=d.camera_id,
+                    timestamp=float(d.timestamp),
+                    latency_s=(float(d.latency.total)
+                               if d.frame is not None else None),
+                    wire_bytes=int(d.wire_bytes),
+                    knob_index=int(d.knob_index),
+                    accuracy=acc,
+                    infeasible=bool(d.infeasible),
+                    dropped=d.frame is None,
+                ))
+                clock = max(clock, float(d.timestamp))
+            for ev in sub.events():
+                events_log.append({"t": clock, "kind": ev.kind.value,
+                                   "camera_id": ev.camera_id,
+                                   "detail": ev.detail})
+        fleet = system.edge.subscription_fleet(sub.subscription_id)
+        history = list(fleet.history) if fleet is not None else []
+        cache_size = fleet.cache_size() if fleet is not None else None
+    finally:
+        try:
+            sess.close()
+        except RPCTimeout:
+            pass              # edge left crashed at scenario end
+    return ScenarioResult(
+        name=spec.name, rows=rows, events_log=events_log,
+        fleet_history=history,
+        camera_ids=tuple(c.camera_id for c in spec.cameras),
+        fleet_cache_size=cache_size)

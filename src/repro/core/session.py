@@ -63,16 +63,25 @@ class Session:
     def subscribe(self, camera_ids: str | Sequence[str], t_start: float,
                   t_stop: float, *, latency: float, accuracy: float,
                   controlled: bool = True, feedback_window: int = 8,
-                  credit_limit: int = 2) -> "Subscription":
+                  credit_limit: int = 2, fleet: bool = False
+                  ) -> "Subscription":
         """Subscribe one or many cameras under shared QoS bounds; frames from
-        all of them arrive timestamp-merged through one ``poll()``."""
+        all of them arrive timestamp-merged through one ``poll()``.
+
+        ``fleet=True`` runs the subscription's per-camera PI controllers as
+        ONE compiled vmapped step per poll (the fleet control plane):
+        per-poll control cost is ~flat in camera count, and per-camera QoS
+        retargets / table refreshes hot-swap into the compiled step without
+        recompiling.
+        """
         if isinstance(camera_ids, str):
             camera_ids = [camera_ids]
         specs = tuple(SubscribeSpec(self.application_id, cid, t_start, t_stop,
                                     latency, accuracy) for cid in camera_ids)
         sub_id = self._edge.create_subscription(
             self.session_id, specs, controlled=controlled,
-            feedback_window=feedback_window, credit_limit=credit_limit)
+            feedback_window=feedback_window, credit_limit=credit_limit,
+            fleet=fleet)
         return Subscription(self._edge, sub_id, tuple(camera_ids))
 
     def events(self) -> list[SessionEvent]:

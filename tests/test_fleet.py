@@ -1,0 +1,259 @@
+"""Fleet control plane: vmapped fleet_controller_step == per-camera host
+``LatencyController.update`` for every camera, with ONE compiled variant
+across subset table hot-swaps -- the issue's 64-camera acceptance bar."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import synthetic_controller_table as synthetic_table
+from repro.core.channel import calibrated_channel
+from repro.core.characterization import (LatencyRegression,
+                                         fit_latency_regression)
+from repro.core.controller import (ControllerConfig, JaxControllerTables,
+                                   LatencyController, FleetController,
+                                   fleet_controller_init,
+                                   fleet_controller_step, fleet_swap_tables,
+                                   stack_params, stack_tables,
+                                   ControllerParams)
+from repro.core.scenario import (CameraSpec, InterferenceSpike, ScenarioSpec,
+                                 TableRefresh, run_scenario)
+
+
+@dataclasses.dataclass
+class _Cam:
+    """Minimal broker stand-in carrying what FleetController reads."""
+    camera_id: str
+    controller: LatencyController
+    table_version: int = 0
+    qos_version: int = 0
+
+
+def build_fleet(n: int, *, seed: int = 0, capacity: int = 128):
+    """n cameras with varied tables and varied (feasible) targets, plus
+    shadow host controllers stepped in lockstep for parity checks."""
+    rng = np.random.default_rng(seed)
+    reg = LatencyRegression(slope=1.2e-6, intercept=0.008)
+    cams, hosts = [], []
+    for i in range(n):
+        tbl = synthetic_table(12 + i % 29, smin=2e3 + 37.0 * i,
+                              smax=9e4 - 101.0 * i)
+        cfg = ControllerConfig(
+            latency_target=0.040 + 0.001 * (i % 17),
+            accuracy_target=0.90 + 0.002 * (i % 4))
+        cams.append(_Cam(f"cam{i:03d}", LatencyController(cfg, tbl, reg)))
+        hosts.append(LatencyController(cfg, tbl, reg))
+    fleet = FleetController(cams, capacity=capacity)
+    return cams, hosts, fleet, rng
+
+
+class TestFleetParity:
+    def test_64_camera_parity_single_compile_and_subset_swap(self):
+        """The acceptance bar: 64 cameras, one compiled fleet step
+        (cache size 1), host/jit decision parity on EVERY camera at EVERY
+        step -- including across a mid-run hot-swap of a camera SUBSET's
+        tables and a mid-run retarget of another subset."""
+        n = 64
+        cams, hosts, fleet, rng = build_fleet(n)
+        swap_at, retarget_at = 20, 32
+        for step in range(48):
+            if step == swap_at:
+                # re-characterization lands on 5 cameras at once
+                for i in (3, 17, 31, 44, 63):
+                    fresh = synthetic_table(20 + i % 7, smin=3e3 + 11.0 * i,
+                                            smax=7e4)
+                    cams[i].controller.swap_table(fresh)
+                    cams[i].table_version += 1
+                    hosts[i].swap_table(fresh)
+            if step == retarget_at:
+                # live QoS renegotiation on another subset
+                for i in (0, 8, 50):
+                    cams[i].controller.set_target(0.075, 0.91)
+                    cams[i].qos_version += 1
+                    hosts[i].set_target(0.075, 0.91)
+            fb = {c.camera_id: float(rng.uniform(0.005, 0.5)) for c in cams}
+            decisions = fleet.decide(fb)
+            for i, cam in enumerate(cams):
+                dh = hosts[i].update(fb[cam.camera_id])
+                df = decisions[cam.camera_id]
+                assert df.setting_index == dh.setting_index, (step, i)
+                assert df.acted == dh.acted, (step, i)
+                assert df.feasible == dh.feasible, (step, i)
+        assert fleet.cache_size() == 1
+
+    def test_lanes_without_feedback_hold(self):
+        cams, hosts, fleet, rng = build_fleet(8)
+        before = [c.controller._current for c in cams]
+        decisions = fleet.decide({})           # nobody has samples yet
+        for i, cam in enumerate(cams):
+            d = decisions[cam.camera_id]
+            assert not d.acted
+            assert d.setting_index == before[i]
+        # a later real tick still acts
+        decisions = fleet.decide(
+            {c.camera_id: 0.5 for c in cams})
+        assert all(d.acted for d in decisions.values())
+
+    def test_integral_carries_across_table_swap_but_resets_on_retarget(self):
+        cams, hosts, fleet, rng = build_fleet(4)
+        for _ in range(6):
+            fb = {c.camera_id: float(rng.uniform(0.1, 0.4)) for c in cams}
+            fleet.decide(fb)
+        integ = np.asarray(fleet.state.integral)
+        assert (integ != 0).any()
+        cams[1].controller.swap_table(synthetic_table(16))
+        cams[1].table_version += 1
+        fleet.sync()
+        assert float(fleet.state.integral[1]) == pytest.approx(
+            float(integ[1]))                     # swap: integral carries
+        cams[2].controller.set_target(0.08, 0.9)
+        cams[2].qos_version += 1
+        fleet.sync()
+        assert float(fleet.state.integral[2]) == 0.0   # retarget: reset
+
+
+class TestFleetPrimitives:
+    def test_stack_tables_requires_shared_capacity(self):
+        a = JaxControllerTables.from_table(synthetic_table(8), capacity=32)
+        b = JaxControllerTables.from_table(synthetic_table(8), capacity=64)
+        with pytest.raises(ValueError, match="capacity"):
+            stack_tables([a, b])
+
+    def test_fleet_swap_capacity_mismatch_rejected(self):
+        rows = [JaxControllerTables.from_table(synthetic_table(8),
+                                               capacity=32)
+                for _ in range(3)]
+        stack = stack_tables(rows)
+        fresh = JaxControllerTables.from_table(synthetic_table(8),
+                                               capacity=64)
+        with pytest.raises(ValueError, match="capacity"):
+            fleet_swap_tables(stack, 1, fresh)
+
+    def test_fleet_swap_subset_only_touches_named_lanes(self):
+        rows = [JaxControllerTables.from_table(synthetic_table(8 + i),
+                                               capacity=32)
+                for i in range(4)]
+        stack = stack_tables(rows)
+        fresh = JaxControllerTables.from_table(synthetic_table(20),
+                                               capacity=32)
+        out = fleet_swap_tables(stack, 2, fresh)
+        np.testing.assert_array_equal(np.asarray(out.sizes_sorted[2]),
+                                      np.asarray(fresh.sizes_sorted))
+        for lane in (0, 1, 3):
+            np.testing.assert_array_equal(
+                np.asarray(out.sizes_sorted[lane]),
+                np.asarray(stack.sizes_sorted[lane]))
+        assert int(out.n_valid[2]) == 20
+
+    def test_capacity_growth_rebuilds_deliberately(self):
+        """TWO cameras outgrow the shared capacity in the same sync (the
+        rebuild must size to the fleet-wide max, not the first offender),
+        after the lanes have accumulated LIVE PI state -- which must carry
+        across the rebuild (the host fields are stale in fleet mode)."""
+        cams, hosts, fleet, rng = build_fleet(4, capacity=48)
+        # accumulate live integral / operating-point state first
+        for _ in range(6):
+            fb = {c.camera_id: float(rng.uniform(0.1, 0.4)) for c in cams}
+            decisions = fleet.decide(fb)
+            for i, cam in enumerate(cams):
+                dh = hosts[i].update(fb[cam.camera_id])
+                assert decisions[cam.camera_id].setting_index == \
+                    dh.setting_index
+        for i, n_rows in ((0, 200), (2, 300)):
+            big = synthetic_table(n_rows)
+            cams[i].controller.swap_table(big)
+            cams[i].table_version += 1
+            hosts[i].swap_table(big)
+        for step in range(4):
+            fb = {c.camera_id: float(rng.uniform(0.1, 0.4)) for c in cams}
+            decisions = fleet.decide(fb)
+            assert fleet.capacity >= 300
+            for i, cam in enumerate(cams):
+                dh = hosts[i].update(fb[cam.camera_id])
+                assert decisions[cam.camera_id].setting_index == \
+                    dh.setting_index, (step, i)
+
+    def test_vmapped_step_matches_manual_loop(self):
+        """fleet_controller_step == N independent single-camera cores."""
+        rows = [JaxControllerTables.from_table(synthetic_table(10 + i),
+                                               capacity=64)
+                for i in range(6)]
+        stack = stack_tables(rows)
+        reg = LatencyRegression(slope=1e-6, intercept=0.005)
+        params = stack_params([
+            ControllerParams.from_scalars(
+                latency_target=0.05 + 0.01 * i, accuracy_target=0.9,
+                slope=reg.slope, intercept=reg.intercept)
+            for i in range(6)])
+        states = fleet_controller_init(stack)
+        lats = jnp.asarray(np.linspace(0.02, 0.4, 6), jnp.float32)
+        new_states, aux = fleet_controller_step(states, lats, stack, params)
+        assert aux.idx.shape == (6,)
+        # every lane's chosen index is a LIVE row of its own table
+        for i in range(6):
+            assert 0 <= int(aux.idx[i]) < int(stack.n_valid[i])
+
+
+class TestFleetScenarioParity:
+    """The satellite: fleet decisions equal the per-camera host controller
+    across a WHOLE scenario, and the compiled step survives a mid-scenario
+    per-camera table swap with cache size 1."""
+
+    def _spec(self, **kw):
+        base = dict(
+            name="fleet-parity",
+            cameras=tuple(CameraSpec(f"cam{i}", dynamics="medium")
+                          for i in range(3)),
+            frames=30, seed=9, workload="jaad",
+            latency=0.100, accuracy=0.92, fleet=True,
+            record_decisions=True,
+            events=(InterferenceSpike(start=2.0, end=4.0, factor=7.0),),
+        )
+        base.update(kw)
+        return ScenarioSpec(**base)
+
+    def test_fleet_trace_identical_to_host_trace(self):
+        tables = {"medium": synthetic_table()}
+        flt = run_scenario(self._spec(), tables=tables)
+        host = run_scenario(self._spec(fleet=False, record_decisions=False),
+                            tables=tables)
+        assert flt.to_json() == host.to_json()
+        assert flt.fleet_cache_size == 1
+
+    def test_history_replays_against_host_controllers(self):
+        """Replay the recorded fleet decision history through fresh host
+        ``LatencyController``s: every lane's index matches at every step."""
+        spec = self._spec()
+        tbl = synthetic_table()
+        res = run_scenario(spec, tables={"medium": tbl})
+        assert res.fleet_history
+        # reconstruct the scenario's controllers exactly (same channel
+        # regression fit, same config defaults as CamBroker.set_target)
+        ch = calibrated_channel(seed=spec.seed, workload=spec.workload)
+        sizes = np.linspace(tbl.sizes_sorted[0], tbl.sizes_sorted[-1], 16)
+        reg = fit_latency_regression(
+            sizes, ch.regression_points(sizes, n=len(spec.cameras)))
+        hosts = [LatencyController(
+            ControllerConfig(spec.latency, spec.accuracy), tbl, reg)
+            for _ in spec.cameras]
+        for step, row in enumerate(res.fleet_history):
+            for i, host in enumerate(hosts):
+                if row["fed"][i]:
+                    dh = host.update(row["lat"][i])
+                    assert row["idx"][i] == dh.setting_index, (step, i)
+                else:
+                    assert row["idx"][i] == host._current, (step, i)
+
+    def test_mid_scenario_table_refresh_keeps_single_compile(self):
+        """Online re-characterization of ONE camera mid-scenario hot-swaps
+        its lane; the fleet step never recompiles."""
+        spec = self._spec(events=(TableRefresh(at=3.0, camera_id="cam1"),),
+                          frames=40)
+        res = run_scenario(spec, tables={"medium": synthetic_table()})
+        refreshed = [e for e in res.events_log
+                     if e.get("kind") == "TableRefresh"]
+        assert refreshed and refreshed[0]["refreshed"] is True
+        assert res.fleet_cache_size == 1
+        assert len(res.rows) == 3 * 40

@@ -69,7 +69,8 @@ class TestChannelProperties:
 
 
 class TestControllerProperties:
-    def _table(self, sizes, accs):
+    @staticmethod
+    def _table(sizes, accs):
         order = np.argsort(sizes)
         sizes = np.asarray(sizes, float)[order]
         accs = np.asarray(accs, float)[order]
@@ -114,6 +115,90 @@ class TestControllerProperties:
         acc, idx = tbl.query_size(budget)
         if idx >= 0:
             assert tbl.size_by_setting[idx] <= budget + 1e-6
+
+
+class TestControlLawProperties:
+    """Algorithm 1 invariants under arbitrary tables and latency series."""
+
+    TARGET = 0.050
+
+    def _controller(self, pairs, floor=0.9, **cfg_kw):
+        sizes = [p[0] for p in pairs]
+        accs = [p[1] for p in pairs]
+        tbl = TestControllerProperties._table(sizes, accs)
+        from repro.core.characterization import LatencyRegression
+        reg = LatencyRegression(slope=1e-6, intercept=0.005)
+        cfg = ControllerConfig(self.TARGET, floor, **cfg_kw)
+        return LatencyController(cfg, tbl, reg), tbl
+
+    @given(st.lists(st.tuples(st.floats(1e3, 1e5), st.floats(0.5, 1.0)),
+                    min_size=3, max_size=20),
+           st.lists(st.floats(0.011, 5.0), min_size=1, max_size=15))
+    @settings(**SETTINGS)
+    def test_positive_error_never_increases_requested_size(self, pairs,
+                                                           errors):
+        """Outside the error band, a positive latency error can only pull
+        the requested size DOWN from the nominal operating point (K1, K2 <
+        0 and the integral stays positive under a positive-error history);
+        the only way up is the table's own size floor."""
+        c, tbl = self._controller(pairs)
+        floor_size = tbl.sizes_sorted[0]
+        bound = max(c._nominal, floor_size)
+        for e in errors:
+            d = c.update(self.TARGET + e)
+            assert d.acted
+            assert d.requested_size <= bound + 1e-9
+
+    @given(st.lists(st.tuples(st.floats(1e3, 1e5), st.floats(0.5, 1.0)),
+                    min_size=3, max_size=20),
+           st.floats(0.011, 5.0), st.floats(0.011, 5.0))
+    @settings(**SETTINGS)
+    def test_requested_size_monotone_in_error(self, pairs, e1, e2):
+        """From identical state, a larger positive error never requests a
+        larger size (fresh controllers; integral = clipped error)."""
+        lo, hi = min(e1, e2), max(e1, e2)
+        c_lo, _ = self._controller(pairs)
+        c_hi, _ = self._controller(pairs)
+        d_lo = c_lo.update(self.TARGET + lo)
+        d_hi = c_hi.update(self.TARGET + hi)
+        assert d_hi.requested_size <= d_lo.requested_size + 1e-9
+
+    @given(st.lists(st.tuples(st.floats(1e3, 1e5), st.floats(0.5, 1.0)),
+                    min_size=3, max_size=20),
+           st.lists(st.floats(0.0, 10.0), min_size=1, max_size=40),
+           st.floats(0.05, 2.0))
+    @settings(**SETTINGS)
+    def test_integral_respects_clip(self, pairs, lats, clip):
+        """Anti-windup: whatever the latency series, the integral never
+        leaves [-integral_clip, integral_clip]."""
+        c, _ = self._controller(pairs, integral_clip=clip)
+        for lat in lats:
+            c.update(lat)
+            assert abs(c.integral) <= clip + 1e-12
+
+    @given(st.lists(st.tuples(st.floats(1e3, 1e5), st.floats(0.5, 1.0)),
+                    min_size=3, max_size=20),
+           st.lists(st.floats(0.0, 5.0), min_size=1, max_size=20),
+           st.floats(0.55, 0.999))
+    @settings(**SETTINGS)
+    def test_infeasible_iff_no_row_meets_floor(self, pairs, lats, floor):
+        """An acted decision reports INFEASIBLE exactly when no
+        characterized row within the requested size budget clears the
+        accuracy floor -- re-derived from the raw per-setting arrays, not
+        from the prefix-max tables the controller itself queries."""
+        c, tbl = self._controller(pairs, floor=floor)
+        for lat in lats:
+            d = c.update(lat)
+            if not d.acted:
+                continue
+            within = tbl.size_by_setting <= d.requested_size
+            feasible_model = bool(within.any()) and \
+                float(tbl.acc_by_setting[within].max()) >= floor
+            assert d.feasible == feasible_model
+            if not d.feasible and within.any():
+                # best-effort degradation: still serving the best setting
+                # available within the budget
+                assert d.setting is not None
 
 
 class TestQuantizeProperties:

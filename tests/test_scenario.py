@@ -1,0 +1,281 @@
+"""Scenario harness: the paper-claim suite (10x latency tolerance), golden
+-trace bit-reproducibility, and the scripted-event engine.
+
+Run ``PYTHONPATH=src:. python tests/test_scenario.py`` (from the repo
+root) to regenerate the golden trace after a DELIBERATE behavior change
+(commit the diff with the change that caused it)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from benchmarks.common import synthetic_controller_table as synthetic_table
+from repro.core.characterization import characterize
+from repro.core.scenario import (CameraCrash, CameraRecover, CameraSpec,
+                                 CongestionRamp, DistanceDrift, EdgeCrash,
+                                 EdgeRecover, InterferenceSpike, PeerJoin,
+                                 PeerLeave, QosChange, ScenarioSpec,
+                                 TableRefresh, run_scenario)
+from repro.data.camera import CameraConfig, SyntheticCamera
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+
+@pytest.fixture(scope="module")
+def complex_table():
+    """The paper's Section 5 operating point: complex dynamics, accuracy
+    floor 0.95 (characterized settings all clear the F1 floor)."""
+    return characterize(
+        lambda: SyntheticCamera(CameraConfig(dynamics="complex", seed=7)),
+        clip_len=12, min_accuracy=0.95)
+
+
+# =============================================================================
+# Paper-claim suite: 10x latency inflation absorbed, F1 drop <= 5%
+# =============================================================================
+
+
+def claim_spec(*, controlled: bool = True, fleet: bool = False
+               ) -> ScenarioSpec:
+    """PAPER.md Section 6: a latency-variation spike of 10x over the
+    5-camera testbed, scripted as an external-interference window."""
+    return ScenarioSpec(
+        name="paper-claim-10x",
+        cameras=tuple(CameraSpec(f"cam{i}", dynamics="complex")
+                      for i in range(5)),
+        frames=60, seed=3, workload="jaad",
+        latency=0.100, accuracy=0.95, min_accuracy=0.95,
+        controlled=controlled, fleet=fleet, record_decisions=fleet,
+        events=(InterferenceSpike(start=4.0, end=9.0, factor=10.0),),
+    )
+
+
+class TestPaperClaim:
+    def test_10x_latency_inflation_absorbed(self, complex_table):
+        tables = {"complex": complex_table}
+        ctl = run_scenario(claim_spec(), tables=tables)
+        unc = run_scenario(claim_spec(controlled=False), tables=tables)
+
+        # the script really inflates latency ~10x: the uncontrolled system's
+        # spike-window p95 blows up relative to its own settled baseline
+        unc_base = unc.p95_latency_ms(2.0, 4.0)
+        unc_spike = unc.p95_latency_ms(5.0, 9.0)
+        assert unc_spike / unc_base > 8.0
+
+        # Mez absorbs it: F1 drop within the paper's worst case (4.2%,
+        # asserted at the issue's 5% bound), every delivered frame holds
+        # the 0.95 floor, and the spike-window latency is a fraction of
+        # the uncontrolled system's
+        base_acc = ctl.mean_accuracy(2.0, 4.0)
+        spike_acc = ctl.mean_accuracy(4.5, 9.0)
+        assert base_acc > 0
+        assert 1.0 - spike_acc / base_acc <= 0.05
+        assert ctl.min_accuracy(4.5, 9.0) >= 0.95
+        assert ctl.p95_latency_ms(5.0, 9.0) <= 0.45 * unc_spike
+
+        # and recovers: post-spike p95 returns to the target band
+        assert ctl.p95_latency_ms(9.5, 12.0) < 130.0
+        # feasibility never breaks at the paper operating point
+        assert not any(r.infeasible for r in ctl.rows)
+
+    def test_claim_scenario_is_deterministic(self, complex_table):
+        a = run_scenario(claim_spec(), tables={"complex": complex_table})
+        b = run_scenario(claim_spec(), tables={"complex": complex_table})
+        assert a.to_json() == b.to_json()
+
+    def test_claim_scenario_fleet_plane_matches_host(self, complex_table):
+        """The SAME claim scenario on the fleet control plane (all cameras
+        per poll in one compiled vmapped step) reproduces the host-path
+        trace bit for bit, and compiles exactly once."""
+        tables = {"complex": complex_table}
+        host = run_scenario(claim_spec(), tables=tables)
+        flt = run_scenario(claim_spec(fleet=True), tables=tables)
+        assert flt.to_json() == host.to_json()
+        assert flt.fleet_cache_size == 1
+        assert len(flt.fleet_history) > 0
+
+
+# =============================================================================
+# Golden trace: fig11/table3-shaped run, bit-reproducible against a
+# committed JSON
+# =============================================================================
+
+
+def golden_spec() -> ScenarioSpec:
+    """A compact fig11/table3-shaped closed loop: complex dynamics, jaad
+    workload, an interference spike mid-stream.  Synthetic tables keep the
+    trace independent of the characterization sweep (and fast)."""
+    return ScenarioSpec(
+        name="golden-fig11-small",
+        cameras=tuple(CameraSpec(f"cam{i}", dynamics="complex")
+                      for i in range(3)),
+        frames=24, seed=11, workload="jaad",
+        latency=0.100, accuracy=0.92,
+        events=(InterferenceSpike(start=2.0, end=3.5, factor=6.0),
+                QosChange(at=4.0, latency=0.060)),
+    )
+
+
+def golden_tables() -> dict:
+    return {"complex": synthetic_table()}
+
+
+GOLDEN_PATH = os.path.join(GOLDEN_DIR, "scenario_fig11_small.json")
+
+
+class TestGoldenTrace:
+    def test_trace_matches_committed_golden(self):
+        result = run_scenario(golden_spec(), tables=golden_tables())
+        with open(GOLDEN_PATH) as fh:
+            golden = json.load(fh)
+        fresh = json.loads(result.to_json())
+        assert fresh["rows"] == golden["rows"], (
+            "scenario trace diverged from tests/golden/ -- if the change "
+            "is deliberate, regenerate via "
+            "`PYTHONPATH=src:. python tests/test_scenario.py`")
+        assert fresh == golden
+
+
+def regenerate_golden() -> str:
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    result = run_scenario(golden_spec(), tables=golden_tables())
+    with open(GOLDEN_PATH, "w") as fh:
+        fh.write(result.to_json(indent=1))
+        fh.write("\n")
+    return GOLDEN_PATH
+
+
+# =============================================================================
+# Scripted-event engine
+# =============================================================================
+
+
+def small_spec(**kw) -> ScenarioSpec:
+    base = dict(
+        name="engine",
+        cameras=tuple(CameraSpec(f"cam{i}", dynamics="medium")
+                      for i in range(2)),
+        frames=16, seed=5, workload="jaad",
+        latency=0.100, accuracy=0.92,
+    )
+    base.update(kw)
+    return ScenarioSpec(**base)
+
+
+TABLES = None
+
+
+def tables():
+    global TABLES
+    if TABLES is None:
+        TABLES = {"medium": synthetic_table()}
+    return TABLES
+
+
+class TestScenarioEngine:
+    def test_camera_crash_recover_delivers_late_not_lost(self):
+        spec = small_spec(events=(CameraCrash(at=1.0, camera_id="cam0"),
+                                  CameraRecover(at=2.0, camera_id="cam0")))
+        res = run_scenario(spec, tables=tables())
+        per_cam = {cid: len(res.select(camera_id=cid)) +
+                   sum(1 for r in res.rows
+                       if r.camera_id == cid and r.dropped)
+                   for cid in res.camera_ids}
+        # every published frame arrives despite the outage (at-most-once,
+        # delivered late rather than lost)
+        assert per_cam == {"cam0": 16, "cam1": 16}
+        kinds = [e["kind"] for e in res.events_log]
+        assert "rpc_timeout" in kinds          # the crash surfaced
+        assert any(e.get("kind") == "CameraRecover" and
+                   e.get("reattach") == "ok" for e in res.events_log)
+
+    def test_edge_crash_recover_resumes_stream(self):
+        spec = small_spec(events=(EdgeCrash(at=1.2), EdgeRecover(at=2.0)))
+        res = run_scenario(spec, tables=tables())
+        assert len(res.rows) == 32
+        assert any(e["kind"] == "RPCTimeout" for e in res.events_log)
+
+    def test_congestion_ramp_inflates_latency(self):
+        quiet = run_scenario(small_spec(frames=24), tables=tables())
+        ramp = run_scenario(
+            small_spec(frames=24,
+                       events=(CongestionRamp(start=1.0, end=2.0, peers=4),)),
+            tables=tables())
+        assert ramp.p95_latency_ms(2.0, 4.8) > quiet.p95_latency_ms(2.0, 4.8)
+
+    def test_peer_churn_changes_contention(self):
+        spec = small_spec(frames=24,
+                          events=(PeerJoin(at=1.0, node_id="forklift"),
+                                  PeerJoin(at=1.2, node_id="agv"),
+                                  PeerLeave(at=3.0, node_id="forklift"),
+                                  PeerLeave(at=3.0, node_id="agv")))
+        churn = run_scenario(spec, tables=tables())
+        quiet = run_scenario(small_spec(frames=24), tables=tables())
+        assert churn.p95_latency_ms(1.5, 3.0) > quiet.p95_latency_ms(1.5, 3.0)
+
+    def test_distance_drift_applies(self):
+        near = run_scenario(small_spec(frames=24), tables=tables())
+        far = run_scenario(
+            small_spec(frames=24,
+                       events=(DistanceDrift("cam0", start=0.0, end=1.0,
+                                             to_m=40.0),)),
+            tables=tables())
+        assert far.p95_latency_ms(2.0, 4.8, camera_id="cam0") > \
+            near.p95_latency_ms(2.0, 4.8, camera_id="cam0")
+
+    def test_qos_change_retargets_live_controllers(self):
+        spec = small_spec(events=(QosChange(at=1.5, latency=0.042),))
+        res = run_scenario(spec, tables=tables())
+        assert any(e.get("kind") == "QosChange" and e.get("status") == "ok"
+                   for e in res.events_log)
+        assert len(res.rows) == 32
+
+    def test_summary_shape(self):
+        res = run_scenario(small_spec(), tables=tables())
+        s = res.summary()
+        assert set(s["per_camera"]) == {"cam0", "cam1"}
+        assert s["frames"] == 32
+        assert np.isfinite(s["p95_ms"])
+
+
+@pytest.mark.slow
+class TestSoakScenario:
+    """Soak-length everything-at-once scenario (dedicated CI job; excluded
+    from the default push matrix via the ``slow`` marker)."""
+
+    def test_long_mixed_scenario_survives(self):
+        spec = ScenarioSpec(
+            name="soak",
+            cameras=tuple(CameraSpec(f"cam{i}", dynamics="medium")
+                          for i in range(5)),
+            frames=200, seed=13, workload="jaad",
+            latency=0.100, accuracy=0.92, fleet=True,
+            events=(
+                CongestionRamp(start=3.0, end=8.0, peers=4, leave_at=14.0),
+                InterferenceSpike(start=10.0, end=16.0, factor=8.0),
+                DistanceDrift("cam2", start=0.0, end=20.0, to_m=18.0),
+                CameraCrash(at=6.0, camera_id="cam4"),
+                CameraRecover(at=12.0, camera_id="cam4"),
+                EdgeCrash(at=18.0), EdgeRecover(at=19.0),
+                QosChange(at=22.0, latency=0.060),
+                TableRefresh(at=26.0, camera_id="cam1"),
+                QosChange(at=30.0, latency=0.100),
+            ),
+        )
+        res = run_scenario(spec, tables={"medium": synthetic_table()})
+        # every published frame accounted for, across every fault
+        total = len(res.rows)
+        assert total == 5 * 200
+        # the fleet step stayed ONE compiled dispatch across the whole
+        # timeline -- retargets, a mid-scenario per-camera table refresh,
+        # crashes and recoveries included
+        assert res.fleet_cache_size == 1
+        refreshed = [e for e in res.events_log
+                     if e.get("kind") == "TableRefresh"]
+        assert refreshed and refreshed[0]["refreshed"] is True
+
+
+if __name__ == "__main__":
+    print("wrote", regenerate_golden())
