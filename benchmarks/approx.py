@@ -23,12 +23,12 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Timer, emit
-from repro.core.approx_comm import (LEVELS, characterize_fidelity,
-                                    collective_bytes_for, make_grad_compressor)
-from repro.core.characterization import CharacterizationTable
-from repro.core.controller import ControllerConfig, LatencyController
+from repro.core.approx_comm import (LEVELS, CollectiveController,
+                                    characterize_fidelity,
+                                    collective_bytes_for, fidelity_table,
+                                    make_grad_compressor)
 from repro.core.characterization import LatencyRegression
-from repro.core.knobs import KnobSetting
+from repro.core.controller import ControllerConfig, LatencyController
 
 
 def _grad_sample(key=jax.random.PRNGKey(0)):
@@ -43,33 +43,24 @@ def approx_collectives() -> dict:
         grad_bytes = sum(g.size * 2 for g in jax.tree_util.tree_leaves(grads))
         fidelity = characterize_fidelity(grads)
 
-        # Build the Algorithm-1 tables: "size" = wire bytes per level,
-        # "accuracy" = gradient cosine fidelity.
-        sizes = np.asarray([collective_bytes_for(grad_bytes, l.bits)
-                            for l in LEVELS])
-        accs = np.asarray([fidelity[l.bits] for l in LEVELS])
-        order = np.argsort(sizes)
-        best_acc, best_idx, run = [], [], (-1.0, -1)
-        for i in order:
-            if accs[i] > run[0]:
-                run = (accs[i], i)
-            best_acc.append(run[0]); best_idx.append(run[1])
-        table = CharacterizationTable(
-            settings=tuple(KnobSetting() for _ in LEVELS),
-            sizes_sorted=sizes[order], best_acc=np.asarray(best_acc),
-            best_idx=np.asarray(best_idx), acc_by_setting=accs,
-            size_by_setting=sizes)
-
         bw_nominal = 25e9 / 8     # modeled per-host DCN share, bytes/s
-        reg = LatencyRegression(slope=1.0 / bw_nominal, intercept=1e-4)
         target = 1.5 * grad_bytes / bw_nominal     # SLO: 1.5x nominal xfer
-        ctl = LatencyController(
+        # the JITTED controller path (shared ControllerParams / one-lane
+        # fleet_controller_step) picks the level each reduction...
+        ctl = CollectiveController(
+            grad_bytes, fidelity, latency_target=target,
+            fidelity_floor=0.98, slope=1.0 / bw_nominal, intercept=1e-4)
+        # ...and a shadow host LatencyController with the identical config
+        # verifies the compiled decisions step for step
+        reg = LatencyRegression(slope=1.0 / bw_nominal, intercept=1e-4)
+        host = LatencyController(
             ControllerConfig(latency_target=target, accuracy_target=0.98,
                              error_threshold=0.05 * target),
-            table, reg)
+            fidelity_table(grad_bytes, fidelity), reg)
 
         rng = np.random.default_rng(0)
         series_ctl, series_unc, levels, fids = [], [], [], []
+        parity = True
         level_bits = 16
         for step in range(80):
             # contended link: bandwidth drops up to 10x mid-run
@@ -81,10 +72,9 @@ def approx_collectives() -> dict:
             series_unc.append(lat_unc)
             series_ctl.append(lat_ctl)
             d = ctl.update(lat_ctl)
-            if d.setting_index >= 0:
-                level_bits = LEVELS[int(np.argsort(sizes)[0] if False else
-                                        d.setting_index)].bits
-                level_bits = LEVELS[d.setting_index].bits
+            dh = host.update(lat_ctl)
+            parity &= d.setting_index == dh.setting_index
+            level_bits = d.bits
             levels.append(level_bits)
             fids.append(fidelity[level_bits])
 
@@ -102,12 +92,16 @@ def approx_collectives() -> dict:
             "latency_improvement": float(
                 np.percentile(series_unc[25:55], 95)
                 / np.percentile(series_ctl[25:55], 95)),
+            "jit_host_parity": bool(parity),
+            "controller_cache_size": ctl.cache_size(),
         }
     emit("approx_collectives", t.us,
          f"ctl_p95={out['ctl_p95_s']*1e3:.1f}ms "
          f"unc_p95={out['unc_p95_s']*1e3:.1f}ms "
          f"min_fid={out['min_fidelity']:.4f} "
-         f"improve={out['latency_improvement']:.1f}x", out)
+         f"improve={out['latency_improvement']:.1f}x "
+         f"parity={out['jit_host_parity']} "
+         f"cache={out['controller_cache_size']}", out)
     return out
 
 

@@ -28,11 +28,22 @@ vmapped fleet step must stay sublinear in camera count
 4.0), keep a healthy speedup over the per-camera jitted-dispatch loop, and
 compile exactly once across the sweep.
 
+When ``BENCH_fig12.json`` exists (produced by ``python -m benchmarks.paper
+fig12``), the fig12 gate runs against ``benchmarks/baseline_fig12.json``:
+under the scripted workload shift the drift-aware refresh arm must hold
+measured F1 within the committed bound of the offline-characterized oracle
+arm, detect the shift within the latency bound, refresh exactly the
+shifted cameras, keep both the drift monitor and the fleet step at one
+compiled variant -- and the no-refresh control arm must still degrade
+(otherwise the scenario stopped exercising staleness at all).
+
   PYTHONPATH=src python -m benchmarks.check_regression \
       [--fresh BENCH_characterize.json] \
       [--baseline benchmarks/baseline_characterize.json] \
       [--fleet-fresh BENCH_fleet.json] \
-      [--fleet-baseline benchmarks/baseline_fleet.json]
+      [--fleet-baseline benchmarks/baseline_fleet.json] \
+      [--fig12-fresh BENCH_fig12.json] \
+      [--fig12-baseline benchmarks/baseline_fig12.json]
 """
 
 from __future__ import annotations
@@ -49,6 +60,9 @@ DEFAULT_BASELINE = os.path.join(_HERE, "baseline_characterize.json")
 DEFAULT_FLEET_FRESH = os.path.join(os.path.dirname(_HERE),
                                    "BENCH_fleet.json")
 DEFAULT_FLEET_BASELINE = os.path.join(_HERE, "baseline_fleet.json")
+DEFAULT_FIG12_FRESH = os.path.join(os.path.dirname(_HERE),
+                                   "BENCH_fig12.json")
+DEFAULT_FIG12_BASELINE = os.path.join(_HERE, "baseline_fig12.json")
 
 
 def check(fresh: dict, baseline: dict, *, max_speedup_drop: float,
@@ -133,6 +147,59 @@ def check_fleet(fresh: dict, baseline: dict) -> list[str]:
     return failures
 
 
+def check_fig12(fresh: dict, baseline: dict) -> list[str]:
+    """Gate BENCH_fig12.json (drift-aware refresh under a workload shift)
+    against the committed thresholds.  Returns the violated conditions
+    (empty = pass)."""
+    failures: list[str] = []
+
+    drop = fresh.get("f1_drop_vs_oracle")
+    bound = baseline.get("max_f1_drop_vs_oracle", 0.05)
+    if drop is None:
+        failures.append("f1_drop_vs_oracle: missing from fig12 results")
+    elif drop > bound:
+        failures.append(
+            f"f1_drop_vs_oracle: {drop:.4f} exceeds {bound:.0%} -- the "
+            f"auto-refreshed tables stopped matching offline "
+            f"characterization of the shifted regime")
+
+    ctl_drop = fresh.get("f1_drop_without_refresh_vs_oracle")
+    floor = baseline.get("min_f1_drop_without_refresh_vs_oracle")
+    if ctl_drop is None:
+        failures.append("f1_drop_without_refresh_vs_oracle: missing from "
+                        "fig12 results")
+    elif floor is not None and ctl_drop < floor:
+        failures.append(
+            f"f1_drop_without_refresh_vs_oracle: {ctl_drop:.4f} fell below "
+            f"{floor:.2f} -- the control arm no longer degrades, so the "
+            f"scenario stopped exercising table staleness")
+
+    lat = fresh.get("detection_latency_s")
+    lat_bound = baseline.get("max_detection_latency_s")
+    if lat is None:
+        failures.append("detection_latency_s: null -- the drift monitor "
+                        "never fired on the scripted shift")
+    elif lat_bound is not None and lat > lat_bound:
+        failures.append(f"detection_latency_s: {lat:.2f}s exceeds the "
+                        f"{lat_bound:.1f}s bound")
+
+    expect = baseline.get("expect_refreshed_cameras")
+    got = fresh.get("refreshed_cameras")
+    if expect is not None and got != expect:
+        failures.append(
+            f"refreshed_cameras: {got} != {expect} -- the refresh must "
+            f"land on exactly the shifted lanes (no false positives on "
+            f"stationary cameras, no misses)")
+
+    for key in ("drift_cache_size", "fleet_cache_size"):
+        cache = fresh.get(key)
+        max_cache = baseline.get(f"max_{key}", 1)
+        if cache is not None and cache > max_cache:
+            failures.append(f"{key}: {cache} compiled variants (> "
+                            f"{max_cache}) -- retraced mid-scenario")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh", default=DEFAULT_FRESH,
@@ -147,6 +214,10 @@ def main() -> int:
                     help="fleet-scaling benchmark json (gated when present)")
     ap.add_argument("--fleet-baseline", default=DEFAULT_FLEET_BASELINE,
                     help="committed fleet gate thresholds")
+    ap.add_argument("--fig12-fresh", default=DEFAULT_FIG12_FRESH,
+                    help="fig12 workload-shift json (gated when present)")
+    ap.add_argument("--fig12-baseline", default=DEFAULT_FIG12_BASELINE,
+                    help="committed fig12 gate thresholds")
     args = ap.parse_args()
 
     with open(args.fresh) as fh:
@@ -179,6 +250,20 @@ def main() -> int:
               f"cache={fleet_fresh.get('cache_size')}")
     else:
         print(f"fleet:    {args.fleet_fresh} absent -- fleet gate skipped")
+    if os.path.exists(args.fig12_fresh):
+        with open(args.fig12_fresh) as fh:
+            fig12_fresh = json.load(fh)
+        with open(args.fig12_baseline) as fh:
+            fig12_baseline = json.load(fh)
+        failures += check_fig12(fig12_fresh, fig12_baseline)
+        print(f"fig12:    drop_vs_oracle="
+              f"{fig12_fresh.get('f1_drop_vs_oracle')} "
+              f"control_drop="
+              f"{fig12_fresh.get('f1_drop_without_refresh_vs_oracle')} "
+              f"detect_s={fig12_fresh.get('detection_latency_s')} "
+              f"refreshed={fig12_fresh.get('refreshed_cameras')}")
+    else:
+        print(f"fig12:    {args.fig12_fresh} absent -- fig12 gate skipped")
     if failures:
         print(f"\nBENCHMARK REGRESSION GATE FAILED "
               f"({len(failures)} violation(s)):", file=sys.stderr)

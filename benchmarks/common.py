@@ -14,9 +14,10 @@ from repro.core.knobs import KnobSetting
 from repro.data.camera import CameraConfig, SyntheticCamera
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/bench")
-# v2: wire sizes come from the batched engine's calibrated proxy; stale
-# seed-era pickles (exact-zlib sizes) must not be mixed in.
-CACHE = os.path.join(RESULTS_DIR, "_tables_v2.pkl")
+# v3: tables carry the drift monitor's scene-activity statistic + source
+# provenance; v2 pickles (no such fields) would break dataclasses.replace
+# on live tables, so they must not be mixed in.
+CACHE = os.path.join(RESULTS_DIR, "_tables_v3.pkl")
 
 
 def ensure_dir() -> None:
@@ -44,9 +45,13 @@ def synthetic_controller_table(n: int = 24, *, smin: float = 2e3,
 _TABLES: dict | None = None
 
 
-def get_table(dynamics: str, *, clip_len: int = 32, seed: int = 7
-              ) -> CharacterizationTable:
-    """Characterization tables are expensive (~20 s each); cache on disk."""
+def get_table(dynamics: str, *, clip_len: int = 32, seed: int = 7,
+              camera_id: str = "cam0") -> CharacterizationTable:
+    """Characterization tables are expensive (~20 s each); cache on disk.
+
+    ``camera_id`` selects WHICH camera's stream the calibration clip comes
+    from -- per-camera tables matter to the drift monitor, which treats a
+    table swept on another camera's background as (mildly) stale."""
     global _TABLES
     ensure_dir()
     if _TABLES is None:
@@ -55,10 +60,10 @@ def get_table(dynamics: str, *, clip_len: int = 32, seed: int = 7
                 _TABLES = pickle.load(fh)
         else:
             _TABLES = {}
-    key = (dynamics, clip_len, seed)
+    key = (dynamics, clip_len, seed, camera_id)
     if key not in _TABLES:
-        _TABLES[key] = characterize(camera_factory(dynamics, seed),
-                                    clip_len=clip_len)
+        _TABLES[key] = characterize(
+            camera_factory(dynamics, seed, camera_id), clip_len=clip_len)
         with open(CACHE, "wb") as fh:
             pickle.dump(_TABLES, fh)
     return _TABLES[key]

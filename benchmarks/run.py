@@ -29,6 +29,7 @@ def main() -> None:
         paper.fig5_latency_vs_size,
         paper.fig6_accuracy_vs_size,
         paper.fig11_controller_response,
+        paper.fig12_e2e_latency_accuracy,
         paper.table3_controller_summary,
         paper.fig13_14_mez_vs_nats,
         paper.fig15_subscriber_scaling,

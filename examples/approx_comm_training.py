@@ -27,6 +27,11 @@ def main() -> None:
           f"min gradient fidelity: {out['min_fidelity']:.4f}")
     print(f"  latency improvement under contention: "
           f"{out['latency_improvement']:.1f}x")
+    # the level decisions run on the jitted controller path (a one-lane
+    # fleet_controller_step): one compiled variant across the whole run,
+    # bit-identical to the host PI controller
+    print(f"  jit decisions == host decisions: {out['jit_host_parity']}  "
+          f"compiled variants: {out['controller_cache_size']}")
 
     print("\n== training quality with compressed transport ==")
     q = compressed_training_quality()

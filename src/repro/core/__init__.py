@@ -13,6 +13,8 @@ from repro.core.characterization import (CharacterizationTable,
 from repro.core.controller import (ControllerConfig, ControllerState,
                                    JaxControllerTables, LatencyController,
                                    controller_init, controller_step)
+from repro.core.drift import (DriftConfig, DriftMonitor, DriftState,
+                              drift_init, drift_update)
 from repro.core.grid_engine import (GridCharacterization, WireSizeProxy,
                                     run_grid)
 from repro.core.knobs import (KnobSetting, TransformMemo, apply_knobs,
@@ -34,5 +36,6 @@ __all__ = [
     "frame_log_range_query", "EventKind", "FrameBatch", "QosUpdate",
     "SessionEvent", "SessionedMessagingSystem", "SubscriptionState",
     "MezClient", "Session", "Subscription", "GridCharacterization",
-    "WireSizeProxy", "run_grid", "TransformMemo",
+    "WireSizeProxy", "run_grid", "TransformMemo", "DriftConfig",
+    "DriftMonitor", "DriftState", "drift_init", "drift_update",
 ]

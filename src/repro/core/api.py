@@ -115,6 +115,9 @@ class SubscriptionState(enum.Enum):
 class EventKind(enum.Enum):
     INFEASIBLE = "infeasible"      # controller: bounds can't both be met
     RPC_TIMEOUT = "rpc_timeout"    # camera node crashed / unreachable
+    TABLE_REFRESH = "table_refresh"  # drift monitor auto-recharacterized a
+                                     # camera's knob tables (detail says
+                                     # whether the re-sweep succeeded)
 
 
 @dataclasses.dataclass(frozen=True)

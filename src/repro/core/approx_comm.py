@@ -41,7 +41,7 @@ from repro.kernels import ref as kref
 
 __all__ = ["CompressionLevel", "LEVELS", "compressed_mean",
            "make_grad_compressor", "characterize_fidelity",
-           "collective_bytes_for"]
+           "collective_bytes_for", "fidelity_table", "CollectiveController"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,6 +122,111 @@ def make_grad_compressor(bits: int, *, block=(256, 512),
 def collective_bytes_for(grad_bytes_bf16: float, bits: int) -> float:
     lvl = {l.bits: l for l in LEVELS}[bits]
     return grad_bytes_bf16 * lvl.wire_factor
+
+
+def fidelity_table(grad_bytes_bf16: float, fidelity: dict[int, float]):
+    """The Algorithm-1 tables for the cross-pod link: "size" = wire bytes
+    per compression level, "accuracy" = gradient cosine fidelity (the F1
+    analogue).  Returns a ``CharacterizationTable`` ready for either the
+    host ``LatencyController`` or the jitted ``controller_step`` path."""
+    from repro.core.characterization import CharacterizationTable
+    from repro.core.knobs import KnobSetting
+
+    sizes = np.asarray([collective_bytes_for(grad_bytes_bf16, lvl.bits)
+                        for lvl in LEVELS], np.float64)
+    accs = np.asarray([fidelity[lvl.bits] for lvl in LEVELS], np.float64)
+    order = np.argsort(sizes, kind="stable")
+    best_acc, best_idx, run = [], [], (-1.0, -1)
+    for i in order:
+        if accs[i] > run[0]:
+            run = (float(accs[i]), int(i))
+        best_acc.append(run[0])
+        best_idx.append(run[1])
+    return CharacterizationTable(
+        settings=tuple(KnobSetting() for _ in LEVELS),
+        sizes_sorted=sizes[order], best_acc=np.asarray(best_acc),
+        best_idx=np.asarray(best_idx), acc_by_setting=accs,
+        size_by_setting=sizes, min_accuracy=0.0, source="approx-comm")
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveDecision:
+    """One reduction's transport decision."""
+    bits: int                # compression level to use for the NEXT step
+    setting_index: int       # row of the fidelity table (-1 = none)
+    feasible: bool           # fidelity floor met within the latency budget
+    acted: bool              # outside the error band this step
+
+
+class CollectiveController:
+    """Algorithm 1 picking the gradient compression level, on the JITTED
+    controller path (ROADMAP PR 4 follow-up: drive ``approx_comm``'s knob
+    from fleet decisions).
+
+    A one-lane fleet: the fidelity table becomes capacity-padded
+    ``JaxControllerTables``, the law constants become a stacked
+    ``ControllerParams`` row (gains precomputed in float64, exactly the
+    host contract), and every reduction steps ``fleet_controller_step`` --
+    the SAME compiled vmapped core the camera fleet runs, pointed at the
+    cross-pod link.  Decisions are therefore bit-identical to a host
+    ``LatencyController`` with the same config (asserted by
+    tests/test_runtime.py), and the controller can later join a real
+    multi-lane fleet (cameras and collectives in one dispatch) without
+    changing semantics.
+    """
+
+    def __init__(self, grad_bytes_bf16: float, fidelity: dict[int, float],
+                 *, latency_target: float, fidelity_floor: float = 0.98,
+                 slope: float, intercept: float = 1e-4,
+                 error_threshold: float | None = None,
+                 capacity: int | None = None):
+        from repro.core.characterization import LatencyRegression
+        from repro.core.controller import (ControllerConfig,
+                                           JaxControllerTables,
+                                           LatencyController,
+                                           fleet_controller_init,
+                                           fleet_controller_step,
+                                           stack_params, stack_tables,
+                                           ControllerParams)
+        self.table = fidelity_table(grad_bytes_bf16, fidelity)
+        if error_threshold is None:
+            error_threshold = 0.05 * latency_target
+        cfg = ControllerConfig(latency_target=latency_target,
+                               accuracy_target=fidelity_floor,
+                               error_threshold=error_threshold)
+        reg = LatencyRegression(slope=slope, intercept=intercept)
+        # the host twin seeds the operating point (nominal-size row) and
+        # supplies the float64-precomputed gains -- the parity contract
+        self._host = LatencyController(cfg, self.table, reg)
+        cap = capacity or max(8, len(LEVELS))
+        self.tables = stack_tables(
+            [JaxControllerTables.from_table(self.table, capacity=cap)])
+        self.params = stack_params(
+            [ControllerParams.from_controller(self._host)])
+        self.state = fleet_controller_init(
+            self.tables, start_idx=np.asarray([self._host._current],
+                                              np.int32))
+        self._step = jax.jit(
+            lambda st, lat, tb, pr: fleet_controller_step(st, lat, tb, pr))
+        self.bits = LEVELS[self._host._current].bits
+
+    def cache_size(self) -> int:
+        """Compiled-variant count of the decision step (1 = no retraces)."""
+        return self._step._cache_size()
+
+    def update(self, latency_sampled: float) -> CollectiveDecision:
+        """One control tick: feed the measured reduction latency, get the
+        compression level for the next step (ONE compiled dispatch)."""
+        self.state, aux = self._step(
+            self.state, jnp.asarray([latency_sampled], jnp.float32),
+            self.tables, self.params)
+        a = jax.device_get(aux)
+        idx = int(a.idx[0])
+        if idx >= 0:
+            self.bits = LEVELS[idx].bits
+        return CollectiveDecision(bits=self.bits, setting_index=idx,
+                                  feasible=bool(a.feasible[0]),
+                                  acted=bool(a.acted[0]))
 
 
 def characterize_fidelity(grads_sample, *, block=(256, 512)) -> dict[int, float]:

@@ -39,6 +39,7 @@ from repro.core.characterization import CharacterizationTable, LatencyRegression
 from repro.core.controller import (ControlDecision, ControllerConfig,
                                    FleetController, JaxControllerTables,
                                    LatencyController, swap_tables)
+from repro.core.drift import DriftConfig, DriftMonitor, relative_size_error
 from repro.core import knobs as K
 from repro.core.knobs import wire_size
 from repro.core.log import HostLog, LogSegmentStore
@@ -65,6 +66,13 @@ RECHAR_CLIP_LEN = 16               # log-tail frames per online re-sweep
 PRESCREEN_SLACK = 1.25             # proxy overshoot tolerance vs the size
                                    # budget before stepping a setting down
 PRESCREEN_MAX_CANDIDATES = 3       # bounded candidate walk per frame
+DRIFT_ACTIVITY_FLOOR = 0.01        # activity-residual denominator floor
+                                   # (fraction of pixels): sub-point
+                                   # differences in changed-pixel fraction
+                                   # are mover jitter, not a regime change
+                                   # -- without the floor a near-static
+                                   # calibration clip makes the RELATIVE
+                                   # residual ill-conditioned
 
 
 class CamBroker:
@@ -100,6 +108,17 @@ class CamBroker:
         # frame is actually shipped: the pre-screen only ever needs the
         # payload + proxy features, never exact deflate.
         self._payload_cache: dict[tuple, list] = {}
+        # per-frame scene-activity fractions (knob5's change metric)
+        # observed by fetch since the last drain -- the drift monitor's
+        # second channel (bounded; drained per poll by _drift_tick).
+        # _prev_frame tracks the last frame fetch PROCESSED (shipped or
+        # dropped): an observation is recorded only when the comparison
+        # base was the immediately preceding frame, so the statistic
+        # matches the table's CONSECUTIVE-frame activity -- comparing
+        # against an older last-sent frame (motion accumulated across
+        # knob5 drops) would bias the residual upward on a quiet scene
+        self._activity_obs: list[float] = []
+        self._prev_frame: np.ndarray | None = None
         # last successful re-sweep's (log state, sweep params): a repeat
         # request over the SAME published frames (e.g. a session-level
         # update_qos fanning out over subscriptions sharing this camera)
@@ -210,6 +229,41 @@ class CamBroker:
         self._rechar_memo = memo_key
         return True
 
+    def inject_table_staleness(self, factor: float = 0.5) -> bool:
+        """Fault injection: make the LIVE tables stale in place.
+
+        Rescales the size axis of the installed characterization table by
+        ``factor`` while keeping the accuracy claims -- exactly what a scene
+        regime change does to a table characterized on the old regime (the
+        recorded clip-median wire sizes stop predicting what the camera now
+        ships).  The swap follows the online-refresh contract verbatim
+        (``swap_table`` host-side + jitted twin + ``table_version`` bump, PI
+        integral carried), so a fleet lane hot-swaps without recompiling.
+        The stale table drops its wire-size proxy (a stale proxy would
+        silently fight the pre-screen) and clears the re-characterization
+        memo so a drift-triggered refresh really re-sweeps.
+
+        Used by the scenario DSL's ``TableStaleness`` event to exercise the
+        drift monitor deterministically without a full scene change.
+        Returns False when no controller is installed yet.
+        """
+        if self.crashed:
+            raise BrokerDown(self.camera_id)
+        if self.controller is None:
+            return False
+        live = self.controller.table
+        stale = dataclasses.replace(
+            live,
+            sizes_sorted=live.sizes_sorted * factor,
+            size_by_setting=live.size_by_setting * factor,
+            proxy=None,
+            source="stale-injected",
+        )
+        self.controller.swap_table(stale)
+        self._install_jax_tables(stale)
+        self._rechar_memo = None
+        return True
+
     def retarget(self, latency: float, accuracy: float) -> bool:
         """Renegotiate bounds on the LIVE controller (v2 ``update_qos``):
         no teardown, no resubscribe -- the PI loop keeps its tables and
@@ -277,8 +331,18 @@ class CamBroker:
                 break
             if setting is not None:
                 eff_setting, eff_idx, entry = setting, knob_idx, None
-                drop = K.frame_difference(frame, self._last_sent,
-                                          K.DIFF_THRESHOLDS[setting.diff])
+                # one change-fraction pass serves both knob5's drop
+                # decision and the drift monitor's activity observation --
+                # the latter only when last-sent IS the preceding frame
+                # (a consecutive-frame fraction, the table's statistic)
+                frac = K.change_fraction(frame, self._last_sent)
+                if frac is not None and self._last_sent is self._prev_frame:
+                    self._activity_obs.append(frac)
+                    if len(self._activity_obs) > 256:
+                        del self._activity_obs[:-256]
+                self._prev_frame = frame
+                thresh = K.DIFF_THRESHOLDS[setting.diff]
+                drop = thresh >= 0.0 and frac is not None and frac <= thresh
                 if decision is not None and not drop:
                     # knob5 short-circuit: a frame the decision drops never
                     # pays the transform/pre-screen pipeline; the walk is
@@ -418,6 +482,17 @@ class CamBroker:
             entry[1] = wire_size(entry[0])
         return K.KnobResult(entry[0], entry[1], setting.overhead_ms)
 
+    def drain_activity(self) -> list[float]:
+        """Per-frame scene-activity fractions observed by ``fetch`` since
+        the last drain (knob5's change metric on the RAW stream, so the
+        signal survives even when every frame is knob5-dropped).  The drift
+        monitor compares their mean against the live table's
+        ``activity`` statistic; a camera fanned out to several
+        subscriptions shares one observation stream (first drainer wins)."""
+        out = self._activity_obs
+        self._activity_obs = []
+        return out
+
     # -- fault tolerance -----------------------------------------------------------
     def crash(self) -> None:
         self.crashed = True
@@ -434,7 +509,9 @@ class CamBroker:
                 self.log = restored
         self.crashed = False
         self._last_sent = None
+        self._prev_frame = None
         self._payload_cache.clear()
+        self._activity_obs.clear()
 
 
 @dataclasses.dataclass
@@ -470,6 +547,15 @@ class _Subscription:
     # live controller; None until then / when not requested)
     want_fleet: bool = False
     fleet: FleetController | None = None
+    # drift-aware auto-recharacterization: one vectorized staleness monitor
+    # per subscription, fed once per poll with each camera's observed
+    # wire-size residuals; fired lanes re-sweep their own tables with no
+    # operator call (None when not requested)
+    drift: DriftMonitor | None = None
+    # lanes that fired at the END of a poll; the re-sweep applies at the
+    # START of the next poll so a batch the subscriber is still holding
+    # never references a table swapped out from under it
+    pending_refresh: list = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -562,7 +648,9 @@ class EdgeBroker:
                             feedback_window: int = 8,
                             credit_limit: int = 2,
                             retarget: bool = True,
-                            fleet: bool = False) -> str:
+                            fleet: bool = False,
+                            auto_recharacterize: bool = False,
+                            drift_config: DriftConfig | None = None) -> str:
         """Register a (possibly multi-camera) subscription on a session.
 
         With ``retarget`` (the default), each spec's (latency, accuracy)
@@ -579,6 +667,17 @@ class EdgeBroker:
         cost is ~flat in camera count.  Requires ``controlled``; cameras
         whose controllers are installed later join the fleet lazily at the
         first poll where every camera is ready.
+
+        With ``auto_recharacterize``, a per-subscription ``DriftMonitor``
+        watches every camera's observed wire sizes against its live table's
+        predictions; a camera whose windowed drift score crosses the
+        hysteresis threshold is re-characterized from its own recent frames
+        automatically (``CamBroker.recharacterize``) and the fresh tables
+        hot-swap into the live controller -- and, in fleet mode, into
+        exactly that camera's stacked lane -- with no operator call and no
+        recompile.  ``drift_config`` tunes the monitor; requires
+        ``controlled``.  Each refresh (or failed re-sweep attempt) surfaces
+        as a ``TABLE_REFRESH`` event on the subscription's event stream.
         """
         if self.crashed:
             raise RPCTimeout("EdgeBroker down")
@@ -589,6 +688,8 @@ class EdgeBroker:
             raise ValueError("subscription needs at least one camera spec")
         if fleet and not controlled:
             raise ValueError("fleet control plane requires controlled=True")
+        if auto_recharacterize and not controlled:
+            raise ValueError("auto_recharacterize requires controlled=True")
         for spec in specs:
             if spec.camera_id not in self._cams:
                 raise RPCTimeout(f"unknown camera {spec.camera_id}")
@@ -598,6 +699,10 @@ class EdgeBroker:
         rec = _Subscription(sub_id, session_id, sess.application_id, cameras,
                             controlled, feedback_window, credit_limit,
                             want_fleet=fleet)
+        if auto_recharacterize:
+            # lane order is the sorted camera-id order, matching the fleet
+            # stack, so drift telemetry and fleet lanes line up
+            rec.drift = DriftMonitor(sorted(cameras), drift_config)
         if retarget:
             for spec in specs:
                 try:
@@ -655,6 +760,7 @@ class EdgeBroker:
         rec = self._subscriptions.get(subscription_id)
         if rec is None:
             return FrameBatch((), subscription_id)
+        self._apply_pending_refreshes(rec)
         t0 = time.monotonic()
         active = [cid for cid in sorted(rec.cameras)
                   if rec.cameras[cid].active]
@@ -700,6 +806,7 @@ class EdgeBroker:
                                  decision=(decisions.get(cid)
                                            if decisions else None))
         out.sort(key=lambda d: (d.timestamp, d.camera_id))
+        self._drift_tick(rec, out)
         if not out:
             cams = rec.cameras.values()
             if any(c.failed for c in cams) and all(
@@ -707,6 +814,100 @@ class EdgeBroker:
                 raise RPCTimeout(
                     f"all cameras of {subscription_id} unreachable")
         return FrameBatch(tuple(out), subscription_id)
+
+    def _drift_tick(self, rec: _Subscription,
+                    frames: list[DeliveredFrame]) -> None:
+        """One staleness-monitor tick: aggregate this poll's observed
+        wire-size residuals per camera, flag drifted lanes, and
+        re-characterize exactly those lanes.
+
+        Two residual channels feed each lane, combined by max:
+
+        * **wire size** -- ``|observed - predicted| / predicted`` per
+          delivered frame, where predicted is the live table's clip-median
+          wire size for the setting the frame shipped under.  A regime that
+          compresses differently (or a fault-injected stale size axis)
+          steps this signal.
+        * **scene activity** -- the live stream's mean knob5 change
+          fraction (observed on the RAW frames by ``fetch``, so it survives
+          knob5 drops) against the table's calibration-clip ``activity``
+          statistic.  More/faster movers over the same background barely
+          move wire sizes but multiply this signal.
+
+        A fired lane re-sweeps via ``CamBroker.recharacterize`` (log-tail
+        clip, pseudo-GT scoring); the host controller swaps immediately and
+        a fleet-backed subscription's ``FleetController.sync`` hot-swaps
+        the lane at the next poll's decide -- identical one-poll-later
+        semantics on both control paths, which is what keeps host and
+        fleet traces byte-identical.  Both successful and unavailable
+        re-sweeps surface as TABLE_REFRESH events.
+        """
+        if rec.drift is None:
+            return
+        size_res: dict[str, list[float]] = {}
+        for f in frames:
+            if f.frame is None or f.knob_index < 0:
+                continue
+            cam = self._cams.get(f.camera_id)
+            if cam is None or cam.controller is None:
+                continue
+            table = cam.controller.table
+            if f.knob_index >= len(table.size_by_setting):
+                continue
+            size_res.setdefault(f.camera_id, []).append(
+                relative_size_error(
+                    float(table.size_by_setting[f.knob_index]),
+                    float(f.wire_bytes)))
+        samples: dict[str, float] = {}
+        for cid in rec.cameras:
+            cam = self._cams.get(cid)
+            if cam is None or cam.crashed or cam.controller is None:
+                continue
+            channels: list[float] = []
+            if cid in size_res:
+                channels.append(float(np.mean(size_res[cid])))
+            acts = cam.drain_activity()
+            ref_act = getattr(cam.controller.table, "activity", None)
+            if acts and ref_act is not None:
+                channels.append(abs(float(np.mean(acts)) - ref_act)
+                                / max(ref_act, DRIFT_ACTIVITY_FLOOR))
+            if channels:
+                samples[cid] = max(channels)
+        for cid in rec.drift.observe(samples):
+            if cid not in rec.pending_refresh:
+                rec.pending_refresh.append(cid)
+
+    def _apply_pending_refreshes(self, rec: _Subscription) -> None:
+        """Re-characterize the lanes the drift monitor fired last poll.
+
+        Runs at the top of the poll, BEFORE any control decision: the host
+        controller and (via ``FleetController.sync`` inside ``decide``) the
+        fleet lane both trade on the fresh tables for this poll's fetches,
+        and every batch already handed to the subscriber keeps referencing
+        the table its decisions were made against."""
+        if not rec.pending_refresh:
+            return
+        fired, rec.pending_refresh = rec.pending_refresh, []
+        for cid in fired:
+            cam = self._cams.get(cid)
+            cur = rec.cameras.get(cid)
+            at = cur.cursor if cur is not None else 0.0
+            if cam is None or cam.crashed:
+                rec.events.append(SessionEvent(
+                    EventKind.TABLE_REFRESH, cid, rec.sub_id, at,
+                    "drift: camera unreachable; stale tables kept"))
+                continue
+            try:
+                refreshed = cam.recharacterize()
+            except BrokerDown:
+                rec.events.append(SessionEvent(
+                    EventKind.TABLE_REFRESH, cid, rec.sub_id, at,
+                    "drift: camera unreachable; stale tables kept"))
+                continue
+            rec.events.append(SessionEvent(
+                EventKind.TABLE_REFRESH, cid, rec.sub_id, at,
+                "drift: tables re-swept from live frames" if refreshed
+                else "drift: re-sweep unavailable; stale tables kept"))
 
     def _fetch_into(self, rec: _Subscription, camera_id: str, budget: int,
                     out: list[DeliveredFrame], *,
@@ -871,6 +1072,13 @@ class EdgeBroker:
         tests and the fleet-scaling benchmark."""
         rec = self._subscriptions.get(subscription_id)
         return rec.fleet if rec is not None else None
+
+    def subscription_drift(self, subscription_id: str) -> DriftMonitor | None:
+        """The live staleness monitor of an auto-recharacterizing
+        subscription (None otherwise) -- introspection for the drift tests
+        and the fig12 benchmark."""
+        rec = self._subscriptions.get(subscription_id)
+        return rec.drift if rec is not None else None
 
     def subscription_events(self, subscription_id: str) -> list[SessionEvent]:
         """Drain pending out-of-band events for a subscription."""

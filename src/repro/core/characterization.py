@@ -96,6 +96,21 @@ class CharacterizationTable:
                         online re-characterization re-applies the SAME
                         floor so the trade space doesn't silently shrink
                         or grow across a refresh
+    source            : provenance tag ("offline" for a calibration-time
+                        sweep, "online-refresh" for tables re-swept live
+                        by ``grid_engine.refresh_tables``, "stale-injected"
+                        for fault-injected tables) -- lets the drift tests
+                        and the fig12 benchmark assert WHICH tables a
+                        controller is actually trading on
+    activity          : mean changed-pixel fraction between consecutive
+                        calibration-clip frames (knob5's dissimilarity
+                        metric) -- the scene-dynamics statistic these
+                        measurements were taken under.  The drift monitor
+                        compares the LIVE stream's change fractions
+                        against it: a regime shift that barely moves wire
+                        sizes (e.g. more movers over the same background)
+                        still multiplies scene activity.  None for
+                        synthetic / pre-drift tables (channel disabled)
     """
     settings: tuple[K.KnobSetting, ...]
     sizes_sorted: np.ndarray
@@ -105,6 +120,8 @@ class CharacterizationTable:
     size_by_setting: np.ndarray
     proxy: "WireSizeProxy | None" = None
     min_accuracy: float = 0.90
+    source: str = "offline"
+    activity: float | None = None
 
     @property
     def includes_artifact(self) -> bool:
@@ -158,7 +175,8 @@ class CharacterizationTable:
 
 def _build_table(settings, sizes: np.ndarray, accs: np.ndarray,
                  min_accuracy: float,
-                 proxy=None) -> CharacterizationTable:
+                 proxy=None, activity: float | None = None
+                 ) -> CharacterizationTable:
     """keep/sort/prefix-max assembly, shared by both engines."""
     keep = (accs >= min_accuracy) & (sizes > 0)
     settings_kept = tuple(s for s, k in zip(settings, keep) if k)
@@ -189,6 +207,7 @@ def _build_table(settings, sizes: np.ndarray, accs: np.ndarray,
         size_by_setting=sizes_k,
         proxy=proxy,
         min_accuracy=min_accuracy,
+        activity=activity,
     )
 
 
@@ -237,7 +256,12 @@ def characterize(camera_factory, *, clip_len: int = 24,
             detector_thresh=detector_thresh)
     else:
         raise ValueError(f"unknown characterization engine {engine!r}")
-    return _build_table(settings, sizes, accs, min_accuracy)
+    fracs = [K.change_fraction(clip[i][1], clip[i - 1][1])
+             for i in range(1, clip_len)]
+    activity = float(np.mean([f for f in fracs if f is not None])) \
+        if fracs else None
+    return _build_table(settings, sizes, accs, min_accuracy,
+                        activity=activity)
 
 
 # =============================================================================
@@ -290,8 +314,15 @@ def table_from_grid(grid: "GridCharacterization", gts: list[np.ndarray], *,
         accs[si] = f1 / base_f1 if base_f1 > 0 else 0.0
         kept_sizes = grid.sizes[combo][kept[:clip_len]]
         sizes[si] = float(np.median(kept_sizes)) if kept_sizes.size else 0.0
+    # scene-activity statistic: mean consecutive-frame change fraction of
+    # the calibration clip (the grid's knob5 matrix holds exactly these
+    # counts) -- the drift monitor's reference point for this table
+    activity = None
+    if clip_len > 1:
+        consec = [grid.change_fraction(i, i - 1) for i in range(1, clip_len)]
+        activity = float(np.mean(consec))
     return _build_table(settings, sizes, accs, min_accuracy,
-                        proxy=grid.proxy)
+                        proxy=grid.proxy, activity=activity)
 
 
 # =============================================================================

@@ -610,7 +610,7 @@ class FleetController:
         return len(self._cams)
 
     # -- live reconfiguration ------------------------------------------------
-    def sync(self) -> None:
+    def sync(self) -> tuple[list[int], list[int]]:
         """Fold per-camera retargets / table refreshes into the stack.
 
         Called at the top of every ``decide``; O(N) integer compares when
@@ -619,6 +619,11 @@ class FleetController:
         point); a table refresh hot-swaps the camera's table lane and
         re-seeds the operating point while the integral carries over --
         exactly the host-side ``set_target`` / ``swap_table`` contracts.
+
+        Returns ``(table_swapped, retargeted)`` lane indices -- the exact
+        set of lanes rewritten this sync (empty when nothing changed),
+        which is how the drift-refresh tests assert that an
+        auto-recharacterization touched precisely the fired cameras.
         """
         table_swapped = [cam.table_version != self._table_versions[i]
                          for i, cam in enumerate(self._cams)]
@@ -662,6 +667,8 @@ class FleetController:
                 current_idx=self.state.current_idx.at[i].set(ctl._current),
                 feasible=self.state.feasible,
                 last_error=self.state.last_error)
+        return ([i for i, s in enumerate(table_swapped) if s],
+                [i for i, r in enumerate(retargeted) if r])
 
     # -- the fleet tick ------------------------------------------------------
     def decide(self, feedback) -> dict[str, ControlDecision]:

@@ -1,0 +1,234 @@
+"""Drift detection for characterization tables (auto re-characterization).
+
+Mez's tables map frame-quality knobs to (wire size, accuracy) for the scene
+regime they were characterized on (paper Sections 2.3-2.4).  When the scene
+shifts -- more movers, busier texture, a workload change -- the table's
+per-setting wire sizes stop predicting what the camera actually ships, and
+its accuracy claims silently rot with them (CANS frames exactly this as the
+self-configuration problem).  Until now a refresh required an operator call
+(``update_qos(recharacterize=True)`` / a scripted ``TableRefresh``).
+
+This module closes that loop.  A **staleness monitor** tracks, per camera,
+the windowed relative error between the table-predicted wire size of the
+setting each frame shipped under (``size_by_setting[knob_index]``, a clip
+median from characterization time) and the observed exact deflate bytes.
+A lane whose windowed score crosses the ``hi`` threshold while armed FIRES;
+the broker answers by running ``CamBroker.recharacterize`` on that camera's
+own recent frames and hot-swapping the fresh tables into the live
+controller (host + jitted fleet lane alike, no recompile, PI integral
+carried -- the ``swap_table`` contract).
+
+Hysteresis makes the trigger well-behaved: a fired lane disarms and clears
+its window (every buffered sample was measured against the now-replaced
+table), and only re-arms once a full ``min_samples`` of post-refresh
+observations score below the ``lo`` threshold.  A refresh that did not fix
+the mismatch therefore cannot flap -- the lane stays quiet until the
+residuals actually come down.
+
+Like ``fleet_controller_step``, the monitor core is a pure lax-only
+function vmapped over the camera axis and jitted once per monitor: N
+cameras cost one compiled dispatch per poll, and threshold/window-content
+changes are traced inputs (no retrace).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["DriftConfig", "DriftParams", "DriftState", "drift_init",
+           "drift_update", "relative_size_error", "DriftMonitor"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftConfig:
+    """Host-side knobs of the staleness monitor.
+
+    ``window`` is STATIC (it sizes the ring buffer); the thresholds are
+    traced, so tuning them never recompiles the monitor step.  Defaults are
+    sized for the deflate spread of a stationary synthetic scene (per-frame
+    wire bytes sit within ~10-20% of the characterization clip median):
+    a sustained 35% mean mismatch is a regime change, not noise.
+    """
+    window: int = 8          # ring-buffer samples per lane (one per poll)
+    hi: float = 0.35         # fire when windowed mean rel-err exceeds this
+    lo: float = 0.15         # re-arm only once the mean drops below this
+    min_samples: int = 4     # samples required before fire/re-arm decisions
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DriftParams:
+    """The monitor thresholds as TRACED leaves (per lane when stacked)."""
+    hi: jax.Array            # f32
+    lo: jax.Array            # f32
+    min_samples: jax.Array   # i32
+
+    def tree_flatten(self):
+        return ((self.hi, self.lo, self.min_samples), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def from_config(cls, config: DriftConfig, n: int | None = None
+                    ) -> "DriftParams":
+        """Scalar params, or ``n`` stacked identical lanes."""
+        def rep(x, dtype):
+            a = jnp.asarray(x, dtype)
+            return a if n is None else jnp.broadcast_to(a, (n,))
+        return cls(rep(config.hi, jnp.float32), rep(config.lo, jnp.float32),
+                   rep(config.min_samples, jnp.int32))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DriftState:
+    """Per-lane monitor state (stack along a leading camera axis)."""
+    errs: jax.Array      # f32[..., window] ring of |relative error| samples
+    pos: jax.Array       # i32[...] next ring slot
+    count: jax.Array     # i32[...] live samples (saturates at window)
+    armed: jax.Array     # bool[...] hysteresis: True = may fire
+    fires: jax.Array     # i32[...] cumulative fire count (telemetry)
+
+    def tree_flatten(self):
+        return ((self.errs, self.pos, self.count, self.armed,
+                 self.fires), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def drift_init(n: int | None, window: int) -> DriftState:
+    """Fresh, armed state for ``n`` lanes (``n=None``: one unstacked lane)."""
+    shape = () if n is None else (n,)
+    return DriftState(
+        errs=jnp.zeros(shape + (window,), jnp.float32),
+        pos=jnp.zeros(shape, jnp.int32),
+        count=jnp.zeros(shape, jnp.int32),
+        armed=jnp.ones(shape, bool),
+        fires=jnp.zeros(shape, jnp.int32),
+    )
+
+
+def _drift_lane_step(state: DriftState, err: jax.Array, valid: jax.Array,
+                     params: DriftParams
+                     ) -> tuple[DriftState, jax.Array, jax.Array]:
+    """One observation for ONE lane: push -> score -> hysteresis decision.
+
+    Returns (new_state, fired, score).  Invalid observations (no frames
+    shipped this poll) leave the lane untouched except that the decision is
+    still evaluated -- a lane cannot fire while empty because ``count``
+    gates on ``min_samples``.
+    """
+    window = state.errs.shape[-1]
+    err = jnp.abs(jnp.asarray(err, jnp.float32))
+    errs = jnp.where(valid, state.errs.at[state.pos].set(err), state.errs)
+    pos = jnp.where(valid, (state.pos + 1) % window, state.pos)
+    count = jnp.where(valid, jnp.minimum(state.count + 1, window),
+                      state.count)
+    live = jnp.arange(window) < count
+    score = (jnp.sum(jnp.where(live, errs, 0.0))
+             / jnp.maximum(count, 1).astype(jnp.float32))
+    ready = count >= params.min_samples
+    fired = state.armed & ready & (score > params.hi)
+    rearm = (~state.armed) & ready & (score < params.lo)
+    armed = jnp.where(fired, False, jnp.where(rearm, True, state.armed))
+    # a fired lane's window is cleared: every buffered residual was measured
+    # against the table the fire is about to replace
+    errs = jnp.where(fired, jnp.zeros_like(errs), errs)
+    pos = jnp.where(fired, 0, pos)
+    count = jnp.where(fired, 0, count)
+    new_state = DriftState(errs=errs, pos=pos.astype(jnp.int32),
+                           count=count.astype(jnp.int32), armed=armed,
+                           fires=state.fires + fired.astype(jnp.int32))
+    return new_state, fired, score
+
+
+def drift_update(state: DriftState, errs: jax.Array, valid: jax.Array,
+                 params: DriftParams
+                 ) -> tuple[DriftState, jax.Array, jax.Array]:
+    """One monitor tick for a WHOLE fleet: the lane core vmapped over the
+    leading camera axis (scalar inputs run the core directly).  Returns
+    (new_state, fired[N] bool, score[N] f32)."""
+    errs = jnp.asarray(errs, jnp.float32)
+    valid = jnp.asarray(valid, bool)
+    if state.pos.ndim == 0:
+        return _drift_lane_step(state, errs, valid, params)
+    return jax.vmap(_drift_lane_step)(state, errs, valid, params)
+
+
+def relative_size_error(predicted: float, observed: float) -> float:
+    """|observed - predicted| / predicted -- the monitor's residual unit.
+
+    ``predicted`` is the live table's median wire size for the setting the
+    frame shipped under; ``observed`` is the exact deflate byte count that
+    crossed the channel.  Guarded so a degenerate table row (size 0) never
+    poisons the window with inf."""
+    p = max(float(predicted), 1.0)
+    return abs(float(observed) - p) / p
+
+
+class DriftMonitor:
+    """Host orchestrator: N per-camera staleness lanes as ONE jitted,
+    vmapped ``drift_update`` per poll.
+
+    The broker feeds one aggregated observation per camera per poll (the
+    mean relative size error of the frames that camera shipped); lanes with
+    no shipped frames pass ``valid=False`` and hold.  ``observe`` returns
+    the camera ids whose lanes fired this tick -- the exact set the caller
+    re-characterizes.  Like ``FleetController``, the jit cache is
+    per-instance so ``cache_size()`` counts this monitor's variants only
+    (1 = the monitor never retraced across the run).
+    """
+
+    def __init__(self, cam_ids, config: DriftConfig | None = None):
+        self.cam_ids = list(cam_ids)
+        if not self.cam_ids:
+            raise ValueError("DriftMonitor needs at least one camera")
+        self.config = config or DriftConfig()
+        n = len(self.cam_ids)
+        self._lane = {cid: i for i, cid in enumerate(self.cam_ids)}
+        self.state = drift_init(n, self.config.window)
+        self.params = DriftParams.from_config(self.config, n)
+        self._step = jax.jit(
+            lambda st, er, va, pr: drift_update(st, er, va, pr))
+        self.last_scores: dict[str, float] = {}
+
+    def __len__(self) -> int:
+        return len(self.cam_ids)
+
+    def cache_size(self) -> int:
+        """Compiled-variant count of the monitor step (1 = no retraces)."""
+        return self._step._cache_size()
+
+    def observe(self, samples: "dict[str, float]") -> list[str]:
+        """One monitor tick.  ``samples`` maps camera_id -> mean relative
+        size error of the frames that camera shipped this poll (cameras
+        absent from the mapping hold their window).  Returns the camera ids
+        that fired, in lane order."""
+        n = len(self.cam_ids)
+        errs = np.zeros(n, np.float32)
+        valid = np.zeros(n, bool)
+        for cid, err in samples.items():
+            i = self._lane.get(cid)
+            if i is None:
+                continue
+            errs[i] = err
+            valid[i] = True
+        self.state, fired, scores = self._step(
+            self.state, jnp.asarray(errs), jnp.asarray(valid), self.params)
+        fired_np = np.asarray(fired)
+        scores_np = np.asarray(scores)
+        self.last_scores = {cid: float(scores_np[i])
+                            for i, cid in enumerate(self.cam_ids)}
+        return [cid for i, cid in enumerate(self.cam_ids) if fired_np[i]]
+
+    def fire_counts(self) -> dict[str, int]:
+        fires = np.asarray(self.state.fires)
+        return {cid: int(fires[i]) for i, cid in enumerate(self.cam_ids)}

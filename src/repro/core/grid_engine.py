@@ -539,6 +539,9 @@ def refresh_tables(background: np.ndarray, frames: list[np.ndarray], *,
         gts = grid.dets[(0, 0, 0, 0)]
     table = C.table_from_grid(grid, gts, min_accuracy=min_accuracy,
                               include_artifact=include_artifact)
+    # provenance: these tables were swept from live frames, not the
+    # offline calibration campaign (drift tests / fig12 assert on this)
+    table.source = "online-refresh"
     if capacity is not None:
         capacity = max(capacity, len(table.settings))
     return table, JaxControllerTables.from_table(table, capacity=capacity)

@@ -38,7 +38,8 @@ import numpy as np
 
 __all__ = [
     "KnobSetting", "KNOB_GRID", "apply_knobs", "transform_frame", "wire_size",
-    "enumerate_settings", "frame_difference", "TransformMemo",
+    "enumerate_settings", "frame_difference", "change_fraction",
+    "TransformMemo",
     "RESOLUTION_SCALES", "COLORSPACES", "BLUR_KERNELS", "DIFF_THRESHOLDS",
 ]
 
@@ -221,25 +222,36 @@ def _artifact_removal(frame: np.ndarray, background: np.ndarray, mode: str,
     return out
 
 
+def change_fraction(frame: np.ndarray, last_sent: np.ndarray | None, *,
+                    pixel_delta: float = 8.0) -> float | None:
+    """knob5's dissimilarity metric: fraction of pixels whose absolute
+    difference from the last *sent* frame exceeds ``pixel_delta`` (a noise-
+    robust change metric: sensor noise flips <1% of pixels past 8 grey
+    levels, while genuine motion sweeps contiguous regions).  0 = pixel-
+    identical, 1 = every pixel changed; None when there is no comparable
+    previous frame.  Doubles as the broker's scene-ACTIVITY observation:
+    the drift monitor compares the live stream's change fractions against
+    the characterization clip's (``CharacterizationTable.activity``) to
+    spot scene regime shifts that barely move wire sizes."""
+    if last_sent is None or frame.shape != last_sent.shape:
+        return None
+    d = np.abs(frame.astype(np.float32) - last_sent.astype(np.float32))
+    if d.ndim == 3:
+        d = d.mean(axis=-1)
+    return float((d > pixel_delta).mean())
+
+
 def frame_difference(frame: np.ndarray, last_sent: np.ndarray | None,
                      threshold: float, *, pixel_delta: float = 8.0) -> bool:
     """knob5: True = DROP this frame (similar to the last sent one).
 
-    Dissimilarity = fraction of pixels whose absolute difference from the last
-    *sent* frame exceeds ``pixel_delta`` (a noise-robust change metric: sensor
-    noise flips <1% of pixels past 8 grey levels, while genuine motion sweeps
-    contiguous regions).  0 = only pixel-identical frames are dropped; 1 =
-    every pixel changed.  threshold < 0 disables the knob.
+    ``change_fraction`` compared against ``threshold``; threshold < 0
+    disables the knob.
     """
-    if threshold < 0.0 or last_sent is None:
+    if threshold < 0.0:
         return False
-    if frame.shape != last_sent.shape:
-        return False
-    d = np.abs(frame.astype(np.float32) - last_sent.astype(np.float32))
-    if d.ndim == 3:
-        d = d.mean(axis=-1)
-    changed = float((d > pixel_delta).mean())
-    return changed <= threshold
+    changed = change_fraction(frame, last_sent, pixel_delta=pixel_delta)
+    return changed is not None and changed <= threshold
 
 
 # -----------------------------------------------------------------------------

@@ -44,11 +44,13 @@ from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
+from repro.core import detector as det
 from repro.core.api import RPCTimeout
 from repro.core.broker import MezSystem
 from repro.core.channel import calibrated_channel
 from repro.core.characterization import (CharacterizationTable, characterize,
                                          fit_latency_regression)
+from repro.core.drift import DriftConfig
 from repro.core.session import MezClient
 from repro.data.camera import CameraConfig, SyntheticCamera
 
@@ -57,7 +59,7 @@ __all__ = [
     "InterferenceSpike", "CongestionRamp", "DistanceDrift",
     "PeerJoin", "PeerLeave", "CameraCrash", "CameraRecover",
     "EdgeCrash", "EdgeRecover", "QosChange", "TableRefresh",
-    "run_scenario",
+    "SceneShift", "TableStaleness", "run_scenario",
 ]
 
 
@@ -193,7 +195,39 @@ class TableRefresh:
     camera_id: str
 
 
+@dataclasses.dataclass(frozen=True)
+class SceneShift:
+    """Workload shift: ONE camera's scene dynamics regime changes
+    mid-stream (e.g. ``simple`` -> ``complex`` movers).  The background and
+    the frame clock carry over -- only the mover population re-rolls
+    (``SyntheticCamera.set_dynamics``) -- so the camera's installed
+    characterization tables silently go stale: frames from the new regime
+    deflate-compress differently from the calibration clip, which is the
+    signal the drift monitor (``auto_recharacterize``) detects.  Applied at
+    PUBLISH time: the first frame whose timestamp reaches ``at`` is already
+    drawn from the new regime."""
+    at: float
+    camera_id: str
+    dynamics: str = "complex"
+
+
+@dataclasses.dataclass(frozen=True)
+class TableStaleness:
+    """Fault injection: ONE camera's LIVE tables go stale in place
+    (``CamBroker.inject_table_staleness``) -- the size axis is rescaled by
+    ``factor`` while the accuracy claims stay, as if the scene drifted
+    since characterization.  A deterministic, scene-independent way to
+    exercise the drift-detection loop: the predicted-vs-observed wire-size
+    residual steps to ``|1/factor - 1|`` immediately."""
+    at: float
+    camera_id: str
+    factor: float = 0.5
+
+
 _CONTINUOUS = (InterferenceSpike, CongestionRamp, DistanceDrift)
+# applied while frames are being published, before the polling loop starts
+# (the virtual clock of a SceneShift is the publish timestamp)
+_PUBLISH_PHASE = (SceneShift,)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -219,6 +253,17 @@ class ScenarioSpec:
     clip_len: int = 12                 # characterization clip length
     min_accuracy: float = 0.90         # characterization keep floor
     record_decisions: bool = False     # keep fleet decision history (parity)
+    # drift-aware auto-recharacterization: arm the per-subscription
+    # staleness monitor so stale tables (SceneShift / TableStaleness)
+    # re-sweep automatically, no operator QosChange/TableRefresh needed
+    auto_recharacterize: bool = False
+    drift_config: DriftConfig | None = None
+    # score every delivered frame's MEASURED detection accuracy against the
+    # full-quality stream (pseudo-GT, the refresh_tables protocol): (tp,
+    # fp, fn) counts per trace row, aggregated by
+    # ``ScenarioResult.measured_f1``.  Costs one host detector pass per
+    # published + delivered frame; off by default.
+    score_frames: bool = False
     events: tuple = ()
 
 
@@ -257,6 +302,16 @@ class ScenarioResult:
     # host-path runs): 1 proves every retarget/table hot-swap stayed inside
     # one compiled dispatch
     fleet_cache_size: int | None = None
+    # per-row measured detection counts (tp, fp, fn) against the
+    # full-quality pseudo-GT, aligned with ``rows`` (a knob5-dropped row
+    # counts its pseudo-GT as false negatives; whole field None unless
+    # spec.score_frames)
+    measured_counts: list | None = None
+    # drift-monitor telemetry (None unless spec.auto_recharacterize):
+    # compiled-variant count (1 = the vectorized monitor never retraced)
+    # and cumulative fires per camera
+    drift_cache_size: int | None = None
+    drift_fire_counts: dict | None = None
 
     # -- trace queries -------------------------------------------------------
     def select(self, t0: float | None = None, t1: float | None = None, *,
@@ -287,6 +342,31 @@ class ScenarioResult:
         accs = [r.accuracy for r in self.select(t0, t1)
                 if r.accuracy is not None]
         return float(min(accs)) if accs else float("nan")
+
+    def measured_f1(self, t0: float | None = None,
+                    t1: float | None = None, *,
+                    camera_id: str | None = None) -> float:
+        """Windowed MEASURED detection F1 vs the full-quality pseudo-GT
+        (counts aggregated over the window, then F1 -- the paper's
+        evaluation protocol, knob5-dropped frames contributing their
+        pseudo-GT as false negatives).  Because the pseudo-GT is the
+        unmodified stream's own detections, this IS normalized F1: the
+        full-quality arm scores exactly 1.0.  Requires
+        ``spec.score_frames``."""
+        if self.measured_counts is None:
+            raise ValueError("scenario was run without score_frames=True")
+        tp = fp = fn = 0
+        for r, c in zip(self.rows, self.measured_counts):
+            if c is None:
+                continue
+            if t0 is not None and r.timestamp < t0:
+                continue
+            if t1 is not None and r.timestamp >= t1:
+                continue
+            if camera_id is not None and r.camera_id != camera_id:
+                continue
+            tp += c[0]; fp += c[1]; fn += c[2]
+        return det.f1_from_counts(tp, fp, fn)
 
     def p95_latency_ms(self, t0: float | None = None,
                        t1: float | None = None, *,
@@ -353,7 +433,8 @@ class _Engine:
         self.continuous = [e for e in spec.events
                            if isinstance(e, _CONTINUOUS)]
         self.oneshot = sorted(
-            (e for e in spec.events if not isinstance(e, _CONTINUOUS)),
+            (e for e in spec.events
+             if not isinstance(e, _CONTINUOUS + _PUBLISH_PHASE)),
             key=lambda e: e.at)
         self._fired = 0
         self._base_interference = system.channel.config.interference
@@ -425,6 +506,11 @@ class _Engine:
             cam = self.system.cams[ev.camera_id]
             entry["camera_id"] = ev.camera_id
             entry["refreshed"] = cam.recharacterize()
+        elif isinstance(ev, TableStaleness):
+            cam = self.system.cams[ev.camera_id]
+            entry["camera_id"] = ev.camera_id
+            entry["factor"] = ev.factor
+            entry["stale"] = cam.inject_table_staleness(ev.factor)
         else:
             raise TypeError(f"unknown scenario event {type(ev).__name__}")
         self.log.append(entry)
@@ -440,11 +526,19 @@ def run_scenario(
     ``table_provider`` maps a dynamics name to a ``CharacterizationTable``
     (tests inject synthetic or cached tables; default runs the batched
     ``characterize`` sweep once per distinct dynamics).  ``tables`` is a
-    pre-resolved mapping taking precedence over the provider.
+    pre-resolved mapping taking precedence over the provider; its keys may
+    be dynamics names OR camera ids -- a camera-id key wins, so
+    heterogeneous fleets can run per-camera calibrated tables (the fig12
+    benchmark does: a table characterized on one camera's background is
+    already mildly stale for another's, which would trip the drift
+    monitor before the scripted shift).
     """
     resolved: dict[str, CharacterizationTable] = dict(tables or {})
 
-    def table_for(dynamics: str, seed: int) -> CharacterizationTable:
+    def table_for(camera_id: str, dynamics: str,
+                  seed: int) -> CharacterizationTable:
+        if camera_id in resolved:
+            return resolved[camera_id]
         if dynamics not in resolved:
             if table_provider is not None:
                 resolved[dynamics] = table_provider(dynamics)
@@ -460,6 +554,10 @@ def run_scenario(
     system = MezSystem(ch)
     n_cams = len(spec.cameras)
     fps = max(c.fps for c in spec.cameras)
+    events_log: list[dict] = []
+    # full-quality pseudo-GT detections per published frame, keyed by
+    # (camera_id, timestamp) -- only populated under spec.score_frames
+    base_dets: dict[tuple[str, float], np.ndarray] = {}
     for cs in spec.cameras:
         cam = system.add_camera(cs.camera_id, distance_m=cs.distance_m,
                                 fps=cs.fps)
@@ -467,17 +565,34 @@ def run_scenario(
             camera_id=cs.camera_id, dynamics=cs.dynamics, seed=cs.seed,
             fps=cs.fps))
         cam.background = src.background
-        tbl = table_for(cs.dynamics, cs.seed)
+        tbl = table_for(cs.camera_id, cs.dynamics, cs.seed)
         sizes = np.linspace(tbl.sizes_sorted[0], tbl.sizes_sorted[-1], 16)
         reg = fit_latency_regression(
             sizes, ch.regression_points(sizes, n=n_cams))
         cam.set_target(spec.latency, spec.accuracy, tbl, reg)
-        for ts, frame, _ in src.stream(spec.frames):
+        shifts = sorted((e for e in spec.events
+                         if isinstance(e, SceneShift)
+                         and e.camera_id == cs.camera_id),
+                        key=lambda e: e.at)
+        si = 0
+        for fi in range(spec.frames):
+            # the shift lands on the first frame whose timestamp reaches it
+            while si < len(shifts) and fi / cs.fps >= shifts[si].at:
+                src.set_dynamics(shifts[si].dynamics)
+                events_log.append({"t": fi / cs.fps, "at": shifts[si].at,
+                                   "kind": "SceneShift",
+                                   "camera_id": cs.camera_id,
+                                   "dynamics": shifts[si].dynamics})
+                si += 1
+            ts, frame, _ = src.next_frame()
             cam.publish(ts, frame)
+            if spec.score_frames:
+                base_dets[(cs.camera_id, float(ts))] = det.detect(
+                    frame, src.background)
 
     client = MezClient(system)
-    events_log: list[dict] = []
     rows: list[TraceRow] = []
+    measured: list[tuple[int, int, int] | None] = []
     max_frames = spec.max_frames_per_poll or n_cams * spec.credit_limit
     sess = client.open_session(f"scenario-{spec.name}")
     try:
@@ -486,7 +601,9 @@ def run_scenario(
                              latency=spec.latency, accuracy=spec.accuracy,
                              controlled=spec.controlled, fleet=spec.fleet,
                              feedback_window=spec.feedback_window,
-                             credit_limit=spec.credit_limit)
+                             credit_limit=spec.credit_limit,
+                             auto_recharacterize=spec.auto_recharacterize,
+                             drift_config=spec.drift_config)
         fleet = system.edge.subscription_fleet(sub.subscription_id)
         if fleet is not None and spec.record_decisions:
             fleet.record_history = True
@@ -519,6 +636,26 @@ def run_scenario(
                             d.knob_index])
                     else:
                         acc = 1.0          # raw frame = full fidelity
+                counts = None
+                if spec.score_frames and cam is not None:
+                    base = base_dets.get((d.camera_id, float(d.timestamp)))
+                    if base is not None and d.frame is None:
+                        # knob5-dropped: the application never saw the
+                        # frame, its pseudo-GT becomes false negatives
+                        # (detector.normalized_f1's protocol)
+                        counts = (0, 0, len(base))
+                    elif base is not None:
+                        if d.knob_index >= 0 and cam.controller is not None:
+                            setting = cam.controller.table.setting_for(
+                                d.knob_index)
+                            bg = cam.degraded_background(setting)
+                        else:
+                            bg = cam.background
+                        boxes = det.detect(
+                            np.asarray(d.frame), bg,
+                            scale_to=cam.background.shape[:2])
+                        counts = det.match_f1(base, boxes)
+                measured.append(counts)
                 rows.append(TraceRow(
                     camera_id=d.camera_id,
                     timestamp=float(d.timestamp),
@@ -538,6 +675,9 @@ def run_scenario(
         fleet = system.edge.subscription_fleet(sub.subscription_id)
         history = list(fleet.history) if fleet is not None else []
         cache_size = fleet.cache_size() if fleet is not None else None
+        drift = system.edge.subscription_drift(sub.subscription_id)
+        drift_cache = drift.cache_size() if drift is not None else None
+        drift_fires = drift.fire_counts() if drift is not None else None
     finally:
         try:
             sess.close()
@@ -547,4 +687,7 @@ def run_scenario(
         name=spec.name, rows=rows, events_log=events_log,
         fleet_history=history,
         camera_ids=tuple(c.camera_id for c in spec.cameras),
-        fleet_cache_size=cache_size)
+        fleet_cache_size=cache_size,
+        measured_counts=measured if spec.score_frames else None,
+        drift_cache_size=drift_cache,
+        drift_fire_counts=drift_fires)

@@ -63,8 +63,9 @@ class Session:
     def subscribe(self, camera_ids: str | Sequence[str], t_start: float,
                   t_stop: float, *, latency: float, accuracy: float,
                   controlled: bool = True, feedback_window: int = 8,
-                  credit_limit: int = 2, fleet: bool = False
-                  ) -> "Subscription":
+                  credit_limit: int = 2, fleet: bool = False,
+                  auto_recharacterize: bool = False,
+                  drift_config=None) -> "Subscription":
         """Subscribe one or many cameras under shared QoS bounds; frames from
         all of them arrive timestamp-merged through one ``poll()``.
 
@@ -73,6 +74,15 @@ class Session:
         per-poll control cost is ~flat in camera count, and per-camera QoS
         retargets / table refreshes hot-swap into the compiled step without
         recompiling.
+
+        ``auto_recharacterize=True`` arms the drift-aware refresh loop: a
+        vectorized staleness monitor watches each camera's observed wire
+        sizes against its live table's predictions and re-characterizes a
+        camera automatically when its windowed drift score crosses the
+        hysteresis threshold -- no ``update_qos(recharacterize=True)``
+        needed when the scene regime shifts mid-stream.  Refreshes surface
+        as ``TABLE_REFRESH`` events on ``events()``.  ``drift_config`` is an
+        optional ``repro.core.drift.DriftConfig`` tuning window/thresholds.
         """
         if isinstance(camera_ids, str):
             camera_ids = [camera_ids]
@@ -81,7 +91,8 @@ class Session:
         sub_id = self._edge.create_subscription(
             self.session_id, specs, controlled=controlled,
             feedback_window=feedback_window, credit_limit=credit_limit,
-            fleet=fleet)
+            fleet=fleet, auto_recharacterize=auto_recharacterize,
+            drift_config=drift_config)
         return Subscription(self._edge, sub_id, tuple(camera_ids))
 
     def events(self) -> list[SessionEvent]:

@@ -65,6 +65,11 @@ class SyntheticCamera:
             np.random.SeedSequence([config.seed, cam_hash]))
         self._t = 0
         self.background = self._make_background()
+        self._spawn_movers()
+
+    def _spawn_movers(self) -> None:
+        """Roll a mover population for the CURRENT dynamics regime."""
+        config = self.config
         n = int(self._rng.integers(self.dyn.num_objects[0], self.dyn.num_objects[1] + 1))
         h, w = config.height, config.width
         self._pos = self._rng.uniform([0, 0], [h - 1, w - 1], size=(n, 2))
@@ -75,6 +80,18 @@ class SyntheticCamera:
         # pedestrians are taller than wide
         self._sizes[:, 0] = (self._sizes[:, 0] * 1.8).astype(self._sizes.dtype)
         self._shades = self._rng.integers(150, 255, size=(n, config.channels))
+
+    def set_dynamics(self, dynamics: str) -> None:
+        """Mid-stream scene regime change (workload shift): the mover
+        population re-rolls under the new regime while the background, the
+        frame clock, and the rng stream all carry over -- the scripted
+        analogue of a quiet corridor turning into a rush-hour crowd, which
+        is exactly the shift that makes characterization tables stale
+        (scenario event ``SceneShift``).  Deterministic given the camera's
+        seed and the stream position at which it is called."""
+        self.dyn = _DYNAMICS[dynamics]
+        self.config = dataclasses.replace(self.config, dynamics=dynamics)
+        self._spawn_movers()
 
     # -- scene pieces -----------------------------------------------------------
     def _make_background(self) -> np.ndarray:

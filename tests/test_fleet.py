@@ -257,3 +257,74 @@ class TestFleetScenarioParity:
         assert refreshed and refreshed[0]["refreshed"] is True
         assert res.fleet_cache_size == 1
         assert len(res.rows) == 3 * 40
+
+
+class TestFleetDriftParity:
+    """The PR 5 satellite: drift-aware AUTO-recharacterization across a
+    mid-run ``SceneShift`` produces bit-identical traces on the fleet and
+    host control paths, and the compiled fleet step survives the
+    drift-triggered per-lane hot-swaps with cache size 1."""
+
+    @pytest.fixture(scope="class")
+    def drift_tables(self):
+        from repro.core.characterization import characterize
+        from repro.data.camera import CameraConfig, SyntheticCamera
+
+        def table(cid):
+            return characterize(
+                lambda: SyntheticCamera(CameraConfig(
+                    camera_id=cid, dynamics="simple", seed=7)),
+                clip_len=10, min_accuracy=0.90)
+        return {cid: table(cid) for cid in ("cam0", "cam1", "cam2")}
+
+    def _spec(self, **kw):
+        from repro.core.scenario import SceneShift
+        base = dict(
+            name="fleet-drift-parity",
+            cameras=tuple(CameraSpec(f"cam{i}", dynamics="simple")
+                          for i in range(3)),
+            frames=40, seed=9, workload="jaad",
+            latency=0.100, accuracy=0.95, min_accuracy=0.90,
+            fleet=True, auto_recharacterize=True,
+            events=(SceneShift(at=3.0, camera_id="cam1",
+                               dynamics="complex"),),
+        )
+        base.update(kw)
+        return ScenarioSpec(**base)
+
+    def test_auto_recharacterization_fleet_matches_host_bit_for_bit(
+            self, drift_tables):
+        flt = run_scenario(self._spec(), tables=drift_tables)
+        host = run_scenario(self._spec(fleet=False), tables=drift_tables)
+        # the drift loop actually ran: the shifted camera re-swept, the
+        # stationary cameras did not, on BOTH control paths identically
+        for res in (flt, host):
+            refreshed = [e for e in res.events_log
+                         if e.get("kind") == "table_refresh"]
+            assert refreshed, res.events_log
+            assert {e["camera_id"] for e in refreshed} == {"cam1"}
+            assert res.drift_fire_counts["cam1"] >= 1
+            assert res.drift_fire_counts["cam0"] == 0
+            assert res.drift_fire_counts["cam2"] == 0
+            assert res.drift_cache_size == 1
+        assert flt.to_json() == host.to_json()
+        # drift-triggered per-lane table swaps never recompile the fleet
+        assert flt.fleet_cache_size == 1
+        assert host.fleet_cache_size is None      # host path has no fleet
+
+    def test_sync_reports_exactly_the_refreshed_lanes(self):
+        """``FleetController.sync`` returns the lane sets it rewrote --
+        the drift loop's contract that a refresh touches exactly the fired
+        cameras."""
+        cams, hosts, fleet, rng = build_fleet(6)
+        assert fleet.sync() == ([], [])
+        fresh = synthetic_table(18)
+        for i in (1, 4):
+            cams[i].controller.swap_table(fresh)
+            cams[i].table_version += 1
+        cams[2].controller.set_target(0.08, 0.91)
+        cams[2].qos_version += 1
+        swapped, retargeted = fleet.sync()
+        assert swapped == [1, 4]
+        assert retargeted == [2]
+        assert fleet.sync() == ([], [])

@@ -201,6 +201,59 @@ class TestControlLawProperties:
                 assert d.setting is not None
 
 
+class TestDriftDetectorProperties:
+    """Staleness-monitor invariants (core/drift.py) under arbitrary
+    residual sequences -- the drift-aware auto-recharacterization loop's
+    false-positive / detection-latency / no-flapping bars."""
+
+    from repro.core.drift import DriftConfig as _DC
+    CFG = _DC(window=8, hi=0.35, lo=0.15, min_samples=4)
+
+    @classmethod
+    def _run(cls, errs):
+        from repro.core.drift import DriftParams, drift_init, drift_update
+        state = drift_init(None, cls.CFG.window)
+        params = DriftParams.from_config(cls.CFG)
+        fires = []
+        for e in errs:
+            state, fired, _ = drift_update(state, e, True, params)
+            fires.append(bool(fired))
+        return fires, state
+
+    @given(st.lists(st.floats(0.0, 0.35 * 0.98), min_size=1, max_size=60))
+    @settings(**SETTINGS)
+    def test_never_fires_on_stationary_scene(self, errs):
+        """False-positive bound: whatever the sequence, samples at or
+        below the hi threshold never fire (a windowed mean of values <= hi
+        cannot exceed hi)."""
+        fires, _ = self._run(errs)
+        assert not any(fires)
+
+    @given(st.lists(st.floats(0.0, 0.15 * 0.9), min_size=0, max_size=30),
+           st.floats(0.35 * 1.01, 50.0))
+    @settings(**SETTINGS)
+    def test_sustained_step_fires_within_one_window(self, warmup, step):
+        """Detection-latency bound: whatever quiet history the window
+        holds, a sustained residual step above hi fires within W samples
+        (after W pushes only step samples remain, so the mean exceeds
+        hi; min_samples <= W)."""
+        fires, _ = self._run(list(warmup) + [step] * self.CFG.window)
+        assert not any(fires[:len(warmup)])
+        assert any(fires[len(warmup):])
+
+    @given(st.lists(st.floats(0.15 * 1.05, 50.0), min_size=1,
+                    max_size=120))
+    @settings(**SETTINGS)
+    def test_hysteresis_prevents_flapping(self, errs):
+        """Once fired, the lane disarms and only re-arms after the score
+        drops below lo: a sequence that never recovers below lo fires at
+        most once, however long it stays elevated."""
+        fires, state = self._run(errs)
+        assert sum(fires) <= 1
+        if any(fires):
+            assert not bool(state.armed)
+
+
 class TestQuantizeProperties:
     @given(st.integers(0, 2 ** 31 - 1), st.sampled_from([8, 4]))
     @settings(**SETTINGS)

@@ -171,3 +171,45 @@ class TestApproxComm:
         np.testing.assert_array_equal(np.asarray(out["small"]),
                                       np.asarray(grads["small"]))
         assert np.abs(np.asarray(out["big"]) - 0.37).max() < 0.37 / 127
+
+    def test_collective_controller_closed_loop(self):
+        """ROADMAP PR 4 follow-up: the compression level is driven by the
+        JITTED controller (one-lane ``fleet_controller_step`` on the
+        shared ``ControllerParams`` path) -- decisions bit-identical to the
+        host PI controller, levels drop under link contention and recover
+        after, the fidelity floor governs every feasible decision, and the
+        whole run compiles exactly once."""
+        from repro.core.approx_comm import (CollectiveController,
+                                            collective_bytes_for,
+                                            fidelity_table)
+        from repro.core.characterization import LatencyRegression
+        from repro.core.controller import (ControllerConfig,
+                                           LatencyController)
+        grad_bytes = 4e6
+        fidelity = {16: 1.0, 8: 0.999, 4: 0.985}
+        bw = 3e9
+        target = 1.5 * grad_bytes / bw
+        ctl = CollectiveController(grad_bytes, fidelity,
+                                   latency_target=target,
+                                   fidelity_floor=0.98, slope=1.0 / bw)
+        host = LatencyController(
+            ControllerConfig(target, 0.98, error_threshold=0.05 * target),
+            fidelity_table(grad_bytes, fidelity),
+            LatencyRegression(slope=1.0 / bw, intercept=1e-4))
+        bits, used = 16, []
+        for step in range(60):
+            contention = 8.0 if 20 <= step < 40 else 1.0
+            lat = (collective_bytes_for(grad_bytes, bits)
+                   / (bw / contention) + 1e-4)
+            d = ctl.update(lat)
+            dh = host.update(lat)
+            assert d.setting_index == dh.setting_index, step
+            assert d.acted == dh.acted, step
+            assert d.feasible == dh.feasible, step
+            if d.feasible and d.setting_index >= 0:
+                assert fidelity[d.bits] >= 0.98
+            bits = d.bits
+            used.append(bits)
+        assert min(used[20:40]) < 16       # compressed under contention
+        assert used[-1] == 16              # relaxed back to exact transport
+        assert ctl.cache_size() == 1
