@@ -1,0 +1,68 @@
+"""mezlint wall-time + finding counts -> ``BENCH_mezlint.json``.
+
+The lint gates every PR, so its cost is part of the CI budget: this
+benchmark times a full ``src/`` run (index build + all rules) and
+records per-rule finding counts before suppression/baseline filtering,
+plus the post-filter count the gate actually sees.  Artifacts land at
+the repo root (CI upload) and in ``RESULTS_DIR`` via ``common.emit``.
+
+Run: ``PYTHONPATH=src python -m benchmarks.mezlint_bench``
+"""
+
+from __future__ import annotations
+
+import collections
+import json
+import os
+
+from benchmarks.common import Timer, emit
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.astindex import Index
+from repro.analysis.mezlint import DEFAULT_BASELINE
+from repro.analysis.rules import ALL_RULES, apply_suppressions
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ROOT_OUT = os.path.join(REPO, "BENCH_mezlint.json")
+REPEATS = 3
+
+
+def main() -> None:
+    src = os.path.join(REPO, "src")
+    runs = []
+    for _ in range(REPEATS):
+        with Timer() as t_index:
+            idx = Index.build([src])
+        with Timer() as t_rules:
+            # pre-suppression findings, so the per-rule counts include
+            # what justification comments are hiding
+            raw = [f for fn in ALL_RULES.values() for f in fn(idx)]
+        runs.append((t_index.seconds, t_rules.seconds))
+    t_index_s = min(r[0] for r in runs)
+    t_rules_s = min(r[1] for r in runs)
+
+    unsuppressed = apply_suppressions(idx, raw)
+    accepted = baseline_mod.load(os.path.join(REPO, DEFAULT_BASELINE))
+    new, old = baseline_mod.split(unsuppressed, accepted)
+
+    by_rule = collections.Counter(f.rule for f in raw)
+    payload = {
+        "index_s": round(t_index_s, 4),
+        "rules_s": round(t_rules_s, 4),
+        "total_s": round(t_index_s + t_rules_s, 4),
+        "modules": len(idx.modules),
+        "functions": len(idx.functions),
+        "raw_findings_by_rule": dict(sorted(by_rule.items())),
+        "suppressed": len(raw) - len(unsuppressed),
+        "baseline_accepted": len(old),
+        "new_findings": len(new),
+    }
+    emit("BENCH_mezlint", (t_index_s + t_rules_s) * 1e6,
+         f"{len(new)} new findings", payload)
+    with open(ROOT_OUT, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    print(f"mezlint bench: {payload['total_s'] * 1e3:.0f} ms over "
+          f"{payload['modules']} modules; artifacts: {ROOT_OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Static + runtime discipline checks for the Mez reproduction.
+
+``python -m repro.analysis.mezlint src/`` runs the AST lint (rules
+MZ01-MZ05: trace discipline, retrace smells, lock discipline, dtype
+contracts, Pallas kernel hygiene).  The runtime counterparts live here
+too: ``trace_guard`` (fails a test on unexpected jit recompiles) and
+``race_guard`` (lockset-instrumented locks for the threaded soak tests).
+
+Import surface is kept lazy-friendly: importing ``repro.analysis`` pulls
+no JAX, so the linter can run in a bare CI job.
+"""
+
+from repro.analysis.trace_guard import (TraceGuardError, assert_compiled_once,
+                                        trace_guard)
+
+__all__ = ["trace_guard", "assert_compiled_once", "TraceGuardError"]

@@ -1,0 +1,751 @@
+"""AST index over the repro source tree.
+
+This is the substrate the ``mezlint`` rules (MZ01-MZ05) query: modules,
+functions, jit / Pallas entry points, a name-resolution call graph, and a
+trace-time *staticness* dataflow.  Resolution is by name, not by type --
+deliberately heuristic, tuned to this repo's idioms:
+
+  * decorator jit (``@jax.jit`` / ``@functools.partial(jax.jit, ...)``),
+  * per-instance jit wrappers (``self._step = jax.jit(lambda ...)``),
+  * ``functools.partial``-bound Pallas kernels with static-only kwargs,
+  * higher-order combinators (``vmap`` / ``scan`` / ``shard_map`` / ...)
+    that carry traced execution into their function arguments.
+
+Inline markers (all plain comments, so they cost nothing at runtime):
+
+  ``# mezlint: jit-entry``          on/above a ``def``: treat as a jit
+                                    entry point even though the ``jax.jit``
+                                    call lives elsewhere (e.g. in tests).
+  ``# mezlint: ref-parity: <sym>``  module-level declaration that this
+                                    Pallas module's kernels are oracle-
+                                    checked against ``<sym>`` in
+                                    ``repro.kernels.ref`` (rule MZ05).
+  ``# guarded-by: <lock>``          trailing a field assignment: the field
+                                    may only be touched while ``<lock>``
+                                    is held (rule MZ03).
+  ``# holds-lock: <lock>[, ...]``   on/above a ``def``: the method is only
+                                    ever called with these locks already
+                                    held (callers are checked instead).
+  ``# mezlint: disable=MZxx -- why``  suppress findings on this (or the
+                                    next) line; the justification is
+                                    mandatory -- a bare disable is itself
+                                    reported.
+"""
+
+from __future__ import annotations
+
+import ast
+import builtins
+import dataclasses
+import re
+from pathlib import Path
+
+_BUILTIN_NAMES = frozenset(dir(builtins))
+
+SUPPRESS_RE = re.compile(
+    r"#\s*mezlint:\s*disable=([A-Z]{2}\d{2}(?:\s*,\s*[A-Z]{2}\d{2})*)"
+    r"(?:\s*--\s*(.*\S))?\s*$")
+JIT_ENTRY_RE = re.compile(r"#\s*mezlint:\s*jit-entry\b")
+REF_PARITY_RE = re.compile(r"#\s*mezlint:\s*ref-parity:\s*([\w.]+)")
+GUARDED_BY_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_]\w*)")
+HOLDS_LOCK_RE = re.compile(
+    r"#\s*holds-lock:\s*([A-Za-z_]\w*(?:\s*,\s*[A-Za-z_]\w*)*)")
+
+# Higher-order combinators whose function arguments execute in the caller's
+# trace context: an edge caller -> f is added for ``vmap(f)`` etc.
+HOF_NAMES = {"vmap", "pmap", "scan", "while_loop", "cond", "switch",
+             "fori_loop", "map", "associative_scan", "shard_map",
+             "checkpoint", "remat", "custom_vjp", "custom_jvp", "partial",
+             "grad", "value_and_grad"}
+
+# Attribute reads that are static at trace time regardless of the base.
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding"}
+
+# Builtins whose result is static when every argument is static.
+STATIC_CALLS = {"len", "range", "int", "float", "bool", "str", "min", "max",
+                "abs", "round", "tuple", "list", "set", "dict", "sorted",
+                "sum", "isinstance", "enumerate", "zip", "divmod", "getattr",
+                "hasattr", "repr"}
+
+# A parameter annotated with one of these is host-static by convention
+# (matches how jit static_argnames are typed throughout the repo).
+_STATIC_ANN = re.compile(
+    r"^(?:int|bool|float|str|bytes|tuple\[[^]]*\]"
+    r"|(?:int|bool|float|str)\s*\|\s*None"
+    r"|None\s*\|\s*(?:int|bool|float|str))$")
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Name) and node.id == "jit") or (
+        isinstance(node, ast.Attribute) and node.attr == "jit")
+
+
+def _is_partial(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Name) and node.id == "partial") or (
+        isinstance(node, ast.Attribute) and node.attr == "partial")
+
+
+def _callee_tail(func: ast.AST) -> str | None:
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return None
+
+
+def _const_names(node: ast.AST) -> list[str]:
+    """Names in a ``static_argnames=``-style constant ("x" or ("x", "y"))."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+    return []
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    name: str                                 # dotted import path
+    path: str
+    tree: ast.Module
+    lines: list[str]
+    suppressions: dict[int, tuple[frozenset, str]]  # line -> (rules, why)
+    bare_disables: list[int]                  # disables missing -- why
+    ref_parity: list[str]
+    aliases: dict[str, str]                   # local name -> dotted module
+    from_imports: dict[str, tuple[str, str]]  # local name -> (module, symbol)
+    globals: set[str] = dataclasses.field(default_factory=set)
+
+    def line(self, lineno: int) -> str:
+        return self.lines[lineno - 1] if 0 < lineno <= len(self.lines) else ""
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    qualname: str           # module[.Class].name  (lambdas: <lambda@LINE>)
+    name: str
+    module: ModuleInfo
+    node: ast.AST           # FunctionDef | AsyncFunctionDef | Lambda
+    cls: str | None
+    params: list[str]
+    static_params: set[str]
+    lineno: int
+    entry: str | None = None        # "jit" | "pallas" | "marker" | None
+    holds_locks: frozenset = frozenset()
+    locals_: dict[str, str] = dataclasses.field(default_factory=dict)
+    # nested def name -> qualname
+
+
+@dataclasses.dataclass
+class PallasSite:
+    module: ModuleInfo
+    node: ast.Call
+    encl: FunctionInfo | None
+    kernels: list[FunctionInfo]   # resolved candidates (branchy callsites
+    keywords: set[str]            # may select between several kernels)
+
+
+@dataclasses.dataclass
+class JitWrapSite:
+    module: ModuleInfo
+    node: ast.Call
+    encl: FunctionInfo | None
+    self_assign_in_init: bool
+
+
+@dataclasses.dataclass
+class EntryCallSite:
+    """A call that resolves to a known jit entry (for MZ02 stability)."""
+    module: ModuleInfo
+    node: ast.Call
+    encl: FunctionInfo
+    target: FunctionInfo
+    loop_names: frozenset   # loop-variable names in scope at the call
+
+
+def _params_of(node: ast.AST) -> list[str]:
+    a = node.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def _static_params_of(node: ast.AST) -> set[str]:
+    """Annotation / constant-default derived static parameters."""
+    out: set[str] = set()
+    a = node.args
+    ordered = a.posonlyargs + a.args
+    # defaults align with the tail of the positional params
+    for p, d in zip(ordered[len(ordered) - len(a.defaults):], a.defaults):
+        if _is_const_default(d):
+            out.add(p.arg)
+    for p, d in zip(a.kwonlyargs, a.kw_defaults):
+        if d is not None and _is_const_default(d):
+            out.add(p.arg)
+    for p in ordered + a.kwonlyargs:
+        if p.annotation is not None:
+            try:
+                ann = ast.unparse(p.annotation)
+            except Exception:  # pragma: no cover - malformed annotation
+                continue
+            if _STATIC_ANN.match(ann.strip()):
+                out.add(p.arg)
+    return out
+
+
+def _is_const_default(d: ast.AST) -> bool:
+    if isinstance(d, ast.Constant):
+        return True
+    if isinstance(d, (ast.Tuple, ast.List)):
+        return all(_is_const_default(e) for e in d.elts)
+    if isinstance(d, ast.UnaryOp):
+        return _is_const_default(d.operand)
+    return False
+
+
+class Index:
+    """Cross-module function index + call graph."""
+
+    def __init__(self) -> None:
+        self.modules: dict[str, ModuleInfo] = {}
+        self.functions: dict[str, FunctionInfo] = {}
+        self.classes: dict[str, set[str]] = {}      # fq class -> method names
+        self.calls: dict[str, set[str]] = {}        # caller -> callees
+        self.pallas_sites: list[PallasSite] = []
+        self.jit_wraps: list[JitWrapSite] = []
+        self.entry_calls: list[EntryCallSite] = []
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def build(cls, paths: list[str]) -> "Index":
+        idx = cls()
+        for path in _py_files(paths):
+            idx._add_module(path)
+        for mod in list(idx.modules.values()):
+            idx._scan_module(mod)
+        return idx
+
+    def _add_module(self, path: Path) -> None:
+        src = path.read_text()
+        try:
+            tree = ast.parse(src)
+        except SyntaxError:
+            return
+        lines = src.splitlines()
+        sup: dict[int, tuple[frozenset, str]] = {}
+        bare: list[int] = []
+        parity: list[str] = []
+        for i, ln in enumerate(lines, start=1):
+            m = SUPPRESS_RE.search(ln)
+            if m:
+                rules = frozenset(r.strip() for r in m.group(1).split(","))
+                why = (m.group(2) or "").strip()
+                if why:
+                    sup[i] = (rules, why)
+                else:
+                    bare.append(i)
+            m = REF_PARITY_RE.search(ln)
+            if m:
+                parity.append(m.group(1))
+        mod = ModuleInfo(name=_module_name(path), path=str(path), tree=tree,
+                         lines=lines, suppressions=sup, bare_disables=bare,
+                         ref_parity=parity, aliases={}, from_imports={})
+        for node in tree.body:
+            if isinstance(node, ast.Import):
+                for al in node.names:
+                    mod.aliases[al.asname or al.name.split(".")[0]] = al.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for al in node.names:
+                    local = al.asname or al.name
+                    mod.from_imports[local] = (node.module, al.name)
+                    # ``from repro.kernels import frame_knobs as FK`` imports
+                    # a module, not a symbol -- keep it usable as an alias.
+                    mod.aliases.setdefault(local,
+                                           f"{node.module}.{al.name}")
+            elif isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                for t in ast.walk(node):
+                    if isinstance(t, ast.Name) and isinstance(t.ctx, ast.Store):
+                        mod.globals.add(t.id)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.ClassDef)):
+                mod.globals.add(node.name)
+        mod.globals.update(mod.aliases)
+        mod.globals.update(mod.from_imports)
+        self.modules[mod.name] = mod
+        self._register_functions(mod, mod.tree.body, cls_name=None, prefix="")
+
+    def _register_functions(self, mod: ModuleInfo, body, cls_name, prefix):
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qn = f"{mod.name}.{prefix}{node.name}"
+                fi = FunctionInfo(
+                    qualname=qn, name=node.name, module=mod, node=node,
+                    cls=cls_name, params=_params_of(node),
+                    static_params=_static_params_of(node), lineno=node.lineno)
+                self._apply_decorators(fi)
+                self._apply_def_markers(fi)
+                self.functions[qn] = fi
+                if cls_name:
+                    self.classes.setdefault(f"{mod.name}.{cls_name}",
+                                            set()).add(node.name)
+                # nested defs (one level is all the repo uses)
+                self._register_functions(mod, node.body, cls_name,
+                                         prefix=f"{prefix}{node.name}.")
+            elif isinstance(node, ast.ClassDef):
+                self.classes.setdefault(f"{mod.name}.{node.name}", set())
+                self._register_functions(mod, node.body, node.name,
+                                         prefix=f"{node.name}.")
+
+    def _apply_decorators(self, fi: FunctionInfo) -> None:
+        for dec in getattr(fi.node, "decorator_list", []):
+            if _is_jit_expr(dec):
+                fi.entry = "jit"
+            elif isinstance(dec, ast.Call):
+                if _is_jit_expr(dec.func):
+                    fi.entry = "jit"
+                    self._bind_static_kwargs(fi, dec.keywords)
+                elif (_is_partial(dec.func) and dec.args
+                      and _is_jit_expr(dec.args[0])):
+                    fi.entry = "jit"
+                    self._bind_static_kwargs(fi, dec.keywords)
+
+    def _bind_static_kwargs(self, fi: FunctionInfo, keywords) -> None:
+        for kw in keywords:
+            if kw.arg == "static_argnames":
+                fi.static_params.update(_const_names(kw.value))
+            elif kw.arg == "static_argnums":
+                nums = []
+                if isinstance(kw.value, ast.Constant):
+                    nums = [kw.value.value]
+                elif isinstance(kw.value, (ast.Tuple, ast.List)):
+                    nums = [e.value for e in kw.value.elts
+                            if isinstance(e, ast.Constant)]
+                for n in nums:
+                    if isinstance(n, int) and n < len(fi.params):
+                        fi.static_params.add(fi.params[n])
+
+    def _apply_def_markers(self, fi: FunctionInfo) -> None:
+        mod = fi.module
+        for ln in (fi.lineno, fi.lineno - 1):
+            text = mod.line(ln)
+            if JIT_ENTRY_RE.search(text) and fi.entry is None:
+                fi.entry = "marker"
+            m = HOLDS_LOCK_RE.search(text)
+            if m:
+                fi.holds_locks = frozenset(
+                    x.strip() for x in m.group(1).split(","))
+
+    # -- pass 2: wraps, kernels, call edges ----------------------------------
+    def _scan_module(self, mod: ModuleInfo) -> None:
+        scanned: set[str] = set()
+        pending = [f for f in self.functions.values() if f.module is mod]
+        while pending:
+            fi = pending.pop()
+            if fi.qualname in scanned:
+                continue
+            scanned.add(fi.qualname)
+            self._scan_body(mod, fi, body_of(fi.node), frozenset())
+            # jit-wrapped lambdas registered while scanning get their own pass
+            pending.extend(f for f in self.functions.values()
+                           if f.module is mod and f.qualname not in scanned)
+        # module/class-level statements (outside any def)
+        self._scan_body(mod, None, _toplevel_stmts(mod.tree), frozenset())
+
+    def _scan_body(self, mod, encl, stmts, loop_names) -> None:
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue            # scanned under its own FunctionInfo
+            if isinstance(st, ast.ClassDef):
+                self._scan_body(mod, encl, st.body, loop_names)
+                continue
+            if isinstance(st, (ast.For, ast.AsyncFor)):
+                names = loop_names | frozenset(
+                    n.id for n in ast.walk(st.target)
+                    if isinstance(n, ast.Name))
+                self._scan_exprs(mod, encl, [st.iter], loop_names)
+                self._scan_body(mod, encl, st.body + st.orelse, names)
+                continue
+            if isinstance(st, ast.While):
+                self._scan_exprs(mod, encl, [st.test], loop_names)
+                self._scan_body(mod, encl, st.body + st.orelse,
+                                loop_names | frozenset(["<while>"]))
+                continue
+            inner = [n for n in ast.iter_child_nodes(st)
+                     if isinstance(n, ast.stmt)]
+            if inner:
+                other = [n for n in ast.iter_child_nodes(st)
+                         if not isinstance(n, ast.stmt)]
+                self._scan_exprs(mod, encl, other, loop_names)
+                self._scan_body(mod, encl, inner, loop_names)
+            else:
+                self._scan_exprs(mod, encl, [st], loop_names)
+
+    def _scan_exprs(self, mod, encl, roots, loop_names) -> None:
+        # manual walk so nested lambda bodies are NOT attributed to the
+        # enclosing function -- a jit-wrapped lambda is its own FunctionInfo
+        # and gets its own scan pass
+        stack = list(roots)
+        while stack:
+            node = stack.pop()
+            if isinstance(node, ast.Lambda):
+                continue
+            if isinstance(node, ast.Call):
+                self._handle_call(mod, encl, node, loop_names)
+            stack.extend(ast.iter_child_nodes(node))
+
+    def _handle_call(self, mod, encl, call: ast.Call, loop_names) -> None:
+        func = call.func
+        caller = encl.qualname if encl else f"{mod.name}.<module>"
+        # jit wrap: jax.jit(f, ...) / jax.jit(lambda: ...)
+        if _is_jit_expr(func) and call.args:
+            in_init = bool(encl and encl.name == "__init__")
+            self.jit_wraps.append(JitWrapSite(
+                module=mod, node=call, encl=encl,
+                self_assign_in_init=in_init))
+            target = self._resolve_callable(mod, encl, call.args[0])
+            if target is not None:
+                target.entry = target.entry or "jit"
+                self._bind_static_kwargs(target, call.keywords)
+            return
+        # pallas_call(kernel, ...)
+        if isinstance(func, ast.Attribute) and func.attr == "pallas_call" \
+                or (isinstance(func, ast.Name) and func.id == "pallas_call"):
+            kernels = self._kernel_candidates(mod, encl, call.args[0]) \
+                if call.args else []
+            for k in kernels:
+                k.entry = k.entry or "pallas"
+            self.pallas_sites.append(PallasSite(
+                module=mod, node=call, encl=encl, kernels=kernels,
+                keywords={kw.arg for kw in call.keywords if kw.arg}))
+            return
+        # higher-order combinators carry trace context into their args
+        tail = _callee_tail(func)
+        if tail in HOF_NAMES:
+            for arg in list(call.args) + [kw.value for kw in call.keywords]:
+                t = self._resolve_callable(mod, encl, arg, register_edge=True,
+                                           caller=caller)
+                del t
+            return
+        # plain call edge
+        target = self._resolve(mod, encl, func)
+        if target is not None:
+            self.calls.setdefault(caller, set()).add(target.qualname)
+            if target.entry and target.static_params and encl is not None:
+                self.entry_calls.append(EntryCallSite(
+                    module=mod, node=call, encl=encl, target=target,
+                    loop_names=loop_names))
+
+    def _kernel_candidates(self, mod, encl, expr) -> list[FunctionInfo]:
+        """Kernel expressions may be a local name assigned (possibly in
+        several branches) from ``functools.partial(<kernel>, ...)``."""
+        direct = self._resolve_callable(mod, encl, expr)
+        if direct is not None:
+            return [direct]
+        out: list[FunctionInfo] = []
+        if isinstance(expr, ast.Name) and encl is not None:
+            for st in ast.walk(encl.node):
+                if isinstance(st, ast.Assign) and any(
+                        isinstance(t, ast.Name) and t.id == expr.id
+                        for t in st.targets):
+                    cand = self._resolve_callable(mod, encl, st.value)
+                    if cand is not None:
+                        out.append(cand)
+        return out
+
+    def _resolve_callable(self, mod, encl, expr, register_edge=False,
+                          caller=None) -> FunctionInfo | None:
+        """Resolve a callable expression: name, lambda, partial(name, ...)."""
+        if isinstance(expr, ast.Lambda):
+            fi = self._register_lambda(mod, encl, expr)
+            if register_edge and caller:
+                self.calls.setdefault(caller, set()).add(fi.qualname)
+            return fi
+        if isinstance(expr, ast.Call) and _is_partial(expr.func) and expr.args:
+            inner = self._resolve_callable(mod, encl, expr.args[0],
+                                           register_edge, caller)
+            if inner is not None:
+                # kwargs bound at partial time are host values -> static
+                inner.static_params.update(
+                    kw.arg for kw in expr.keywords if kw.arg)
+            return inner
+        target = self._resolve(mod, encl, expr)
+        if target is not None and register_edge and caller:
+            self.calls.setdefault(caller, set()).add(target.qualname)
+        return target
+
+    def _register_lambda(self, mod, encl, node: ast.Lambda) -> FunctionInfo:
+        qn = f"{mod.name}.<lambda@{node.lineno}>"
+        if qn not in self.functions:
+            self.functions[qn] = FunctionInfo(
+                qualname=qn, name=f"<lambda@{node.lineno}>", module=mod,
+                node=node, cls=encl.cls if encl else None,
+                params=_params_of(node), static_params=set(),
+                lineno=node.lineno)
+        return self.functions[qn]
+
+    def _resolve(self, mod, encl, func) -> FunctionInfo | None:
+        if isinstance(func, ast.Name):
+            n = func.id
+            if encl is not None:
+                nested = f"{encl.qualname}.{n}"
+                if nested in self.functions:
+                    return self.functions[nested]
+            if f"{mod.name}.{n}" in self.functions:
+                return self.functions[f"{mod.name}.{n}"]
+            if n in mod.from_imports:
+                m, sym = mod.from_imports[n]
+                return self.functions.get(f"{m}.{sym}")
+            return None
+        if isinstance(func, ast.Attribute):
+            base, attr = func.value, func.attr
+            if isinstance(base, ast.Name):
+                if base.id in ("self", "cls") and encl is not None and encl.cls:
+                    return self.functions.get(f"{mod.name}.{encl.cls}.{attr}")
+                if base.id in mod.aliases:
+                    return self.functions.get(f"{mod.aliases[base.id]}.{attr}")
+                # ClassName.method -- local or imported class
+                if f"{mod.name}.{base.id}" in self.classes:
+                    return self.functions.get(f"{mod.name}.{base.id}.{attr}")
+                if base.id in mod.from_imports:
+                    m, sym = mod.from_imports[base.id]
+                    if f"{m}.{sym}" in self.classes:
+                        return self.functions.get(f"{m}.{sym}.{attr}")
+        return None
+
+    # -- reachability --------------------------------------------------------
+    def entries(self) -> list[FunctionInfo]:
+        return [f for f in self.functions.values() if f.entry]
+
+    def reachable(self) -> dict[str, str]:
+        """qualname -> the entry qualname it is reachable from (BFS)."""
+        seen: dict[str, str] = {}
+        frontier = [(f.qualname, f.qualname) for f in self.entries()]
+        while frontier:
+            qn, root = frontier.pop()
+            if qn in seen:
+                continue
+            seen[qn] = root
+            for callee in self.calls.get(qn, ()):
+                if callee not in seen:
+                    frontier.append((callee, root))
+        return seen
+
+
+def body_of(node: ast.AST) -> list[ast.stmt]:
+    if isinstance(node, ast.Lambda):
+        return [ast.Expr(value=node.body)]
+    return list(node.body)
+
+
+def _toplevel_stmts(tree: ast.Module) -> list[ast.stmt]:
+    return [st for st in tree.body
+            if not isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.ClassDef))]
+
+
+def _module_name(path: Path) -> str:
+    parts = list(path.with_suffix("").parts)
+    for anchor in ("src", "repro"):
+        if anchor in parts:
+            i = parts.index(anchor)
+            parts = parts[i + 1 :] if anchor == "src" else parts[i:]
+            break
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts) or path.stem
+
+
+def _py_files(paths: list[str]) -> list[Path]:
+    out: list[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(sorted(path.rglob("*.py")))
+        elif path.suffix == ".py":
+            out.append(path)
+    return out
+
+
+# =============================================================================
+# Trace-time staticness dataflow (MZ01 / MZ04 substrate)
+# =============================================================================
+
+
+@dataclasses.dataclass
+class TraceEvent:
+    node: ast.AST
+    kind: str           # "if" | "while" | "assert" | "ifexp" | "comp-if"
+
+
+def scan_dynamic_tests(fi: FunctionInfo,
+                       extra_static: frozenset = frozenset()
+                       ) -> list[TraceEvent]:
+    """Python branches whose test is not trace-time static.
+
+    The dataflow is a single forward pass: a name is *static* if it is a
+    static parameter, a module-level binding, or assigned from an
+    expression built only of static parts (shape/ndim/dtype attributes are
+    static regardless of their base).  ``x is None`` compares against the
+    tracer object itself and is always static.  ``extra_static`` carries
+    inherited static names for nested functions (the enclosing function's
+    static parameters are static in the closure too).
+    """
+    static = (set(fi.static_params) | fi.module.globals | _BUILTIN_NAMES
+              | set(extra_static))
+    events: list[TraceEvent] = []
+    _walk_stmts(body_of(fi.node), static, events)
+    return events
+
+
+def inherited_static(idx: "Index", fi: FunctionInfo) -> frozenset:
+    """Static parameter names of every enclosing function of ``fi``."""
+    out: set[str] = set()
+    qn = fi.qualname
+    while "." in qn:
+        qn = qn.rsplit(".", 1)[0]
+        parent = idx.functions.get(qn)
+        if parent is not None:
+            out.update(parent.static_params)
+    return frozenset(out)
+
+
+def _walk_stmts(stmts, static: set, events: list) -> None:
+    for st in stmts:
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.ClassDef)):
+            static.add(st.name)
+            continue
+        if isinstance(st, ast.Assign):
+            _expr_events(st.value, static, events)
+            s = _is_static(st.value, static)
+            for t in st.targets:
+                _bind(t, s, static)
+        elif isinstance(st, ast.AnnAssign) and st.value is not None:
+            _expr_events(st.value, static, events)
+            _bind(st.target, _is_static(st.value, static), static)
+        elif isinstance(st, ast.AugAssign):
+            _expr_events(st.value, static, events)
+            if isinstance(st.target, ast.Name):
+                if not (st.target.id in static
+                        and _is_static(st.value, static)):
+                    static.discard(st.target.id)
+        elif isinstance(st, (ast.If, ast.While)):
+            _expr_events(st.test, static, events)
+            if not _is_static(st.test, static):
+                events.append(TraceEvent(
+                    st, "while" if isinstance(st, ast.While) else "if"))
+            _walk_stmts(st.body, static, events)
+            _walk_stmts(st.orelse, static, events)
+        elif isinstance(st, ast.Assert):
+            _expr_events(st.test, static, events)
+            if not _is_static(st.test, static):
+                events.append(TraceEvent(st, "assert"))
+        elif isinstance(st, (ast.For, ast.AsyncFor)):
+            _expr_events(st.iter, static, events)
+            _bind(st.target, _is_static(st.iter, static), static)
+            _walk_stmts(st.body, static, events)
+            _walk_stmts(st.orelse, static, events)
+        elif isinstance(st, ast.With):
+            for item in st.items:
+                _expr_events(item.context_expr, static, events)
+            _walk_stmts(st.body, static, events)
+        elif isinstance(st, ast.Try):
+            _walk_stmts(st.body, static, events)
+            for h in st.handlers:
+                _walk_stmts(h.body, static, events)
+            _walk_stmts(st.orelse, static, events)
+            _walk_stmts(st.finalbody, static, events)
+        elif isinstance(st, (ast.Return, ast.Expr)) and st.value is not None:
+            _expr_events(st.value, static, events)
+        elif isinstance(st, ast.Raise):
+            pass
+        else:
+            for sub in ast.iter_child_nodes(st):
+                if isinstance(sub, ast.expr):
+                    _expr_events(sub, static, events)
+
+
+def _bind(target: ast.AST, is_static: bool, static: set) -> None:
+    for n in ast.walk(target):
+        if isinstance(n, ast.Name):
+            (static.add if is_static else static.discard)(n.id)
+
+
+def _expr_events(expr: ast.AST, static: set, events: list) -> None:
+    """Collect dynamic-test events hiding inside expressions."""
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Lambda):
+            continue
+        if isinstance(node, ast.IfExp) and not _is_static(node.test, static):
+            events.append(TraceEvent(node, "ifexp"))
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            for gen in node.generators:
+                for cond in gen.ifs:
+                    if not _is_static(cond, static):
+                        events.append(TraceEvent(cond, "comp-if"))
+
+
+def _is_static(expr: ast.AST, static: set) -> bool:
+    if isinstance(expr, ast.Constant):
+        return True
+    if isinstance(expr, ast.Name):
+        return expr.id in static
+    if isinstance(expr, ast.Attribute):
+        if expr.attr in STATIC_ATTRS:
+            return True
+        return _is_static(expr.value, static)
+    if isinstance(expr, ast.Compare):
+        if any(isinstance(op, (ast.Is, ast.IsNot)) for op in expr.ops):
+            return True     # identity check against a tracer is static
+        return all(_is_static(e, static)
+                   for e in [expr.left] + list(expr.comparators))
+    if isinstance(expr, (ast.BinOp,)):
+        return _is_static(expr.left, static) and _is_static(expr.right, static)
+    if isinstance(expr, ast.UnaryOp):
+        return _is_static(expr.operand, static)
+    if isinstance(expr, ast.BoolOp):
+        return all(_is_static(v, static) for v in expr.values)
+    if isinstance(expr, (ast.Tuple, ast.List, ast.Set)):
+        return all(_is_static(e, static) for e in expr.elts)
+    if isinstance(expr, ast.Dict):
+        return all(_is_static(e, static)
+                   for e in list(expr.keys) + list(expr.values)
+                   if e is not None)
+    if isinstance(expr, ast.Subscript):
+        return _is_static(expr.value, static) and _is_static(expr.slice,
+                                                             static)
+    if isinstance(expr, ast.Slice):
+        return all(e is None or _is_static(e, static)
+                   for e in (expr.lower, expr.upper, expr.step))
+    if isinstance(expr, ast.IfExp):
+        return all(_is_static(e, static)
+                   for e in (expr.test, expr.body, expr.orelse))
+    if isinstance(expr, ast.Call):
+        fn = expr.func
+        named_static = (isinstance(fn, ast.Name) and fn.id in STATIC_CALLS)
+        if named_static:
+            return all(_is_static(a, static) for a in expr.args)
+        return False
+    if isinstance(expr, ast.JoinedStr):
+        return True
+    if isinstance(expr, ast.Starred):
+        return _is_static(expr.value, static)
+    return False
+
+
+def iter_body_calls(fi: FunctionInfo):
+    """Every Call node in ``fi``'s own body, skipping nested defs/lambdas
+    (they are separate FunctionInfos with their own scan)."""
+    stack: list[ast.AST] = list(body_of(fi.node))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda, ast.ClassDef)):
+            continue
+        if isinstance(node, ast.Call):
+            yield node
+        stack.extend(ast.iter_child_nodes(node))

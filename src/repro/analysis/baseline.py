@@ -1,0 +1,47 @@
+"""Committed-baseline handling for mezlint.
+
+The baseline is a JSON file of finding *keys* (``rule|module|scope|detail``
+-- deliberately line-number-free so ordinary edits don't churn it).  The
+gate is: a run may produce no finding whose key is outside the baseline.
+The baseline itself is shrink-only in CI: a PR may remove entries (by
+fixing the underlying finding) but never add them -- new code must either
+be clean or carry an inline ``# mezlint: disable=... -- why`` with a
+justification the reviewer can see.
+"""
+
+from __future__ import annotations
+
+import json
+
+from repro.analysis.rules import Finding
+
+
+def load(path: str) -> set[str]:
+    try:
+        with open(path) as fh:
+            data = json.load(fh)
+    except FileNotFoundError:
+        return set()
+    return set(data.get("findings", []))
+
+
+def write(path: str, findings: list[Finding]) -> None:
+    keys = sorted({f.key for f in findings})
+    with open(path, "w") as fh:
+        json.dump({"comment": "mezlint accepted findings -- shrink-only; "
+                              "see README 'Static analysis'",
+                   "findings": keys}, fh, indent=1)
+        fh.write("\n")
+
+
+def split(findings: list[Finding], baseline: set[str]
+          ) -> tuple[list[Finding], list[Finding]]:
+    """(new, accepted) relative to the baseline."""
+    new = [f for f in findings if f.key not in baseline]
+    old = [f for f in findings if f.key in baseline]
+    return new, old
+
+
+def check_shrink(old_path: str, new_path: str) -> list[str]:
+    """Keys present in the new baseline but not the old one (violations)."""
+    return sorted(load(new_path) - load(old_path))

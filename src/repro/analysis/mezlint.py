@@ -1,0 +1,108 @@
+"""mezlint -- repo-specific static analysis for the Mez reproduction.
+
+Usage::
+
+    python -m repro.analysis.mezlint [paths ...]
+        [--baseline mezlint.baseline.json] [--no-baseline]
+        [--write-baseline] [--rules MZ01,MZ03] [--json]
+        [--check-shrink OLD_BASELINE]
+
+Exit status: 0 = no findings outside the baseline, 1 = new findings (or a
+baseline growth with ``--check-shrink``), 2 = usage error.
+
+Rules (details in ``repro.analysis.rules`` and README "Static analysis"):
+
+  MZ01 host-sync calls / Python branches on traced values in jit-reachable
+       code; MZ02 retrace smells (per-call jit wrappers, loop-varying
+       static args, shape-unstable ``from_table``); MZ03 ``# guarded-by:``
+       lock discipline; MZ04 f64 leaking into traced f32 lanes; MZ05
+       Pallas kernel hygiene (closures, ``interpret=`` path, declared
+       ``ref.py`` parity).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.astindex import Index
+from repro.analysis.rules import Finding, run_rules
+
+DEFAULT_BASELINE = "mezlint.baseline.json"
+
+
+def run_paths(paths: list[str], rules: set[str] | None = None
+              ) -> list[Finding]:
+    """Lint ``paths`` (files or directories); returns unsuppressed findings.
+
+    This is the programmatic entry point used by ``tests/test_mezlint.py``
+    and ``benchmarks/mezlint_bench.py``.
+    """
+    idx = Index.build(paths)
+    return run_rules(idx, rules=rules)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="mezlint", description=__doc__)
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="accepted-findings file (keys, shrink-only in CI)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignoring the baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept the current findings into --baseline")
+    ap.add_argument("--rules", default="",
+                    help="comma-separated rule subset (e.g. MZ01,MZ03)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output")
+    ap.add_argument("--check-shrink", metavar="OLD",
+                    help="compare --baseline against OLD: any added key "
+                         "fails (no lint run happens)")
+    args = ap.parse_args(argv)
+
+    if args.check_shrink:
+        grown = baseline_mod.check_shrink(args.check_shrink, args.baseline)
+        if grown:
+            print("mezlint: baseline grew (suppressions are shrink-only):")
+            for k in grown:
+                print(f"  + {k}")
+            return 1
+        print("mezlint: baseline ok (no new suppressions)")
+        return 0
+
+    rules = {r.strip() for r in args.rules.split(",") if r.strip()} or None
+    t0 = time.monotonic()
+    findings = run_paths(list(args.paths) or ["src"], rules=rules)
+    elapsed = time.monotonic() - t0
+
+    if args.write_baseline:
+        baseline_mod.write(args.baseline, findings)
+        print(f"mezlint: wrote {len(findings)} finding(s) to "
+              f"{args.baseline}")
+        return 0
+
+    accepted: set[str] = set()
+    if not args.no_baseline:
+        accepted = baseline_mod.load(args.baseline)
+    new, old = baseline_mod.split(findings, accepted)
+
+    if args.as_json:
+        print(json.dumps({
+            "elapsed_s": round(elapsed, 3),
+            "new": [vars(f) for f in new],
+            "accepted": [f.key for f in old],
+        }, indent=1))
+    else:
+        for f in new:
+            print(f.render())
+        print(f"mezlint: {len(new)} new finding(s), {len(old)} accepted by "
+              f"baseline, {elapsed * 1e3:.0f} ms")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,531 @@
+"""mezlint rules MZ01-MZ05 (plus MZ00 for malformed suppressions).
+
+=====  ========================================================================
+MZ00   ``# mezlint: disable=`` without a ``-- justification``.
+MZ01   Host-sync in traced code: ``.item()`` / ``.tolist()`` /
+       ``.block_until_ready()`` / ``np.*`` / ``time.*`` / ``jax.device_get``
+       calls, ``float()/int()/bool()`` of a traced parameter, or a Python
+       branch (``if`` / ``while`` / ``assert`` / ternary / comprehension
+       filter) whose test is not trace-time static, inside any function
+       reachable from a ``jax.jit`` / ``pl.pallas_call`` entry point.
+MZ02   Retrace smells: a ``jax.jit`` wrapper created inside a function body
+       (every call builds a fresh cache -- module scope or a once-per-object
+       ``__init__`` are the blessed spots); a jitted callsite in a loop whose
+       static argument depends on the loop variable (one compile per
+       iteration); ``JaxControllerTables.from_table`` without ``capacity=``
+       (shape-unstable tables defeat the no-recompile ``swap_tables``
+       contract).
+MZ03   Lock discipline: a field annotated ``# guarded-by: <lock>`` may only
+       be touched while ``<lock>`` is held -- lexically, via ``with`` blocks
+       or ``acquire_*``/``release_*`` pairs; ``# holds-lock:`` on a ``def``
+       shifts the obligation to its callers.  ``__init__`` is exempt (the
+       object is not shared yet).
+MZ04   dtype discipline: explicit float64 (``np.float64`` / ``jnp.float64``
+       / ``dtype="float64"`` / ``.astype(float)``) inside traced code.  The
+       f64 *pre*-compute in ``ControllerParams`` is blessed: gains are
+       derived host-side in f64 and enter the trace as f32 leaves.
+MZ05   Pallas kernel hygiene: kernels must be named module-level functions
+       (optionally ``functools.partial``-bound with static kwargs), must not
+       close over enclosing-scope values, every ``pallas_call`` must thread
+       an ``interpret=`` flag, and each kernel module must declare its
+       oracle twin with ``# mezlint: ref-parity: <symbol>``.
+=====  ========================================================================
+"""
+
+from __future__ import annotations
+
+import ast
+import builtins
+import dataclasses
+
+from repro.analysis.astindex import (GUARDED_BY_RE, FunctionInfo, Index,
+                                     _params_of, body_of, inherited_static,
+                                     iter_body_calls, scan_dynamic_tests)
+
+_BUILTINS = frozenset(dir(builtins))
+
+HOSTSYNC_ATTRS = {"item", "tolist", "block_until_ready",
+                  "copy_to_host_async", "device_get"}
+HOST_MODULES = {"numpy", "time"}
+F64_ATTRS = {"float64", "double"}
+MZ04_BLESSED = ("repro.core.controller.ControllerParams",)
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    module: str         # dotted module name (stable across checkouts)
+    path: str
+    line: int
+    scope: str          # enclosing function/class qualname suffix
+    message: str
+    detail: str         # short stable token used in the baseline key
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule}|{self.module}|{self.scope}|{self.detail}"
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: {self.rule} [{self.scope}] "
+                f"{self.message}")
+
+
+def _scope_of(fi: FunctionInfo | None) -> str:
+    if fi is None:
+        return "<module>"
+    return fi.qualname[len(fi.module.name) + 1:]
+
+
+def _root_name(node: ast.AST) -> str | None:
+    while isinstance(node, (ast.Attribute, ast.Subscript, ast.Call)):
+        node = node.func if isinstance(node, ast.Call) else node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _mk(rule, fi_or_mod, line, scope, message, detail) -> Finding:
+    mod = fi_or_mod.module if isinstance(fi_or_mod, FunctionInfo) else \
+        fi_or_mod
+    return Finding(rule=rule, module=mod.name, path=mod.path, line=line,
+                   scope=scope, message=message, detail=detail)
+
+
+# =============================================================================
+# MZ00 -- malformed suppressions
+# =============================================================================
+
+
+def check_mz00(idx: Index) -> list[Finding]:
+    out = []
+    for mod in idx.modules.values():
+        for line in mod.bare_disables:
+            out.append(_mk("MZ00", mod, line, "<module>",
+                           "suppression without a justification "
+                           "(use `# mezlint: disable=MZxx -- why`)",
+                           f"bare-disable@{line}"))
+    return out
+
+
+# =============================================================================
+# MZ01 -- host sync inside traced code
+# =============================================================================
+
+
+def check_mz01(idx: Index) -> list[Finding]:
+    out = []
+    reach = idx.reachable()
+    for qn in sorted(reach):
+        fi = idx.functions.get(qn)
+        if fi is None:
+            continue
+        root = reach[qn]
+        scope = _scope_of(fi)
+        host_aliases = {local for local, tgt in fi.module.aliases.items()
+                        if tgt.split(".")[0] in HOST_MODULES}
+        dyn_params = set(fi.params) - fi.static_params
+        for call in iter_body_calls(fi):
+            func = call.func
+            if isinstance(func, ast.Attribute):
+                if func.attr in HOSTSYNC_ATTRS:
+                    out.append(_mk(
+                        "MZ01", fi, call.lineno, scope,
+                        f"`.{func.attr}()` forces a host sync in code "
+                        f"reachable from jit entry `{root}`",
+                        f"sync:{func.attr}"))
+                    continue
+                rn = _root_name(func.value)
+                if rn in host_aliases:
+                    out.append(_mk(
+                        "MZ01", fi, call.lineno, scope,
+                        f"host-library call `{rn}.{func.attr}(...)` in code "
+                        f"reachable from jit entry `{root}` (use jnp/lax)",
+                        f"host-call:{rn}.{func.attr}"))
+            elif isinstance(func, ast.Name) and \
+                    func.id in ("float", "int", "bool", "complex"):
+                names = {n.id for a in call.args for n in ast.walk(a)
+                         if isinstance(n, ast.Name)}
+                if names & dyn_params:
+                    out.append(_mk(
+                        "MZ01", fi, call.lineno, scope,
+                        f"`{func.id}()` of a traced value forces a host "
+                        f"sync (reachable from `{root}`)",
+                        f"cast:{func.id}@{call.lineno}"))
+        for ev in scan_dynamic_tests(fi, inherited_static(idx, fi)):
+            out.append(_mk(
+                "MZ01", fi, getattr(ev.node, "lineno", fi.lineno), scope,
+                f"Python `{ev.kind}` on a value that is not trace-time "
+                f"static (reachable from `{root}`) -- use lax.cond/select "
+                f"or mark the parameter static",
+                f"branch:{ev.kind}@{getattr(ev.node, 'lineno', 0)}"))
+    return out
+
+
+# =============================================================================
+# MZ02 -- retrace smells
+# =============================================================================
+
+
+def check_mz02(idx: Index) -> list[Finding]:
+    out = []
+    for site in idx.jit_wraps:
+        if site.encl is None or site.self_assign_in_init:
+            continue        # module scope / once-per-object are blessed
+        scope = _scope_of(site.encl)
+        out.append(_mk(
+            "MZ02", site.module, site.node.lineno, scope,
+            "`jax.jit(...)` created inside a function body: every call "
+            "builds a fresh wrapper and retraces -- hoist to module scope "
+            "or a long-lived object's `__init__`",
+            f"jit-wrap@{scope}"))
+    for call in idx.entry_calls:
+        if not call.loop_names:
+            continue
+        scope = _scope_of(call.encl)
+        argmap: list[tuple[str, ast.AST]] = []
+        for i, a in enumerate(call.node.args):
+            if i < len(call.target.params):
+                argmap.append((call.target.params[i], a))
+        for kw in call.node.keywords:
+            if kw.arg:
+                argmap.append((kw.arg, kw.value))
+        for pname, expr in argmap:
+            if pname not in call.target.static_params:
+                continue
+            names = {n.id for n in ast.walk(expr)
+                     if isinstance(n, ast.Name)}
+            hit = names & call.loop_names
+            if hit:
+                out.append(_mk(
+                    "MZ02", call.module, call.node.lineno, scope,
+                    f"static argument `{pname}` of jitted "
+                    f"`{call.target.name}` varies with loop variable "
+                    f"{sorted(hit)} -- one compile per iteration",
+                    f"loop-static:{call.target.name}.{pname}"))
+    for mod in idx.modules.values():
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "from_table":
+                if not any(kw.arg == "capacity" for kw in node.keywords):
+                    out.append(_mk(
+                        "MZ02", mod, node.lineno, "<module>",
+                        "`from_table(...)` without `capacity=`: table shape "
+                        "follows the kept-set size, so every refresh "
+                        "retraces -- pad to a fixed capacity (the "
+                        "`swap_tables` no-recompile contract)",
+                        f"from_table@{node.lineno}"))
+    return out
+
+
+# =============================================================================
+# MZ03 -- lock discipline (guarded-by)
+# =============================================================================
+
+
+def _guard_map(idx: Index, fqcn: str) -> dict[str, str]:
+    """field -> lock name, from `# guarded-by:` trailing comments."""
+    guards: dict[str, str] = {}
+    for m in idx.classes.get(fqcn, ()):
+        fi = idx.functions.get(f"{fqcn}.{m}")
+        if fi is None:
+            continue
+        for st in ast.walk(fi.node):
+            targets = []
+            if isinstance(st, ast.Assign):
+                targets = st.targets
+            elif isinstance(st, ast.AnnAssign):
+                targets = [st.target]
+            for t in targets:
+                if isinstance(t, ast.Attribute) and \
+                        isinstance(t.value, ast.Name) and t.value.id == "self":
+                    g = GUARDED_BY_RE.search(fi.module.line(st.lineno))
+                    if g:
+                        guards[t.attr] = g.group(1)
+    return guards
+
+
+def _lock_base(expr: ast.AST) -> str | None:
+    """`self._meta_lock` / `self._seg_locks[i]` -> the attribute name."""
+    if isinstance(expr, ast.Subscript):
+        expr = expr.value
+    if isinstance(expr, ast.Attribute) and \
+            isinstance(expr.value, ast.Name) and expr.value.id == "self":
+        return expr.attr
+    return None
+
+
+class _LockWalker:
+    def __init__(self, idx: Index, fi: FunctionInfo, guards: dict[str, str],
+                 findings: list[Finding]):
+        self.idx = idx
+        self.fi = fi
+        self.guards = guards
+        self.findings = findings
+        self.held: set[str] = set(fi.holds_locks)
+        self.aliases: dict[str, str] = {}
+        self.scope = _scope_of(fi)
+
+    def run(self) -> None:
+        self._stmts(body_of(self.fi.node))
+
+    # -- helpers -------------------------------------------------------------
+    def _lockname(self, expr: ast.AST) -> str | None:
+        if isinstance(expr, ast.Name):
+            return self.aliases.get(expr.id)
+        return _lock_base(expr)
+
+    def _check_exprs(self, roots) -> None:
+        for root in roots:
+            if root is None:
+                continue
+            for node in ast.walk(root):
+                if isinstance(node, ast.Attribute) and \
+                        isinstance(node.value, ast.Name) and \
+                        node.value.id == "self" and node.attr in self.guards:
+                    lock = self.guards[node.attr]
+                    if lock not in self.held:
+                        self.findings.append(_mk(
+                            "MZ03", self.fi, node.lineno, self.scope,
+                            f"`self.{node.attr}` is guarded by "
+                            f"`{lock}` but accessed without it "
+                            f"(held: {sorted(self.held) or 'none'})",
+                            f"unlocked:{node.attr}@{self.scope}"))
+                elif isinstance(node, ast.Call):
+                    self._call(node)
+
+    def _call(self, call: ast.Call) -> None:
+        func = call.func
+        if not isinstance(func, ast.Attribute):
+            return
+        # caller-side obligation for `# holds-lock:` methods
+        if isinstance(func.value, ast.Name) and \
+                func.value.id in ("self", "cls") and self.fi.cls:
+            callee = self.idx.functions.get(
+                f"{self.fi.module.name}.{self.fi.cls}.{func.attr}")
+            if callee is not None:
+                missing = set(callee.holds_locks) - self.held
+                if missing:
+                    self.findings.append(_mk(
+                        "MZ03", self.fi, call.lineno, self.scope,
+                        f"`self.{func.attr}()` requires holding "
+                        f"{sorted(missing)} (declared `# holds-lock:`) "
+                        f"but none of them are held here",
+                        f"call-unlocked:{func.attr}@{self.scope}"))
+
+    def _acquire_release(self, st: ast.stmt) -> bool:
+        if not (isinstance(st, ast.Expr) and isinstance(st.value, ast.Call)):
+            return False
+        func = st.value.func
+        if not isinstance(func, ast.Attribute):
+            return False
+        lock = self._lockname(func.value)
+        if lock is None:
+            return False
+        if func.attr.startswith("acquire"):
+            self.held.add(lock)
+            return True
+        if func.attr.startswith("release"):
+            self.held.discard(lock)
+            return True
+        return False
+
+    # -- statement walk ------------------------------------------------------
+    def _stmts(self, stmts) -> None:
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+                continue
+            if self._acquire_release(st):
+                continue
+            if isinstance(st, ast.With):
+                added = []
+                for item in st.items:
+                    self._check_exprs([item.context_expr])
+                    lock = self._lockname(item.context_expr)
+                    if lock is not None and lock not in self.held:
+                        self.held.add(lock)
+                        added.append(lock)
+                self._stmts(st.body)
+                for lock in added:
+                    self.held.discard(lock)
+                continue
+            if isinstance(st, ast.Assign) and len(st.targets) == 1 and \
+                    isinstance(st.targets[0], ast.Name):
+                lock = _lock_base(st.value)
+                if lock is not None:
+                    self.aliases[st.targets[0].id] = lock
+            inner = [n for n in ast.iter_child_nodes(st)
+                     if isinstance(n, ast.stmt)]
+            other = [n for n in ast.iter_child_nodes(st)
+                     if not isinstance(n, ast.stmt)]
+            self._check_exprs(other)
+            if inner:
+                self._stmts(inner)
+
+
+def check_mz03(idx: Index) -> list[Finding]:
+    out: list[Finding] = []
+    for fqcn in sorted(idx.classes):
+        guards = _guard_map(idx, fqcn)
+        if not guards:
+            continue
+        for m in sorted(idx.classes[fqcn]):
+            if m == "__init__":
+                continue        # not shared yet
+            fi = idx.functions.get(f"{fqcn}.{m}")
+            if fi is not None:
+                _LockWalker(idx, fi, guards, out).run()
+    return out
+
+
+# =============================================================================
+# MZ04 -- f64 leaking into traced f32 lanes
+# =============================================================================
+
+
+def check_mz04(idx: Index) -> list[Finding]:
+    out = []
+    reach = idx.reachable()
+    for qn in sorted(reach):
+        fi = idx.functions.get(qn)
+        if fi is None or qn.startswith(MZ04_BLESSED):
+            continue
+        scope = _scope_of(fi)
+        stack: list[ast.AST] = list(body_of(fi.node))
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda, ast.ClassDef)):
+                continue
+            if isinstance(node, ast.Attribute) and node.attr in F64_ATTRS:
+                out.append(_mk(
+                    "MZ04", fi, node.lineno, scope,
+                    f"`{node.attr}` in traced code: f64 silently widens the "
+                    "f32 lanes (precompute host-side in `ControllerParams` "
+                    "and cast to f32 instead)",
+                    f"f64:{node.attr}@{node.lineno}"))
+            elif isinstance(node, ast.Constant) and node.value in F64_ATTRS:
+                out.append(_mk(
+                    "MZ04", fi, node.lineno, scope,
+                    f"dtype string \"{node.value}\" in traced code",
+                    f"f64-str@{node.lineno}"))
+            elif isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "astype" and node.args and \
+                    isinstance(node.args[0], ast.Name) and \
+                    node.args[0].id == "float":
+                out.append(_mk(
+                    "MZ04", fi, node.lineno, scope,
+                    "`.astype(float)` is float64 on the host path",
+                    f"astype-float@{node.lineno}"))
+            stack.extend(ast.iter_child_nodes(node))
+    return out
+
+
+# =============================================================================
+# MZ05 -- Pallas kernel hygiene
+# =============================================================================
+
+
+def check_mz05(idx: Index) -> list[Finding]:
+    out = []
+    for site in idx.pallas_sites:
+        scope = _scope_of(site.encl)
+        line = site.node.lineno
+        if "interpret" not in site.keywords:
+            out.append(_mk(
+                "MZ05", site.module, line, scope,
+                "`pallas_call` without an `interpret=` flag: the kernel "
+                "cannot run its CPU oracle path (ref.py parity)",
+                f"no-interpret@{scope}"))
+        if not site.kernels:
+            out.append(_mk(
+                "MZ05", site.module, line, scope,
+                "kernel is not a resolvable named function (pass a "
+                "module-level kernel, optionally functools.partial-bound "
+                "with static kwargs)",
+                f"anon-kernel@{scope}"))
+        for kernel in site.kernels:
+            for name, lineno in _free_vars(kernel):
+                out.append(_mk(
+                    "MZ05", site.module, lineno, scope,
+                    f"kernel `{kernel.name}` closes over "
+                    f"enclosing-scope name `{name}` -- pass it as a ref or "
+                    "a functools.partial static kwarg",
+                    f"closure:{kernel.name}.{name}"))
+    # every kernel module must declare its ref.py oracle
+    mods_with_kernels = {s.module.name: s.module for s in idx.pallas_sites}
+    for name, mod in sorted(mods_with_kernels.items()):
+        if not mod.ref_parity:
+            out.append(_mk(
+                "MZ05", mod, 1, "<module>",
+                "module uses pallas_call but declares no "
+                "`# mezlint: ref-parity: <symbol>` oracle twin",
+                "no-ref-parity"))
+            continue
+        for sym in mod.ref_parity:
+            target_mod, _, target_name = sym.rpartition(".")
+            known = idx.modules.get(target_mod)
+            if known is not None and target_name not in known.globals:
+                out.append(_mk(
+                    "MZ05", mod, 1, "<module>",
+                    f"declared ref-parity symbol `{sym}` does not exist",
+                    f"bad-ref-parity:{sym}"))
+    return out
+
+
+def _free_vars(fi: FunctionInfo) -> list[tuple[str, int]]:
+    bound = set(fi.params) | fi.module.globals | _BUILTINS
+    for node in ast.walk(fi.node):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            bound.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            bound.add(node.name)
+            bound.update(_params_of(node))
+        elif isinstance(node, ast.Lambda):
+            bound.update(_params_of(node))
+        elif isinstance(node, (ast.comprehension,)):
+            bound.update(n.id for n in ast.walk(node.target)
+                         if isinstance(n, ast.Name))
+    out = []
+    seen = set()
+    for node in ast.walk(fi.node):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load) and \
+                node.id not in bound and node.id not in seen:
+            seen.add(node.id)
+            out.append((node.id, node.lineno))
+    return sorted(out)
+
+
+ALL_RULES = {
+    "MZ00": check_mz00,
+    "MZ01": check_mz01,
+    "MZ02": check_mz02,
+    "MZ03": check_mz03,
+    "MZ04": check_mz04,
+    "MZ05": check_mz05,
+}
+
+
+def run_rules(idx: Index, rules=None) -> list[Finding]:
+    findings: list[Finding] = []
+    for code, fn in ALL_RULES.items():
+        if rules and code not in rules:
+            continue
+        findings.extend(fn(idx))
+    return apply_suppressions(idx, findings)
+
+
+def apply_suppressions(idx: Index, findings: list[Finding]) -> list[Finding]:
+    kept = []
+    for f in findings:
+        mod = idx.modules.get(f.module)
+        suppressed = False
+        if mod is not None:
+            for ln in (f.line, f.line - 1):
+                entry = mod.suppressions.get(ln)
+                if entry and f.rule in entry[0]:
+                    suppressed = True
+                    break
+        if not suppressed:
+            kept.append(f)
+    return sorted(kept, key=lambda f: (f.path, f.line, f.rule, f.detail))

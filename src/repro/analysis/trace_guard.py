@@ -1,0 +1,83 @@
+"""Runtime retrace guard -- the dynamic counterpart of mezlint MZ02.
+
+``trace_guard`` snapshots jit cache sizes on entry and fails on exit if
+any guarded target compiled more variants than expected.  It replaces the
+ad-hoc ``cache_size() == 1`` assertions that used to be copy-pasted
+through ``test_fleet.py`` / ``test_drift.py``:
+
+    with trace_guard(fleet, monitor):
+        for latencies in timeline:
+            fleet.decide(fleet.sync(), latencies)
+    # exiting asserts: each target compiled at most once inside the block
+    # (a warm target may not recompile at all)
+
+Targets are anything with a ``cache_size()`` method (``FleetController``,
+``DriftMonitor``, ``CollectiveController``) or a jitted callable exposing
+``_cache_size()``.  ``expect`` raises the per-target allowance when a
+block legitimately compiles N variants (e.g. one per static config).
+
+``assert_compiled_once`` is the post-hoc form for cache sizes *recorded*
+by the scenario harness (``ScenarioResult.fleet_cache_size``), where the
+live object is gone by the time the test can look.
+
+No JAX import here: the guard only calls methods the targets provide, so
+``repro.analysis`` stays importable in a bare lint job.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+
+class TraceGuardError(AssertionError):
+    """A guarded target recompiled unexpectedly."""
+
+
+def _size(target) -> int:
+    for attr in ("cache_size", "_cache_size"):
+        fn = getattr(target, attr, None)
+        if callable(fn):
+            return int(fn())
+    raise TypeError(
+        f"trace_guard target {target!r} exposes neither cache_size() nor "
+        f"_cache_size()")
+
+
+def _label(target, i: int) -> str:
+    name = getattr(target, "__name__", None) or type(target).__name__
+    return f"{name}#{i}"
+
+
+@contextlib.contextmanager
+def trace_guard(*targets, expect: int = 1):
+    """Fail if any target's jit cache grows past ``max(initial, expect)``.
+
+    A cold target is allowed its first ``expect`` compiles (the warm-up);
+    a warm target is allowed none.  Raises ``TraceGuardError`` naming every
+    offender with before/after sizes.
+    """
+    if not targets:
+        raise TypeError("trace_guard needs at least one target")
+    before = [_size(t) for t in targets]
+    yield
+    offenders = []
+    for i, (t, b) in enumerate(zip(targets, before)):
+        after = _size(t)
+        allowed = max(b, expect)
+        if after > allowed:
+            offenders.append(
+                f"{_label(t, i)}: cache {b} -> {after} (allowed {allowed})")
+    if offenders:
+        raise TraceGuardError(
+            "unexpected recompile(s) inside trace_guard block:\n  "
+            + "\n  ".join(offenders))
+
+
+def assert_compiled_once(recorded, label: str = "recorded cache size") -> None:
+    """Check a cache size *recorded* by a harness (an int, not a live
+    object): exactly one compiled variant means the hot loop stayed on its
+    fast path end to end."""
+    if recorded != 1:
+        raise TraceGuardError(
+            f"{label}: expected exactly 1 compiled variant, got {recorded!r}"
+            " -- something retraced (or never compiled) in the hot loop")

@@ -79,6 +79,7 @@ def _quant_roundtrip(x: jax.Array, bits: int, block=(256, 512)) -> jax.Array:
     return xd.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)
 
 
+# mezlint: jit-entry
 def compressed_mean(x: jax.Array, axis_name: str, bits: int,
                     block=(256, 512)) -> jax.Array:
     """Mean over ``axis_name`` with quantized transport (inside shard_map).

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 import time
 from collections import deque
 from typing import Iterator, Sequence
@@ -91,10 +92,13 @@ class CamBroker:
         # TABLE_CAPACITY: a jitted controller_step consumer reads these and
         # survives online re-characterization without recompiling
         self.jax_tables: JaxControllerTables | None = None
-        self.table_version = 0
+        # version counters are read by FleetController.sync from the poll
+        # thread while re-characterization bumps them; one mutex covers both
+        self._version_lock = threading.Lock()
+        self.table_version = 0  # guarded-by: _version_lock
         # bumped on every retarget/set_target: a FleetController diffing
         # this counter knows when to rewrite the camera's params lane
-        self.qos_version = 0
+        self.qos_version = 0    # guarded-by: _version_lock
         self.store = store
         self.crashed = False
         self._last_sent: np.ndarray | None = None
@@ -168,14 +172,16 @@ class CamBroker:
                                   accuracy_target=accuracy)
         self.controller = LatencyController(cfg, table, regression)
         self._install_jax_tables(table)
-        self.qos_version += 1
+        with self._version_lock:
+            self.qos_version += 1
         self._rechar_memo = None           # externally supplied tables
 
     def _install_jax_tables(self, table: CharacterizationTable) -> None:
         fresh = JaxControllerTables.from_table(
             table, capacity=max(TABLE_CAPACITY, len(table.settings)))
         self.jax_tables = swap_tables(self.jax_tables, fresh)
-        self.table_version += 1
+        with self._version_lock:
+            self.table_version += 1
 
     def recharacterize(self, *, clip_len: int = RECHAR_CLIP_LEN,
                        min_accuracy: float | None = None,
@@ -224,7 +230,8 @@ class CamBroker:
             return False
         self.controller.swap_table(table)
         self.jax_tables = swap_tables(self.jax_tables, jt)
-        self.table_version += 1
+        with self._version_lock:
+            self.table_version += 1
         self._payload_cache.clear()
         self._rechar_memo = memo_key
         return True
@@ -274,7 +281,8 @@ class CamBroker:
         if self.controller is None:
             return False
         self.controller.set_target(latency, accuracy)
-        self.qos_version += 1
+        with self._version_lock:
+            self.qos_version += 1
         return True
 
     # -- Publish (camera -> camera-node log) -------------------------------------

@@ -421,6 +421,7 @@ def _controller_step_core(state: ControllerState, latency_sampled: jax.Array,
     return new_state, aux
 
 
+# mezlint: jit-entry
 def controller_step(state: ControllerState, latency_sampled: jax.Array,
                     tables: JaxControllerTables, *,
                     latency_target: float, accuracy_target: float,

@@ -48,9 +48,9 @@ class _RWLock:
 
     def __init__(self) -> None:
         self._cond = threading.Condition()
-        self._readers = 0
-        self._writer = False
-        self._writers_waiting = 0
+        self._readers = 0           # guarded-by: _cond
+        self._writer = False        # guarded-by: _cond
+        self._writers_waiting = 0   # guarded-by: _cond
 
     def acquire_read(self) -> None:
         with self._cond:
@@ -102,26 +102,28 @@ class HostLog:
         self.capacity = int(capacity)
         self.num_segments = int(num_segments)
         self.topic = topic
-        self._entries: list[_Entry | None] = [None] * self.capacity
-        self._head = 0          # next write position
-        self._count = 0         # number of live entries
-        self._last_ts = -np.inf
+        self._entries: list[_Entry | None] = [None] * self.capacity  # guarded-by: _seg_locks
+        self._head = 0          # next write position; guarded-by: _meta_lock
+        self._count = 0         # number of live entries; guarded-by: _meta_lock
+        self._last_ts = -np.inf  # guarded-by: _meta_lock
         self._seg_locks = [_RWLock() for _ in range(self.num_segments)]
         self._meta_lock = threading.Lock()
-        self._evictions = 0     # wrap-around generation (seqlock validation)
-        self.appends = 0
-        self.rejects = 0
+        self._evictions = 0     # wrap-around generation; guarded-by: _meta_lock
+        self.appends = 0        # guarded-by: _meta_lock
+        self.rejects = 0        # guarded-by: _meta_lock
 
     # -- geometry ---------------------------------------------------------------
     def _segment_of(self, idx: int) -> int:
         return (idx * self.num_segments) // self.capacity
 
     def __len__(self) -> int:
-        return self._count
+        with self._meta_lock:
+            return self._count
 
     @property
     def last_timestamp(self) -> float:
-        return self._last_ts
+        with self._meta_lock:
+            return self._last_ts
 
     # -- write path -------------------------------------------------------------
     def append(self, timestamp: float, frame: np.ndarray, **meta) -> bool:
@@ -157,6 +159,7 @@ class HostLog:
         return True
 
     # -- read path ---------------------------------------------------------------
+    # holds-lock: _meta_lock
     def _ordered_indices(self) -> list[int]:
         """Indices of live entries in increasing timestamp order (the ring
         starts ``count`` slots behind the next write position)."""
@@ -242,7 +245,7 @@ class HostLog:
         return self._consistent_snapshot()[-k:]
 
     def snapshot(self) -> list[tuple[float, np.ndarray]]:
-        return self.tail(self._count)
+        return self.tail(len(self))
 
 
 # =============================================================================
@@ -382,6 +385,7 @@ def frame_log_init(capacity: int, frame_shape: tuple[int, ...],
     )
 
 
+# mezlint: jit-entry
 def frame_log_append(log: FrameLog, timestamp: jax.Array, frame: jax.Array) -> FrameLog:
     """Functional append; out-of-order appends are rejected (no-op + counter)."""
     ts = jnp.asarray(timestamp, jnp.float32)
@@ -415,6 +419,7 @@ def _ordered_view(log: FrameLog) -> tuple[jax.Array, jax.Array]:
     return ts, idx
 
 
+# mezlint: jit-entry
 def frame_log_point_query(log: FrameLog, timestamp: jax.Array
                           ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Newest entry with ts <= timestamp.
@@ -432,6 +437,7 @@ def frame_log_point_query(log: FrameLog, timestamp: jax.Array
     return found, jnp.where(found, ts[safe], -jnp.inf), log.payload[slot]
 
 
+# mezlint: jit-entry
 def frame_log_range_query(log: FrameLog, t_start: jax.Array, t_stop: jax.Array,
                           max_results: int) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Entries with t_start <= ts <= t_stop, oldest first, fixed-size output.

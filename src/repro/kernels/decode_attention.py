@@ -9,6 +9,8 @@ past ``length`` are masked (the cache is preallocated with slack).
 GQA mapping as in flash_attention: kv head = q head // group in index_map.
 """
 
+# mezlint: ref-parity: repro.kernels.ref.decode_attention_ref
+
 from __future__ import annotations
 
 import functools

@@ -11,6 +11,8 @@ Block shapes default to (BQ, BK) = (256, 512): MXU-aligned (multiples of
 128) and a [BQ,D]+[2*BK,D]+[BQ,BK] working set well under VMEM at D<=256.
 """
 
+# mezlint: ref-parity: repro.kernels.ref.flash_attention_ref
+
 from __future__ import annotations
 
 import functools

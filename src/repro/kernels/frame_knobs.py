@@ -45,6 +45,9 @@ HBM pass over the clip.  ``core.grid_engine`` groups the full knob grid by
 (resolution, colorspace) and issues one call per group.
 """
 
+# mezlint: ref-parity: repro.kernels.ref.frame_knobs_ref
+# mezlint: ref-parity: repro.kernels.ref.frame_knob_grid_ref
+
 from __future__ import annotations
 
 import dataclasses

@@ -12,6 +12,8 @@ adaptation of the RWKV CUDA kernel: instead of one-thread-per-channel serial
 scans, chunk-parallel matmuls + a carried VMEM state.
 """
 
+# mezlint: ref-parity: repro.kernels.ref.wkv_ref
+
 from __future__ import annotations
 
 import functools

@@ -12,6 +12,9 @@ amortize the two-pass absmax+quantize over one VMEM residency, lane-aligned
 round happen entirely in VMEM/VREGs.
 """
 
+# mezlint: ref-parity: repro.kernels.ref.quantize_ref
+# mezlint: ref-parity: repro.kernels.ref.dequantize_ref
+
 from __future__ import annotations
 
 import functools

@@ -44,7 +44,9 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 64, gen: int = 32,
     kw = {"enc_len": prompt_len} if cfg.family == "audio" else {}
     cache = model.init_cache(batch, prompt_len + gen + DECODE_SLACK, **kw)
 
+    # mezlint: disable=MZ02 -- jitted once per serve process, reused every token
     prefill = jax.jit(model.prefill)
+    # mezlint: disable=MZ02 -- same: one wrapper per process
     decode = jax.jit(model.decode_step, donate_argnums=(2,))
 
     t0 = time.monotonic()

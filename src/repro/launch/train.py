@@ -86,6 +86,7 @@ def train(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,
     model = build_model(cfg)
 
     with mesh:
+        # mezlint: disable=MZ02 -- one wrapper per training run, reused across all steps
         step_fn = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
                           out_shardings=bundle.out_shardings,
                           donate_argnums=bundle.donate_argnums)

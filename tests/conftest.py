@@ -1,0 +1,21 @@
+"""Shared test configuration.
+
+When ``MEZLINT_RACE_GUARD=1`` (the CI slow-soak job), every test runs
+with ``HostLog``/``CamBroker`` locks wrapped in the lockset-checking
+proxies from ``repro.analysis.race_guard``: exclusion violations,
+lock-order cycles, and leaked locks fail the test that produced them.
+"""
+
+import pytest
+
+from repro.analysis.race_guard import from_env
+
+
+@pytest.fixture(autouse=True)
+def _race_guard():
+    guard = from_env()
+    if guard is None:
+        yield
+        return
+    with guard:
+        yield

@@ -1,0 +1,8 @@
+"""mezlint fixture: MZ00 -- a suppression without a justification."""
+
+import jax
+
+
+def rewrap(fn):
+    # mezlint: disable=MZ02
+    return jax.jit(fn)

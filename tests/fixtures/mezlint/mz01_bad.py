@@ -1,0 +1,19 @@
+"""mezlint fixture: MZ01 violations -- host syncs inside traced code.
+
+Never imported at runtime; parsed by tests/test_mezlint.py only.
+"""
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def entry(x, y):
+    return helper(x) + y
+
+
+def helper(x):
+    if x > 0:                 # dynamic Python branch on a traced value
+        return float(x)       # host cast of a traced parameter
+    v = x.item()              # explicit host sync
+    return np.abs(x) + v      # host-library call in traced code

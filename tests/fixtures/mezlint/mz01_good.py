@@ -1,0 +1,24 @@
+"""mezlint fixture: MZ01-clean traced code.
+
+Branches only on trace-time-static values (shapes, static params,
+`is None` checks); all math stays in jnp/lax.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("normalize",))
+def entry(x, normalize: bool = True, bias=None):
+    if x.ndim == 2:                       # shape: static under trace
+        x = x[None]
+    if bias is not None:                  # None-check: static
+        x = x + bias
+    return helper(x, normalize)
+
+
+def helper(x, normalize):
+    total = jnp.sum(x, axis=-1)
+    return jnp.where(jnp.asarray(normalize), total / x.shape[-1], total)

@@ -1,0 +1,26 @@
+"""mezlint fixture: MZ02 violations -- retrace smells."""
+
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk_sum(x, k: int):
+    return x[:k].sum()
+
+
+def rewrap_per_call(fn, xs):
+    jitted = jax.jit(fn)                 # fresh wrapper (and cache) per call
+    return [jitted(x) for x in xs]
+
+
+def sweep(xs):
+    out = []
+    for k in range(8):
+        out.append(topk_sum(xs, k=k))    # static arg varies per iteration
+    return out
+
+
+def refresh(tables_cls, table):
+    return tables_cls.from_table(table)  # unpadded: shape follows kept-set

@@ -1,0 +1,25 @@
+"""mezlint fixture: MZ02-clean jit usage."""
+
+import functools
+
+import jax
+
+CAPACITY = 512
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk_sum(x, k: int):
+    return x[:k].sum()
+
+
+def sweep(xs):
+    return [topk_sum(xs, k=4) for _ in range(8)]   # static arg held constant
+
+
+def refresh(tables_cls, table):
+    return tables_cls.from_table(table, capacity=CAPACITY)
+
+
+class Engine:
+    def __init__(self, fn):
+        self._step = jax.jit(fn)          # once-per-object wrapper: blessed

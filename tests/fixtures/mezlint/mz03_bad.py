@@ -1,0 +1,25 @@
+"""mezlint fixture: MZ03 violations -- guarded fields touched unlocked."""
+
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._n = 0         # guarded-by: _lock
+        self._peak = 0      # guarded-by: _lock
+
+    def bump(self):
+        with self._lock:
+            self._n += 1
+        self._peak = max(self._peak, self._n)    # lock already released
+
+    def peek(self):
+        return self._n                           # no lock at all
+
+    # holds-lock: _lock
+    def _reset_unsafe(self):
+        self._n = 0
+
+    def reset(self):
+        self._reset_unsafe()                     # caller holds nothing

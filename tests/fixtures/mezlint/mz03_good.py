@@ -1,0 +1,36 @@
+"""mezlint fixture: MZ03-clean lock discipline."""
+
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._n = 0         # guarded-by: _lock
+        self._peak = 0      # guarded-by: _lock
+
+    def bump(self):
+        with self._lock:
+            self._n += 1
+            self._peak = max(self._peak, self._n)
+
+    def peek(self):
+        with self._lock:
+            return self._n
+
+    # holds-lock: _lock
+    def _reset_unsafe(self):
+        self._n = 0
+
+    def reset(self):
+        with self._lock:
+            self._reset_unsafe()
+
+    def drain(self):
+        lock = self._lock                # alias-tracked acquire/release
+        lock.acquire()
+        try:
+            out, self._n = self._n, 0
+            return out
+        finally:
+            lock.release()

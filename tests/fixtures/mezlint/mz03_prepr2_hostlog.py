@@ -1,0 +1,145 @@
+"""mezlint regression fixture: the pre-PR-2 ``HostLog`` wrap-around race.
+
+This is the host-side log as it stood before the seqlock snapshot fix
+(commit 493fa89), trimmed to the locking-relevant methods, with the
+``# guarded-by:`` annotations the current code carries.  The bug MZ03
+must reproduce: ``point_query``/``range_query`` compute ``order`` under
+``_meta_lock``, release it, then ``_timestamps`` reads
+``self._entries[i].timestamp`` for the whole ring with NO lock held --
+a concurrent wrap-around overwrite hands binary search an unsorted
+array.  The per-entry ``_read_entry`` lock afterwards cannot un-tear the
+already-scanned timestamps.
+"""
+
+import dataclasses
+import threading
+from typing import Iterator, Sequence
+
+import numpy as np
+
+
+class _RWLock:
+    def __init__(self) -> None:
+        self._cond = threading.Condition()
+        self._readers = 0           # guarded-by: _cond
+        self._writer = False        # guarded-by: _cond
+        self._writers_waiting = 0   # guarded-by: _cond
+
+    def acquire_read(self) -> None:
+        with self._cond:
+            while self._writer or self._writers_waiting:
+                self._cond.wait()
+            self._readers += 1
+
+    def release_read(self) -> None:
+        with self._cond:
+            self._readers -= 1
+            if self._readers == 0:
+                self._cond.notify_all()
+
+    def acquire_write(self) -> None:
+        with self._cond:
+            self._writers_waiting += 1
+            while self._writer or self._readers:
+                self._cond.wait()
+            self._writers_waiting -= 1
+            self._writer = True
+
+    def release_write(self) -> None:
+        with self._cond:
+            self._writer = False
+            self._cond.notify_all()
+
+
+@dataclasses.dataclass
+class _Entry:
+    timestamp: float
+    frame: np.ndarray
+    meta: dict
+
+
+class HostLog:
+    def __init__(self, capacity: int, *, num_segments: int = 8):
+        if capacity < num_segments:
+            num_segments = max(1, capacity)
+        self.capacity = int(capacity)
+        self.num_segments = int(num_segments)
+        self._entries = [None] * self.capacity  # guarded-by: _seg_locks
+        self._head = 0          # guarded-by: _meta_lock
+        self._count = 0         # guarded-by: _meta_lock
+        self._last_ts = -np.inf  # guarded-by: _meta_lock
+        self._seg_locks = [_RWLock() for _ in range(self.num_segments)]
+        self._meta_lock = threading.Lock()
+        self.appends = 0        # guarded-by: _meta_lock
+        self.rejects = 0        # guarded-by: _meta_lock
+
+    def _segment_of(self, idx: int) -> int:
+        return (idx * self.num_segments) // self.capacity
+
+    def append(self, timestamp: float, frame: np.ndarray, **meta) -> bool:
+        with self._meta_lock:
+            if timestamp <= self._last_ts:
+                self.rejects += 1
+                return False
+            idx = self._head
+            seg = self._segment_of(idx)
+        lock = self._seg_locks[seg]
+        lock.acquire_write()
+        try:
+            self._entries[idx] = _Entry(timestamp, frame, dict(meta))
+        finally:
+            lock.release_write()
+        with self._meta_lock:
+            self._head = (idx + 1) % self.capacity
+            self._count = min(self._count + 1, self.capacity)
+            self._last_ts = timestamp
+            self.appends += 1
+        return True
+
+    # holds-lock: _meta_lock
+    def _ordered_indices(self) -> list:
+        if self._count < self.capacity:
+            return list(range(self._count))
+        return [(self._head + i) % self.capacity
+                for i in range(self.capacity)]
+
+    def _timestamps(self, order: Sequence[int]) -> np.ndarray:
+        # THE RACE: the whole-ring timestamp scan takes no lock, so a
+        # wrap-around overwrite between _ordered_indices and this read
+        # yields an unsorted array for searchsorted.
+        return np.asarray([self._entries[i].timestamp for i in order])
+
+    def _read_entry(self, idx: int) -> _Entry:
+        seg = self._segment_of(idx)
+        lock = self._seg_locks[seg]
+        lock.acquire_read()
+        try:
+            entry = self._entries[idx]
+        finally:
+            lock.release_read()
+        assert entry is not None
+        return entry
+
+    def point_query(self, timestamp: float):
+        with self._meta_lock:
+            order = self._ordered_indices()
+        if not order:
+            return None
+        ts = self._timestamps(order)
+        pos = int(np.searchsorted(ts, timestamp, side="right")) - 1
+        if pos < 0:
+            return None
+        entry = self._read_entry(order[pos])
+        return entry.timestamp, entry.frame
+
+    def range_query(self, t_start: float, t_stop: float) -> Iterator:
+        with self._meta_lock:
+            order = self._ordered_indices()
+        if not order:
+            return
+        ts = self._timestamps(order)
+        lo = int(np.searchsorted(ts, t_start, side="left"))
+        hi = int(np.searchsorted(ts, t_stop, side="right"))
+        for i in range(lo, hi):
+            entry = self._read_entry(order[i])
+            yield entry.timestamp, entry.frame

@@ -1,0 +1,12 @@
+"""mezlint fixture: MZ04 violations -- f64 leaking into traced code."""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def entry(x):
+    gain = jnp.asarray(1.5, dtype=jnp.float64)   # explicit f64 in the trace
+    y = x.astype("float64")                      # dtype string
+    z = x.astype(float)                          # python float == f64
+    return gain * y + z

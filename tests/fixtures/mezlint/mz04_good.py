@@ -1,0 +1,10 @@
+"""mezlint fixture: MZ04-clean dtype discipline (f32 lanes only)."""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def entry(x):
+    gain = jnp.asarray(1.5, dtype=jnp.float32)
+    return gain * x.astype(jnp.float32)

@@ -1,0 +1,18 @@
+"""mezlint fixture: MZ05 violations -- Pallas kernel hygiene.
+
+No ``# mezlint: ref-parity:`` declaration either, which is itself a
+finding for any module that calls ``pallas_call``.
+"""
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def scale_all(x, scale):
+    def _kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * scale      # closes over a traced local
+
+    return pl.pallas_call(                   # no interpret= flag
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

@@ -1,0 +1,24 @@
+# mezlint: ref-parity: tests.fixtures.mezlint.mz05_good.scale_ref
+"""mezlint fixture: MZ05-clean Pallas kernel."""
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def scale_ref(x, scale):
+    return x * scale
+
+
+def _scale_kernel(x_ref, o_ref, *, scale):
+    o_ref[...] = x_ref[...] * scale
+
+
+def scale_all(x, scale, interpret=False):
+    kernel = functools.partial(_scale_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)

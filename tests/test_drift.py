@@ -19,6 +19,7 @@ import os
 import numpy as np
 import pytest
 
+from repro.analysis.trace_guard import assert_compiled_once, trace_guard
 from repro.core.characterization import characterize
 from repro.core.drift import (DriftConfig, DriftMonitor, DriftParams,
                               drift_init, drift_update)
@@ -111,11 +112,11 @@ class TestDriftMonitor:
         m = DriftMonitor(cams, CFG)
         drifted = {"cam03", "cam11"}
         fired_total = set()
-        for _ in range(CFG.window):
-            samples = {c: (1.0 if c in drifted else 0.02) for c in cams}
-            fired_total |= set(m.observe(samples))
+        with trace_guard(m):
+            for _ in range(CFG.window):
+                samples = {c: (1.0 if c in drifted else 0.02) for c in cams}
+                fired_total |= set(m.observe(samples))
         assert fired_total == drifted
-        assert m.cache_size() == 1
         counts = m.fire_counts()
         assert all(counts[c] == (1 if c in drifted else 0) for c in cams)
 
@@ -128,11 +129,11 @@ class TestDriftMonitor:
 
     def test_threshold_changes_do_not_retrace(self):
         m = DriftMonitor(["a"], CFG)
-        m.observe({"a": 0.1})
-        m.params = DriftParams.from_config(
-            DriftConfig(window=CFG.window, hi=0.9, lo=0.4), n=1)
-        m.observe({"a": 0.1})
-        assert m.cache_size() == 1
+        with trace_guard(m):
+            m.observe({"a": 0.1})
+            m.params = DriftParams.from_config(
+                DriftConfig(window=CFG.window, hi=0.9, lo=0.4), n=1)
+            m.observe({"a": 0.1})
 
 
 # =============================================================================
@@ -184,7 +185,7 @@ class TestAutoRecharacterization:
         # the refresh landed AFTER the injection, detected from the stream
         assert min(e["t"] for e in refreshed) > 2.0
         assert res.drift_fire_counts == {"cam0": 1, "cam1": 0}
-        assert res.drift_cache_size == 1
+        assert_compiled_once(res.drift_cache_size, "drift step")
 
     def test_scene_shift_detected_and_tables_governed_live(
             self, simple_tables):
@@ -375,8 +376,8 @@ class TestDriftSoak:
         )
         res = run_scenario(spec, tables=tables)
         assert len(res.rows) == 3 * 160
-        assert res.fleet_cache_size == 1
-        assert res.drift_cache_size == 1
+        assert_compiled_once(res.fleet_cache_size, "fleet step")
+        assert_compiled_once(res.drift_cache_size, "drift step")
         refreshed = {e["camera_id"] for e in res.events_log
                      if e["kind"] == "table_refresh"
                      and "re-swept" in e["detail"]}

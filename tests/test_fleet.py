@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 
 from benchmarks.common import synthetic_controller_table as synthetic_table
+from repro.analysis.trace_guard import assert_compiled_once, trace_guard
 from repro.core.channel import calibrated_channel
 from repro.core.characterization import (LatencyRegression,
                                          fit_latency_regression)
@@ -58,30 +59,32 @@ class TestFleetParity:
         n = 64
         cams, hosts, fleet, rng = build_fleet(n)
         swap_at, retarget_at = 20, 32
-        for step in range(48):
-            if step == swap_at:
-                # re-characterization lands on 5 cameras at once
-                for i in (3, 17, 31, 44, 63):
-                    fresh = synthetic_table(20 + i % 7, smin=3e3 + 11.0 * i,
-                                            smax=7e4)
-                    cams[i].controller.swap_table(fresh)
-                    cams[i].table_version += 1
-                    hosts[i].swap_table(fresh)
-            if step == retarget_at:
-                # live QoS renegotiation on another subset
-                for i in (0, 8, 50):
-                    cams[i].controller.set_target(0.075, 0.91)
-                    cams[i].qos_version += 1
-                    hosts[i].set_target(0.075, 0.91)
-            fb = {c.camera_id: float(rng.uniform(0.005, 0.5)) for c in cams}
-            decisions = fleet.decide(fb)
-            for i, cam in enumerate(cams):
-                dh = hosts[i].update(fb[cam.camera_id])
-                df = decisions[cam.camera_id]
-                assert df.setting_index == dh.setting_index, (step, i)
-                assert df.acted == dh.acted, (step, i)
-                assert df.feasible == dh.feasible, (step, i)
-        assert fleet.cache_size() == 1
+        with trace_guard(fleet):
+            for step in range(48):
+                if step == swap_at:
+                    # re-characterization lands on 5 cameras at once
+                    for i in (3, 17, 31, 44, 63):
+                        fresh = synthetic_table(20 + i % 7,
+                                                smin=3e3 + 11.0 * i,
+                                                smax=7e4)
+                        cams[i].controller.swap_table(fresh)
+                        cams[i].table_version += 1
+                        hosts[i].swap_table(fresh)
+                if step == retarget_at:
+                    # live QoS renegotiation on another subset
+                    for i in (0, 8, 50):
+                        cams[i].controller.set_target(0.075, 0.91)
+                        cams[i].qos_version += 1
+                        hosts[i].set_target(0.075, 0.91)
+                fb = {c.camera_id: float(rng.uniform(0.005, 0.5))
+                      for c in cams}
+                decisions = fleet.decide(fb)
+                for i, cam in enumerate(cams):
+                    dh = hosts[i].update(fb[cam.camera_id])
+                    df = decisions[cam.camera_id]
+                    assert df.setting_index == dh.setting_index, (step, i)
+                    assert df.acted == dh.acted, (step, i)
+                    assert df.feasible == dh.feasible, (step, i)
 
     def test_lanes_without_feedback_hold(self):
         cams, hosts, fleet, rng = build_fleet(8)
@@ -220,7 +223,7 @@ class TestFleetScenarioParity:
         host = run_scenario(self._spec(fleet=False, record_decisions=False),
                             tables=tables)
         assert flt.to_json() == host.to_json()
-        assert flt.fleet_cache_size == 1
+        assert_compiled_once(flt.fleet_cache_size, "fleet step")
 
     def test_history_replays_against_host_controllers(self):
         """Replay the recorded fleet decision history through fresh host
@@ -255,7 +258,7 @@ class TestFleetScenarioParity:
         refreshed = [e for e in res.events_log
                      if e.get("kind") == "TableRefresh"]
         assert refreshed and refreshed[0]["refreshed"] is True
-        assert res.fleet_cache_size == 1
+        assert_compiled_once(res.fleet_cache_size, "fleet step")
         assert len(res.rows) == 3 * 40
 
 
@@ -306,10 +309,10 @@ class TestFleetDriftParity:
             assert res.drift_fire_counts["cam1"] >= 1
             assert res.drift_fire_counts["cam0"] == 0
             assert res.drift_fire_counts["cam2"] == 0
-            assert res.drift_cache_size == 1
+            assert_compiled_once(res.drift_cache_size, "drift step")
         assert flt.to_json() == host.to_json()
         # drift-triggered per-lane table swaps never recompile the fleet
-        assert flt.fleet_cache_size == 1
+        assert_compiled_once(flt.fleet_cache_size, "fleet step")
         assert host.fleet_cache_size is None      # host path has no fleet
 
     def test_sync_reports_exactly_the_refreshed_lanes(self):

@@ -1,0 +1,268 @@
+"""mezlint: known-good / known-bad fixtures per rule, CLI exit codes,
+baseline mechanics, and the runtime guards (trace_guard / race_guard)."""
+
+import json
+import threading
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import race_guard as rg
+from repro.analysis.mezlint import main, run_paths
+from repro.analysis.trace_guard import (TraceGuardError, assert_compiled_once,
+                                        trace_guard)
+
+ROOT = Path(__file__).resolve().parent.parent
+FIXDIR = ROOT / "tests" / "fixtures" / "mezlint"
+
+
+def lint(name: str):
+    return run_paths([str(FIXDIR / name)])
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+# =============================================================================
+# Static rules on fixtures
+# =============================================================================
+
+
+class TestRuleFixtures:
+    @pytest.mark.parametrize("name,rule", [
+        ("mz00_bad.py", "MZ00"),
+        ("mz01_bad.py", "MZ01"),
+        ("mz02_bad.py", "MZ02"),
+        ("mz03_bad.py", "MZ03"),
+        ("mz04_bad.py", "MZ04"),
+        ("mz05_bad.py", "MZ05"),
+    ])
+    def test_bad_fixture_triggers_rule(self, name, rule):
+        assert rule in rules_of(lint(name))
+
+    @pytest.mark.parametrize("name", [
+        "mz01_good.py", "mz02_good.py", "mz03_good.py", "mz04_good.py",
+        "mz05_good.py",
+    ])
+    def test_good_fixture_is_clean(self, name):
+        assert lint(name) == []
+
+    def test_mz01_flags_each_sync_kind(self):
+        details = {f.detail for f in lint("mz01_bad.py")}
+        assert any(d.startswith("branch:if") for d in details)
+        assert any(d.startswith("cast:float") for d in details)
+        assert "sync:item" in details
+        assert "host-call:np.abs" in details
+
+    def test_mz02_flags_each_smell(self):
+        details = {f.detail for f in lint("mz02_bad.py")}
+        assert any(d.startswith("jit-wrap") for d in details)
+        assert any(d.startswith("loop-static:topk_sum.k") for d in details)
+        assert any(d.startswith("from_table") for d in details)
+
+    def test_mz03_caller_side_holds_lock(self):
+        details = {f.detail for f in lint("mz03_bad.py")}
+        assert "call-unlocked:_reset_unsafe@Counter.reset" in details
+
+    def test_mz05_flags_closure_and_interpret_and_parity(self):
+        details = {f.detail for f in lint("mz05_bad.py")}
+        assert "closure:_kernel.scale" in details
+        assert "no-interpret@scale_all" in details
+        assert "no-ref-parity" in details
+
+    def test_prepr2_hostlog_wraparound_race_reproduced(self):
+        """The pre-PR-2 HostLog (commit 493fa89) read the whole timestamp
+        ring with no lock held -- MZ03 must pin the race to exactly that
+        scan and nothing else."""
+        findings = lint("mz03_prepr2_hostlog.py")
+        assert [f.rule for f in findings] == ["MZ03"]
+        (f,) = findings
+        assert f.scope == "HostLog._timestamps"
+        assert "_entries" in f.detail
+
+    def test_current_src_is_clean(self):
+        """The shipped tree lints clean against the committed baseline."""
+        rc = main([str(ROOT / "src"),
+                   "--baseline", str(ROOT / "mezlint.baseline.json")])
+        assert rc == 0
+
+
+# =============================================================================
+# CLI / baseline mechanics
+# =============================================================================
+
+
+class TestCli:
+    @pytest.mark.parametrize("name", [
+        "mz01_bad.py", "mz02_bad.py", "mz03_bad.py", "mz04_bad.py",
+        "mz05_bad.py",
+    ])
+    def test_bad_fixture_exits_nonzero(self, name):
+        assert main([str(FIXDIR / name), "--no-baseline"]) == 1
+
+    def test_baseline_accepts_known_findings(self, tmp_path):
+        base = tmp_path / "base.json"
+        target = str(FIXDIR / "mz04_bad.py")
+        assert main([target, "--write-baseline", "--baseline",
+                     str(base)]) == 0
+        assert main([target, "--baseline", str(base)]) == 0
+        keys = json.loads(base.read_text())["findings"]
+        assert keys and all(k.startswith("MZ04|") for k in keys)
+
+    def test_check_shrink_rejects_growth(self, tmp_path):
+        old = tmp_path / "old.json"
+        new = tmp_path / "new.json"
+        assert main([str(FIXDIR / "mz04_good.py"), "--write-baseline",
+                     "--baseline", str(old)]) == 0
+        assert main([str(FIXDIR / "mz04_bad.py"), "--write-baseline",
+                     "--baseline", str(new)]) == 0
+        assert main(["--check-shrink", str(old),
+                     "--baseline", str(new)]) == 1
+        assert main(["--check-shrink", str(new),
+                     "--baseline", str(old)]) == 0
+
+    def test_rules_subset(self):
+        findings = run_paths([str(FIXDIR / "mz01_bad.py")], rules={"MZ04"})
+        assert findings == []
+
+
+# =============================================================================
+# trace_guard
+# =============================================================================
+
+
+class _FakeJitted:
+    def __init__(self, size=0):
+        self._n = size
+
+    def cache_size(self):
+        return self._n
+
+    def compile(self):
+        self._n += 1
+
+
+class TestTraceGuard:
+    def test_allows_warmup_compile(self):
+        fn = _FakeJitted()
+        with trace_guard(fn):
+            fn.compile()
+        assert fn.cache_size() == 1
+
+    def test_fails_on_recompile(self):
+        fn = _FakeJitted()
+        with pytest.raises(TraceGuardError, match="0 -> 2"):
+            with trace_guard(fn):
+                fn.compile()
+                fn.compile()
+
+    def test_warm_target_must_not_grow(self):
+        fn = _FakeJitted(size=3)
+        with trace_guard(fn):
+            pass                           # warm: no growth allowed
+        with pytest.raises(TraceGuardError):
+            with trace_guard(fn):
+                fn.compile()
+
+    def test_expect_raises_allowance(self):
+        fn = _FakeJitted()
+        with trace_guard(fn, expect=2):
+            fn.compile()
+            fn.compile()
+
+    def test_assert_compiled_once(self):
+        assert_compiled_once(1)
+        with pytest.raises(TraceGuardError, match="got 7"):
+            assert_compiled_once(7, "fleet cache")
+
+
+# =============================================================================
+# race_guard
+# =============================================================================
+
+
+class _PermissiveRW:
+    """An RW lock that excludes nothing -- the proxy must notice."""
+
+    def acquire_read(self):
+        pass
+
+    def release_read(self):
+        pass
+
+    def acquire_write(self):
+        pass
+
+    def release_write(self):
+        pass
+
+
+class TestRaceGuard:
+    def test_detects_broken_rw_exclusion(self):
+        guard = rg.race_guard(strict=False)
+        proxy = rg._RWLockProxy(_PermissiveRW(), guard.shared, "seg[0]")
+        done = threading.Event()
+
+        def writer():
+            proxy.acquire_write()
+            done.wait(1.0)
+            proxy.release_write()
+
+        t = threading.Thread(target=writer)
+        t.start()
+        try:
+            while not proxy._writers:
+                pass
+            proxy.acquire_read()           # admitted during a write: bug
+            proxy.release_read()
+        finally:
+            done.set()
+            t.join()
+        assert any("reader admitted" in v for v in guard.violations)
+
+    def test_detects_lock_order_cycle(self):
+        guard = rg.race_guard(strict=False)
+        a = rg._LockProxy(threading.Lock(), guard.shared, "A")
+        b = rg._LockProxy(threading.Lock(), guard.shared, "B")
+        with a:
+            with b:
+                pass
+        with b:
+            with a:
+                pass
+        assert any("lock-order cycle" in v for v in guard.violations)
+
+    def test_hostlog_soak_is_clean(self):
+        """Threaded append/query hammering on the CURRENT HostLog records
+        no violations -- the seqlock snapshot never breaks lock discipline."""
+        from repro.core.log import HostLog
+
+        with rg.race_guard() as guard:
+            log = HostLog(32, num_segments=4)
+            frame = np.zeros((4, 4), dtype=np.uint8)
+            stop = threading.Event()
+
+            def reader():
+                while not stop.is_set():
+                    log.point_query(1e9)
+                    len(log)
+
+            threads = [threading.Thread(target=reader) for _ in range(2)]
+            for t in threads:
+                t.start()
+            try:
+                for i in range(400):
+                    log.append(float(i), frame)
+            finally:
+                stop.set()
+                for t in threads:
+                    t.join()
+        assert guard.violations == []
+
+    def test_from_env(self, monkeypatch):
+        monkeypatch.delenv("MEZLINT_RACE_GUARD", raising=False)
+        assert rg.from_env() is None
+        monkeypatch.setenv("MEZLINT_RACE_GUARD", "1")
+        assert isinstance(rg.from_env(), rg.race_guard)
