@@ -26,7 +26,11 @@ the fleet gate also runs against ``benchmarks/baseline_fleet.json``: the
 vmapped fleet step must stay sublinear in camera count
 (``scaling_256_over_64`` under the committed ceiling -- linear would be
 4.0), keep a healthy speedup over the per-camera jitted-dispatch loop, and
-compile exactly once across the sweep.
+compile exactly once across the sweep.  The whole-poll gates additionally
+bound the REAL ``poll_subscription`` cost (fetch + merge + one fused
+sharded tick): per-camera cost at 64 lanes under a generous absolute
+ceiling, and per-camera cost at 4096 lanes on the forced 8-device mesh
+within the committed flatness ratio of the 64-lane figure.
 
 When ``BENCH_fig12.json`` exists (produced by ``python -m benchmarks.paper
 fig12``), the fig12 gate runs against ``benchmarks/baseline_fig12.json``:
@@ -144,6 +148,35 @@ def check_fleet(fresh: dict, baseline: dict) -> list[str]:
     elif cache > max_cache:
         failures.append(f"cache_size: {cache} compiled variants (> "
                         f"{max_cache}) -- the fleet step retraced")
+
+    # whole-poll gates (fused poll_subscription path); baselines that
+    # predate the metrics skip them
+    per_cam_ceiling = baseline.get("max_whole_poll_us_per_cam_64")
+    if per_cam_ceiling is not None:
+        got = (fresh.get("whole_poll_us_per_cam") or {}).get("64")
+        if got is None:
+            failures.append("whole_poll_us_per_cam[64]: missing from "
+                            "fleet results")
+        elif got > per_cam_ceiling:
+            failures.append(
+                f"whole_poll_us_per_cam[64]: {got:.1f} us exceeds the "
+                f"committed ceiling {per_cam_ceiling:.1f} us -- the whole "
+                f"poll (fetch + merge + fused tick) regressed")
+    flat_ceiling = baseline.get("max_whole_poll_flatness_4096_over_64")
+    if flat_ceiling is not None:
+        sharded = fresh.get("sharded") or {}
+        flat = sharded.get("flatness_4096_over_64")
+        if flat is None:
+            failures.append("sharded.flatness_4096_over_64: missing from "
+                            "fleet results (run fleet_sweep without "
+                            "--skip-sharded)")
+        elif flat > flat_ceiling:
+            failures.append(
+                f"sharded.flatness_4096_over_64: {flat:.2f} exceeds "
+                f"{flat_ceiling:.2f} -- per-camera whole-poll cost at 4096 "
+                f"lanes on the {sharded.get('devices')}-device mesh is no "
+                f"longer flat relative to 64 lanes (per-poll host work "
+                f"crept back to O(N))")
     return failures
 
 
@@ -248,6 +281,11 @@ def main() -> int:
         print(f"fleet:    scaling_256/64={fmt('scaling_256_over_64', '.2f')} "
               f"speedup_vs_loop={fmt('speedup_vs_python_loop_64', '.1f')}x "
               f"cache={fleet_fresh.get('cache_size')}")
+        sharded = fleet_fresh.get("sharded") or {}
+        print(f"fleet:    whole_poll_us_per_cam="
+              f"{fleet_fresh.get('whole_poll_us_per_cam')} "
+              f"sharded_flatness_4096/64="
+              f"{sharded.get('flatness_4096_over_64')}")
     else:
         print(f"fleet:    {args.fleet_fresh} absent -- fleet gate skipped")
     if os.path.exists(args.fig12_fresh):

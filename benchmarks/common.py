@@ -17,7 +17,7 @@ RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/bench")
 # v3: tables carry the drift monitor's scene-activity statistic + source
 # provenance; v2 pickles (no such fields) would break dataclasses.replace
 # on live tables, so they must not be mixed in.
-CACHE = os.path.join(RESULTS_DIR, "_tables_v3.pkl")
+CACHE = os.path.join(RESULTS_DIR, "_tables_v4.pkl")  # v4: residual_spread
 
 
 def ensure_dir() -> None:

@@ -14,6 +14,14 @@ Measured numbers:
   * ``decide_us_per_step_64``  the full broker-facing ``FleetController.
                                decide`` tick (sync + dispatch + readback +
                                host decision objects)
+  * ``whole_poll_us``          a REAL ``EdgeBroker.poll_subscription`` --
+                               frame fetch + merge + the fused fleet tick --
+                               per poll, per camera count
+  * ``sharded``                the same whole-poll measurement with the
+                               fused tick partitioned over an 8-device mesh
+                               (``--xla_force_host_platform_device_count``)
+                               at 64 / 512 / 1024 / 4096 lanes, plus the
+                               per-camera flatness ratio 4096-vs-64
   * ``cache_size``             compiled variants across the whole sweep of
                                one fleet (must stay 1 per fleet instance)
 
@@ -21,13 +29,17 @@ CI gates these via ``benchmarks/check_regression.py`` against the
 conservative thresholds committed in ``benchmarks/baseline_fleet.json``.
 
   PYTHONPATH=src python -m benchmarks.fleet_sweep [--repeats 5]
+      [--skip-sharded]
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -49,6 +61,11 @@ ROOT_OUT = os.path.join(os.path.dirname(os.path.dirname(
 CAPACITY = 512          # broker TABLE_CAPACITY: the deployed padding
 FLEET_SIZES = (64, 128, 256)
 STEPS = 200
+POLL_SIZES = (64, 256)              # host (1-device) whole-poll sizes
+SHARDED_SIZES = (64, 512, 1024, 4096)
+SHARDED_DEVICES = 8
+POLLS = 25              # timed polls per whole-poll repeat
+MAX_FRAMES = 16         # poll_subscription budget (broker default)
 
 synthetic_table = synthetic_controller_table
 
@@ -174,12 +191,104 @@ def time_decide(n: int, *, steps: int, repeats: int) -> float:
     return best * 1e6
 
 
+def time_whole_poll(n: int, *, polls: int, repeats: int,
+                    mesh=None) -> float:
+    """Wall time of a REAL ``EdgeBroker.poll_subscription`` over an
+    n-camera fleet subscription: frame fetch across the simulated channel,
+    timestamp merge, and the single fused controller/drift dispatch.
+
+    Tiny 32x32 frames keep the synthetic payload cost from drowning the
+    control plane; each camera publishes just enough frames that the
+    subscription never drains mid-measurement (a poll budget of
+    ``MAX_FRAMES`` visits only ~16 cameras per round-robin rotation).
+    """
+    from repro.core.broker import MezSystem
+    from repro.core.channel import calibrated_channel
+    from repro.core.session import MezClient
+    from repro.data.camera import CameraConfig, SyntheticCamera
+
+    reg = LatencyRegression(slope=1.2e-6, intercept=0.008)
+    system = MezSystem(calibrated_channel(seed=11))
+    total_polls = 3 + polls * repeats            # warmup + timed
+    frames_per_cam = math.ceil(total_polls * MAX_FRAMES / n) + 2
+    src = SyntheticCamera(CameraConfig(camera_id="clip", height=32,
+                                       width=32, seed=5))
+    clip = [(ts, f) for ts, f, _ in src.stream(frames_per_cam)]
+    ids = []
+    for i in range(n):
+        cid = f"cam{i:04d}"
+        ids.append(cid)
+        cam = system.add_camera(cid)
+        cam.background = src.background
+        tbl = synthetic_table(12 + i % 29, smin=2e3 + 37.0 * (i % 64),
+                              smax=9e4 - 101.0 * (i % 64))
+        cam.set_target(0.040 + 0.001 * (i % 17), 0.90 + 0.002 * (i % 4),
+                       tbl, reg)
+        for ts, f in clip:
+            cam.publish(ts, f)
+    sess = MezClient(system).open_session("bench")
+    sub = sess.subscribe(ids, 0.0, 1e9, latency=0.050, accuracy=0.90,
+                         fleet=True, mesh=mesh)
+    for _ in range(3):                           # warmup (compiles the tick)
+        sub.poll(max_frames=MAX_FRAMES)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(polls):
+            sub.poll(max_frames=MAX_FRAMES)
+        best = min(best, (time.perf_counter() - t0) / polls)
+    fleet = system.edge.subscription_fleet(sub.subscription_id)
+    assert fleet is not None and fleet.cache_size() == 1
+    sess.close()
+    return best * 1e6
+
+
+CHILD_MARKER = "WHOLE_POLL_RESULT "
+
+
+def run_sharded_child(n: int, *, devices: int, polls: int,
+                      repeats: int) -> float:
+    """Measure ``time_whole_poll`` on a forced ``devices``-device host mesh
+    in a SUBPROCESS: ``--xla_force_host_platform_device_count`` only takes
+    effect before jax initializes, which this (parent) process already did."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.fleet_sweep",
+         "--whole-poll-child", str(n), "--mesh-devices", str(devices),
+         "--polls", str(polls), "--repeats", str(repeats)],
+        env=env, capture_output=True, text=True, check=True)
+    for line in proc.stdout.splitlines():
+        if line.startswith(CHILD_MARKER):
+            return float(json.loads(line[len(CHILD_MARKER):])["whole_poll_us"])
+    raise RuntimeError(f"sharded child (n={n}) produced no result marker:\n"
+                       f"{proc.stdout}\n{proc.stderr}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--repeats", type=int, default=5,
                     help="best-of-N timing repeats (CI runners are noisy)")
     ap.add_argument("--steps", type=int, default=STEPS)
+    ap.add_argument("--polls", type=int, default=POLLS,
+                    help="timed poll_subscription calls per repeat")
+    ap.add_argument("--skip-sharded", action="store_true",
+                    help="skip the 8-device mesh subprocess sweep")
+    ap.add_argument("--whole-poll-child", type=int, default=None,
+                    metavar="N", help="internal: measure one whole-poll "
+                    "size on a forced mesh and print the result marker")
+    ap.add_argument("--mesh-devices", type=int, default=None)
     args = ap.parse_args()
+
+    if args.whole_poll_child is not None:
+        us = time_whole_poll(args.whole_poll_child, polls=args.polls,
+                             repeats=max(args.repeats - 2, 2),
+                             mesh=args.mesh_devices)
+        print(CHILD_MARKER + json.dumps(
+            {"n": args.whole_poll_child, "devices": args.mesh_devices,
+             "whole_poll_us": us}))
+        return
 
     out: dict = {"fleet_sizes": list(FLEET_SIZES), "capacity": CAPACITY,
                  "steps": args.steps, "us_per_step": {},
@@ -201,6 +310,32 @@ def main() -> None:
     out["decide_us_per_step_64"] = time_decide(
         FLEET_SIZES[0], steps=max(args.steps // 4, 25),
         repeats=max(args.repeats - 2, 2))
+
+    out["whole_poll_us"] = {}
+    out["whole_poll_us_per_cam"] = {}
+    for n in POLL_SIZES:
+        us = time_whole_poll(n, polls=args.polls,
+                             repeats=max(args.repeats - 2, 2))
+        out["whole_poll_us"][str(n)] = us
+        out["whole_poll_us_per_cam"][str(n)] = us / n
+        print(f"poll  n={n:4d}: {us:9.1f} us/poll  ({us / n:6.2f} us/cam)")
+    if not args.skip_sharded:
+        sh: dict = {"devices": SHARDED_DEVICES, "whole_poll_us": {},
+                    "whole_poll_us_per_cam": {}}
+        for n in SHARDED_SIZES:
+            us = run_sharded_child(n, devices=SHARDED_DEVICES,
+                                   polls=args.polls, repeats=args.repeats)
+            sh["whole_poll_us"][str(n)] = us
+            sh["whole_poll_us_per_cam"][str(n)] = us / n
+            print(f"poll  n={n:4d} mesh={SHARDED_DEVICES}: {us:9.1f} "
+                  f"us/poll  ({us / n:6.2f} us/cam)")
+        lo_n, hi_n = str(SHARDED_SIZES[0]), str(SHARDED_SIZES[-1])
+        sh["flatness_4096_over_64"] = (sh["whole_poll_us_per_cam"][hi_n]
+                                       / sh["whole_poll_us_per_cam"][lo_n])
+        out["sharded"] = sh
+        print(f"per-camera whole-poll flatness {hi_n}/{lo_n} on "
+              f"{SHARDED_DEVICES}-device mesh: "
+              f"{sh['flatness_4096_over_64']:.3f} (<= 1.5 required)")
     out["cache_size"] = 1                   # asserted inside the timers
 
     ensure_dir()

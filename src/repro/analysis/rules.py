@@ -29,6 +29,14 @@ MZ05   Pallas kernel hygiene: kernels must be named module-level functions
        close over enclosing-scope values, every ``pallas_call`` must thread
        an ``interpret=`` flag, and each kernel module must declare its
        oracle twin with ``# mezlint: ref-parity: <symbol>``.
+MZ06   Poll-path loop discipline: inside a function marked
+       ``# mezlint: poll-path`` (the per-poll hot path), a Python loop or
+       comprehension must not apply control decisions per camera --
+       ``.setting_for(...)``, controller ``.update(...)``, or
+       ``ControlDecision(...)`` construction inside the loop is O(N) host
+       work per poll.  Fold the application into the fused fleet tick (one
+       compiled dispatch) or materialize decisions lazily per fetched
+       camera.
 =====  ========================================================================
 """
 
@@ -37,6 +45,7 @@ from __future__ import annotations
 import ast
 import builtins
 import dataclasses
+import re
 
 from repro.analysis.astindex import (GUARDED_BY_RE, FunctionInfo, Index,
                                      _params_of, body_of, inherited_static,
@@ -496,6 +505,58 @@ def _free_vars(fi: FunctionInfo) -> list[tuple[str, int]]:
     return sorted(out)
 
 
+# =============================================================================
+# MZ06 -- per-camera decision application on the poll path
+# =============================================================================
+
+POLL_PATH_RE = re.compile(r"#\s*mezlint:\s*poll-path\b")
+MZ06_CALLS = ("setting_for", "update")
+
+
+def _poll_marked(fi: FunctionInfo) -> bool:
+    for ln in (fi.lineno, fi.lineno - 1):
+        if ln >= 1 and POLL_PATH_RE.search(fi.module.line(ln)):
+            return True
+    return False
+
+
+def check_mz06(idx: Index) -> list[Finding]:
+    out = []
+    loops = (ast.For, ast.While, ast.ListComp, ast.SetComp, ast.DictComp,
+             ast.GeneratorExp)
+    for qn in sorted(idx.functions):
+        fi = idx.functions[qn]
+        if not _poll_marked(fi):
+            continue
+        scope = _scope_of(fi)
+        seen: set[int] = set()
+        for loop in ast.walk(fi.node):
+            if not isinstance(loop, loops):
+                continue
+            for node in ast.walk(loop):
+                if not isinstance(node, ast.Call) or id(node) in seen:
+                    continue
+                func = node.func
+                name = None
+                if isinstance(func, ast.Attribute) and \
+                        func.attr in MZ06_CALLS:
+                    name = func.attr
+                elif isinstance(func, ast.Name) and \
+                        func.id == "ControlDecision":
+                    name = "ControlDecision"
+                if name is None:
+                    continue
+                seen.add(id(node))
+                out.append(_mk(
+                    "MZ06", fi, node.lineno, scope,
+                    f"per-camera decision application `{name}(...)` inside "
+                    "a Python loop on the poll path: O(N) host work per "
+                    "poll -- fold it into the fused fleet tick or "
+                    "materialize lazily per fetched camera",
+                    f"poll-loop:{name}@{node.lineno}"))
+    return out
+
+
 ALL_RULES = {
     "MZ00": check_mz00,
     "MZ01": check_mz01,
@@ -503,6 +564,7 @@ ALL_RULES = {
     "MZ03": check_mz03,
     "MZ04": check_mz04,
     "MZ05": check_mz05,
+    "MZ06": check_mz06,
 }
 
 

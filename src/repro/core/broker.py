@@ -38,8 +38,9 @@ from repro.core.api import (BrokerDown, DeliveredFrame, EventKind, FrameBatch,
 from repro.core.channel import WirelessChannel
 from repro.core.characterization import CharacterizationTable, LatencyRegression
 from repro.core.controller import (ControlDecision, ControllerConfig,
-                                   FleetController, JaxControllerTables,
-                                   LatencyController, swap_tables)
+                                   FleetController, FleetTickResult,
+                                   JaxControllerTables, LatencyController,
+                                   swap_tables)
 from repro.core.drift import DriftConfig, DriftMonitor, relative_size_error
 from repro.core import knobs as K
 from repro.core.knobs import wire_size
@@ -564,6 +565,23 @@ class _Subscription:
     # START of the next poll so a batch the subscriber is still holding
     # never references a table swapped out from under it
     pending_refresh: list = dataclasses.field(default_factory=list)
+    # device mesh for the fleet control plane (None | int | jax Mesh,
+    # resolved by FleetController via repro.sharding.partition.fleet_mesh)
+    mesh: object = None
+    # cached round-robin order over active cameras, invalidated whenever a
+    # camera's active flag flips (crash/fail, drain, detach, reattach) --
+    # poll no longer re-sorts the registry every call
+    active_order: list | None = None
+    # fleet fast path: lane-ordered incremental feedback (per-fetch p95,
+    # identical to the per-poll recomputation since feedback windows only
+    # mutate inside ``_fetch_into``) and the previous poll's aggregated
+    # drift residuals, consumed by the fused tick at the next poll's start
+    lat_lane: np.ndarray | None = None
+    lat_valid: np.ndarray | None = None
+    drift_pending: tuple | None = None
+
+    def invalidate_active(self) -> None:
+        self.active_order = None
 
 
 @dataclasses.dataclass
@@ -657,6 +675,7 @@ class EdgeBroker:
                             credit_limit: int = 2,
                             retarget: bool = True,
                             fleet: bool = False,
+                            mesh=None,
                             auto_recharacterize: bool = False,
                             drift_config: DriftConfig | None = None) -> str:
         """Register a (possibly multi-camera) subscription on a session.
@@ -696,6 +715,8 @@ class EdgeBroker:
             raise ValueError("subscription needs at least one camera spec")
         if fleet and not controlled:
             raise ValueError("fleet control plane requires controlled=True")
+        if mesh is not None and not fleet:
+            raise ValueError("mesh partitioning requires fleet=True")
         if auto_recharacterize and not controlled:
             raise ValueError("auto_recharacterize requires controlled=True")
         for spec in specs:
@@ -706,11 +727,22 @@ class EdgeBroker:
                    for spec in specs}
         rec = _Subscription(sub_id, session_id, sess.application_id, cameras,
                             controlled, feedback_window, credit_limit,
-                            want_fleet=fleet)
+                            want_fleet=fleet, mesh=mesh)
         if auto_recharacterize:
             # lane order is the sorted camera-id order, matching the fleet
-            # stack, so drift telemetry and fleet lanes line up
-            rec.drift = DriftMonitor(sorted(cameras), drift_config)
+            # stack, so drift telemetry and fleet lanes line up.  With no
+            # explicit config, each lane's hysteresis thresholds are
+            # learned from its calibration clip's own residual spread
+            # (``drift.learned_thresholds``; hand-set constants floor it).
+            spreads = None
+            if drift_config is None:
+                spreads = {}
+                for cid in cameras:
+                    ctl = self._cams[cid].controller
+                    tbl = ctl.table if ctl is not None else None
+                    spreads[cid] = getattr(tbl, "residual_spread", None)
+            rec.drift = DriftMonitor(sorted(cameras), drift_config,
+                                     spreads=spreads)
         if retarget:
             for spec in specs:
                 try:
@@ -743,9 +775,31 @@ class EdgeBroker:
             if cam is None or cam.controller is None:
                 return None
             cams.append(cam)
-        rec.fleet = FleetController(cams, capacity=TABLE_CAPACITY)
+        rec.fleet = FleetController(cams, capacity=TABLE_CAPACITY,
+                                    mesh=rec.mesh)
+        if rec.drift is not None:
+            rec.fleet.attach_drift(rec.drift)
+        # lane-ordered incremental feedback, seeded from whatever the host
+        # path accumulated before the fleet went live (lazy join)
+        n = len(cams)
+        rec.lat_lane = np.zeros(n, np.float32)
+        rec.lat_valid = np.zeros(n, bool)
+        for i, cid in enumerate(rec.fleet.cam_ids):
+            w = rec.cameras[cid].window
+            if w:
+                rec.lat_lane[i] = np.percentile(w, 95)
+                rec.lat_valid[i] = True
         return rec.fleet
 
+    def _active_order(self, rec: _Subscription) -> list:
+        """The sorted active-camera round-robin base order, cached until a
+        camera's active flag flips (``_Subscription.invalidate_active``)."""
+        if rec.active_order is None:
+            rec.active_order = [cid for cid in sorted(rec.cameras)
+                                if rec.cameras[cid].active]
+        return rec.active_order
+
+    # mezlint: poll-path
     def poll_subscription(self, subscription_id: str, *,
                           max_frames: int = 16,
                           deadline: float | None = None) -> FrameBatch:
@@ -768,38 +822,31 @@ class EdgeBroker:
         rec = self._subscriptions.get(subscription_id)
         if rec is None:
             return FrameBatch((), subscription_id)
+        fleet = self._ensure_fleet(rec) if rec.controlled else None
         self._apply_pending_refreshes(rec)
         t0 = time.monotonic()
-        active = [cid for cid in sorted(rec.cameras)
-                  if rec.cameras[cid].active]
+        active = self._active_order(rec)
         out: list[DeliveredFrame] = []
+        decisions = None
+        if fleet is not None and (active or rec.drift is not None):
+            # ONE fused compiled dispatch per poll: the controller step for
+            # every serving camera, the drift-monitor tick on the residuals
+            # aggregated at the END of the previous poll, and the
+            # decision->knob-code application, in a single jitted (and,
+            # with a mesh, camera-sharded) call.  Fired drift lanes
+            # re-characterize on the host and the SAME compiled tick
+            # re-decides against the fresh tables -- so the host side does
+            # I/O and bookkeeping only.  Note the tick covers every serving
+            # camera even when a saturated ``max_frames`` ends the fetch
+            # loop early; with the default share/credit sizing every camera
+            # is fetched each poll and fused decisions match the host path
+            # exactly.
+            decisions = self._fleet_tick(rec, fleet, active)
         if active:
             k = rec.rr_offset % len(active)
             rec.rr_offset += 1
             order = active[k:] + active[:k]
             share = max(1, max_frames // len(order))
-            decisions: dict[str, ControlDecision] | None = None
-            fleet = self._ensure_fleet(rec) if rec.controlled else None
-            if fleet is not None:
-                # ONE compiled vmapped step decides for every serving
-                # camera of the poll (a fleet-wide control tick).  Cameras
-                # without feedback yet hold their operating point (their
-                # lane sees zero error); cameras whose broker is already
-                # down are left out entirely -- the host path never
-                # consults their controller either (fetch raises first).
-                # Note the tick covers every serving camera even when a
-                # saturated ``max_frames`` ends the fetch loop early; with
-                # the default share/credit sizing every camera is fetched
-                # each poll and fleet decisions match the host path
-                # exactly.
-                fb: dict[str, float | None] = {}
-                for cid in order:
-                    cam = self._cams.get(cid)
-                    if cam is None or cam.crashed:
-                        continue
-                    w = rec.cameras[cid].window
-                    fb[cid] = float(np.percentile(w, 95)) if w else None
-                decisions = fleet.decide(fb)
             for cid in order:
                 if len(out) >= max_frames:
                     break
@@ -812,9 +859,9 @@ class EdgeBroker:
                 self._fetch_into(rec, cid, min(share, max_frames - len(out)),
                                  out,
                                  decision=(decisions.get(cid)
-                                           if decisions else None))
+                                           if decisions is not None else None))
         out.sort(key=lambda d: (d.timestamp, d.camera_id))
-        self._drift_tick(rec, out)
+        self._drift_tick(rec, out, fused=fleet is not None)
         if not out:
             cams = rec.cameras.values()
             if any(c.failed for c in cams) and all(
@@ -823,8 +870,40 @@ class EdgeBroker:
                     f"all cameras of {subscription_id} unreachable")
         return FrameBatch(tuple(out), subscription_id)
 
+    # mezlint: poll-path
+    def _fleet_tick(self, rec: _Subscription, fleet: FleetController,
+                    active: list) -> "FleetTickResult":
+        """The fused per-poll dispatch: build the lane validity mask from
+        the cached feedback arrays (a camera counts only while active,
+        reachable, and holding samples -- crashed-but-not-yet-failed
+        cameras hold, exactly as the host path never consults their
+        controller), hand last poll's drift residuals to the tick, and
+        route fired lanes through recharacterize + ``retick``."""
+        valid = np.zeros(fleet.n_lanes, bool)
+        for cid in active:
+            cam = self._cams.get(cid)
+            if cam is None or cam.crashed:
+                continue
+            lane = fleet.lane_of[cid]
+            valid[lane] = rec.lat_valid[lane]
+        errs = dvalid = None
+        if rec.drift_pending is not None:
+            errs, dvalid = rec.drift_pending
+            rec.drift_pending = None
+        # an all-drained poll still ticks when drift is armed (the monitor
+        # observes every poll, fused or not) but records no history row --
+        # the unfused path never decided on empty polls either
+        result = fleet.tick(rec.lat_lane, valid, errs, dvalid,
+                            record=bool(active))
+        if result.fired_cams:
+            self._refresh_cameras(rec, result.fired_cams)
+            if active:
+                result = fleet.retick()
+        return result
+
     def _drift_tick(self, rec: _Subscription,
-                    frames: list[DeliveredFrame]) -> None:
+                    frames: list[DeliveredFrame], *,
+                    fused: bool = False) -> None:
         """One staleness-monitor tick: aggregate this poll's observed
         wire-size residuals per camera, flag drifted lanes, and
         re-characterize exactly those lanes.
@@ -849,6 +928,14 @@ class EdgeBroker:
         semantics on both control paths, which is what keeps host and
         fleet traces byte-identical.  Both successful and unavailable
         re-sweeps surface as TABLE_REFRESH events.
+
+        With ``fused`` (a live fleet), the monitor step itself rides in the
+        next poll's fused dispatch: this method only aggregates the
+        residuals into lane arrays (O(cameras fetched this poll), not
+        O(N)); ``_fleet_tick`` consumes them at the next poll's start --
+        the same poll position where the unfused path applied its
+        ``pending_refresh`` queue, so fire counts, refresh timing and
+        events are identical.
         """
         if rec.drift is None:
             return
@@ -867,7 +954,11 @@ class EdgeBroker:
                     float(table.size_by_setting[f.knob_index]),
                     float(f.wire_bytes)))
         samples: dict[str, float] = {}
-        for cid in rec.cameras:
+        # only cameras fetched this poll can carry residuals: wire sizes
+        # come from delivered frames and the activity accumulator fills
+        # during ``fetch`` and drains every poll, so the sweep is bounded
+        # by the batch, not the fleet
+        for cid in {f.camera_id for f in frames}:
             cam = self._cams.get(cid)
             if cam is None or cam.crashed or cam.controller is None:
                 continue
@@ -881,6 +972,17 @@ class EdgeBroker:
                                 / max(ref_act, DRIFT_ACTIVITY_FLOOR))
             if channels:
                 samples[cid] = max(channels)
+        if fused and rec.fleet is not None:
+            if samples:
+                n = len(rec.drift.cam_ids)
+                errs = np.zeros(n, np.float32)
+                valid = np.zeros(n, bool)
+                for cid, v in samples.items():
+                    lane = rec.fleet.lane_of[cid]
+                    errs[lane] = v
+                    valid[lane] = True
+                rec.drift_pending = (errs, valid)
+            return
         for cid in rec.drift.observe(samples):
             if cid not in rec.pending_refresh:
                 rec.pending_refresh.append(cid)
@@ -896,6 +998,13 @@ class EdgeBroker:
         if not rec.pending_refresh:
             return
         fired, rec.pending_refresh = rec.pending_refresh, []
+        self._refresh_cameras(rec, fired)
+
+    def _refresh_cameras(self, rec: _Subscription, fired) -> None:
+        """Re-sweep the given lanes' tables from their own recent frames,
+        emitting one TABLE_REFRESH event per lane either way.  Shared by
+        the host queue (``_apply_pending_refreshes``) and the fused tick's
+        fire-set (``_fleet_tick``)."""
         for cid in fired:
             cam = self._cams.get(cid)
             cur = rec.cameras.get(cid)
@@ -930,6 +1039,7 @@ class EdgeBroker:
         cam = self._cams.get(camera_id)
         if cam is None:
             cur.failed = True
+            rec.invalidate_active()
             rec.events.append(SessionEvent(
                 EventKind.RPC_TIMEOUT, camera_id, rec.sub_id, cur.cursor,
                 "camera unregistered"))
@@ -946,15 +1056,18 @@ class EdgeBroker:
                                decision=decision)
         except BrokerDown as e:
             cur.failed = True
+            rec.invalidate_active()
             rec.events.append(SessionEvent(
                 EventKind.RPC_TIMEOUT, camera_id, rec.sub_id, cur.cursor,
                 str(e)))
             return
         if not frames:
             cur.drained = True
+            rec.invalidate_active()
             return
         replica = self.replicas[camera_id]
         infeasible_seen = False
+        window_touched = False
         for f in frames:
             cur.cursor = max(cur.cursor, float(np.nextafter(f.timestamp,
                                                             np.inf)))
@@ -969,7 +1082,16 @@ class EdgeBroker:
                 replica.append(g.timestamp, g.frame)
                 cur.window.append(g.latency.total)
                 cur.window[:] = cur.window[-rec.feedback_window:]
+                window_touched = True
             out.append(g)
+        if window_touched and rec.lat_valid is not None \
+                and rec.fleet is not None:
+            # feedback windows only mutate here, so refreshing the lane's
+            # p95 per fetch is value-identical to the per-poll recompute
+            # the unfused path did -- and drops it from the poll hot loop
+            lane = rec.fleet.lane_of[camera_id]
+            rec.lat_lane[lane] = np.percentile(cur.window, 95)
+            rec.lat_valid[lane] = True
         if infeasible_seen:
             rec.events.append(SessionEvent(
                 EventKind.INFEASIBLE, camera_id, rec.sub_id,
@@ -977,6 +1099,7 @@ class EdgeBroker:
                 "latency/accuracy bounds infeasible; serving best effort"))
         if cur.cursor > cur.spec.t_stop:
             cur.drained = True
+            rec.invalidate_active()
 
     def update_subscription_qos(self, subscription_id: str, *,
                                 latency: float | None = None,
@@ -1022,6 +1145,7 @@ class EdgeBroker:
                     applied.append(cid)
             except BrokerDown as e:
                 cur.failed = True
+                rec.invalidate_active()
                 rec.events.append(SessionEvent(
                     EventKind.RPC_TIMEOUT, cid, rec.sub_id, cur.cursor,
                     str(e)))
@@ -1052,6 +1176,7 @@ class EdgeBroker:
         if cur is None or cam is None or cam.crashed:
             return Status.FAIL
         cur.failed = False
+        rec.invalidate_active()
         return Status.OK
 
     def close_subscription(self, subscription_id: str) -> Status:
@@ -1177,6 +1302,7 @@ class EdgeBroker:
             cur = rec.cameras.get(camera_id)
             if cur is not None and not cur.detached:
                 cur.detached = True
+                rec.invalidate_active()
                 detached = True
         return Status.OK if detached else Status.FAIL
 

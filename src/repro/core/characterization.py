@@ -111,6 +111,14 @@ class CharacterizationTable:
                         sizes (e.g. more movers over the same background)
                         still multiplies scene activity.  None for
                         synthetic / pre-drift tables (channel disabled)
+    residual_spread   : q95 of the calibration clip's own per-frame wire-
+                        size residuals (|frame - setting median| / median,
+                        the drift monitor's residual unit) across the kept
+                        settings -- how noisy this scene/codec regime is
+                        even when NOTHING has drifted.  The drift monitor's
+                        hysteresis thresholds are learned from it
+                        (``drift.learned_thresholds``); None (synthetic /
+                        legacy tables) falls back to the hand-set constants
     """
     settings: tuple[K.KnobSetting, ...]
     sizes_sorted: np.ndarray
@@ -122,6 +130,7 @@ class CharacterizationTable:
     min_accuracy: float = 0.90
     source: str = "offline"
     activity: float | None = None
+    residual_spread: float | None = None
 
     @property
     def includes_artifact(self) -> bool:
@@ -175,9 +184,16 @@ class CharacterizationTable:
 
 def _build_table(settings, sizes: np.ndarray, accs: np.ndarray,
                  min_accuracy: float,
-                 proxy=None, activity: float | None = None
+                 proxy=None, activity: float | None = None,
+                 residuals: list | None = None
                  ) -> CharacterizationTable:
-    """keep/sort/prefix-max assembly, shared by both engines."""
+    """keep/sort/prefix-max assembly, shared by both engines.
+
+    ``residuals`` (optional, aligned with ``settings``) holds each
+    setting's per-frame relative wire-size residuals against its own clip
+    median; the q95 over the KEPT settings becomes ``residual_spread`` --
+    the monitor only ever observes settings the controller can choose.
+    """
     keep = (accs >= min_accuracy) & (sizes > 0)
     settings_kept = tuple(s for s, k in zip(settings, keep) if k)
     sizes_k = sizes[keep]
@@ -198,6 +214,13 @@ def _build_table(settings, sizes: np.ndarray, accs: np.ndarray,
         best_acc[i] = run_best
         best_idx[i] = run_idx
 
+    spread = None
+    if residuals is not None:
+        pool = [r for r, k in zip(residuals, keep)
+                if k and r is not None and len(r)]
+        if pool:
+            spread = float(np.quantile(np.concatenate(pool), 0.95))
+
     return CharacterizationTable(
         settings=settings_kept,
         sizes_sorted=sizes_sorted,
@@ -208,6 +231,7 @@ def _build_table(settings, sizes: np.ndarray, accs: np.ndarray,
         proxy=proxy,
         min_accuracy=min_accuracy,
         activity=activity,
+        residual_spread=spread,
     )
 
 
@@ -251,7 +275,7 @@ def characterize(camera_factory, *, clip_len: int = 24,
                                min_accuracy=min_accuracy,
                                include_artifact=include_artifact)
     elif engine == "reference":
-        settings, sizes, accs = _sweep_reference(
+        settings, sizes, accs, residuals = _sweep_reference(
             bg, clip, include_artifact=include_artifact,
             detector_thresh=detector_thresh)
     else:
@@ -261,7 +285,7 @@ def characterize(camera_factory, *, clip_len: int = 24,
     activity = float(np.mean([f for f in fracs if f is not None])) \
         if fracs else None
     return _build_table(settings, sizes, accs, min_accuracy,
-                        activity=activity)
+                        activity=activity, residuals=residuals)
 
 
 # =============================================================================
@@ -303,6 +327,7 @@ def table_from_grid(grid: "GridCharacterization", gts: list[np.ndarray], *,
 
     sizes = np.zeros(len(settings))
     accs = np.zeros(len(settings))
+    residuals: list = [None] * len(settings)
     for si, s in enumerate(settings):
         combo = (s.resolution, s.colorspace, s.blur, s.artifact)
         drops = drop_patterns[s.diff]
@@ -314,6 +339,11 @@ def table_from_grid(grid: "GridCharacterization", gts: list[np.ndarray], *,
         accs[si] = f1 / base_f1 if base_f1 > 0 else 0.0
         kept_sizes = grid.sizes[combo][kept[:clip_len]]
         sizes[si] = float(np.median(kept_sizes)) if kept_sizes.size else 0.0
+        if kept_sizes.size:
+            # per-frame residuals in the drift monitor's own unit
+            # (drift.relative_size_error: denominator floored at 1 byte)
+            p = max(sizes[si], 1.0)
+            residuals[si] = np.abs(kept_sizes - p) / p
     # scene-activity statistic: mean consecutive-frame change fraction of
     # the calibration clip (the grid's knob5 matrix holds exactly these
     # counts) -- the drift monitor's reference point for this table
@@ -322,7 +352,8 @@ def table_from_grid(grid: "GridCharacterization", gts: list[np.ndarray], *,
         consec = [grid.change_fraction(i, i - 1) for i in range(1, clip_len)]
         activity = float(np.mean(consec))
     return _build_table(settings, sizes, accs, min_accuracy,
-                        proxy=grid.proxy, activity=activity)
+                        proxy=grid.proxy, activity=activity,
+                        residuals=residuals)
 
 
 # =============================================================================
@@ -387,6 +418,7 @@ def _sweep_reference(bg, clip, *, include_artifact: bool,
 
     sizes = np.zeros(len(settings))
     accs = np.zeros(len(settings))
+    residuals: list = [None] * len(settings)
     for si, setting in enumerate(settings):
         dets, wires = transform_results(setting)
         drops = drop_patterns[setting.diff]
@@ -399,5 +431,8 @@ def _sweep_reference(bg, clip, *, include_artifact: bool,
                 results.append((gt, dets[fi]))
                 kept_wires.append(wires[fi])
         sizes[si] = float(np.median(kept_wires)) if kept_wires else 0.0
+        if kept_wires:
+            p = max(sizes[si], 1.0)
+            residuals[si] = np.abs(np.asarray(kept_wires) - p) / p
         accs[si] = det.normalized_f1(results, baseline)
-    return settings, sizes, accs
+    return settings, sizes, accs, residuals

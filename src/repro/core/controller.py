@@ -38,19 +38,23 @@ from __future__ import annotations
 import dataclasses
 import functools
 from collections import deque
+from collections.abc import Mapping
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.characterization import CharacterizationTable, LatencyRegression
+from repro.core.drift import (DriftConfig, DriftParams, DriftState,
+                              _drift_lane_step, drift_init)
 from repro.core.knobs import KnobSetting
 
 __all__ = ["ControllerConfig", "ControlDecision", "LatencyController",
            "JaxControllerTables", "ControllerState", "controller_init",
            "controller_step", "swap_tables", "ControllerParams", "StepAux",
            "stack_tables", "stack_params", "fleet_controller_init",
-           "fleet_controller_step", "fleet_swap_tables", "FleetController"]
+           "fleet_controller_step", "fleet_swap_tables", "FusedTickAux",
+           "fused_fleet_tick", "FleetTickResult", "FleetController"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,14 +194,21 @@ class JaxControllerTables:
     best_acc: jax.Array       # f32[capacity]
     best_idx: jax.Array       # i32[capacity], -1 beyond n_valid
     n_valid: jax.Array = None  # i32[], live rows (defaults to capacity)
+    codes: jax.Array = None   # i32[capacity, 5] knob codes per SETTING index
+    #                           (resolution, colorspace, blur, artifact,
+    #                           diff) -- what the fused fleet tick gathers so
+    #                           the host rebuilds a KnobSetting without
+    #                           touching the Python table on the poll path
 
     def __post_init__(self):
         if self.n_valid is None:
             self.n_valid = jnp.asarray(self.sizes_sorted.shape[0], jnp.int32)
+        if self.codes is None:
+            self.codes = jnp.zeros((self.sizes_sorted.shape[0], 5), jnp.int32)
 
     def tree_flatten(self):
         return ((self.sizes_sorted, self.best_acc, self.best_idx,
-                 self.n_valid), None)
+                 self.n_valid, self.codes), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -216,8 +227,12 @@ class JaxControllerTables:
                                 np.full(pad, np.inf, np.float32)])
         acc = np.concatenate([a["best_acc"], np.zeros(pad, np.float32)])
         idx = np.concatenate([a["best_idx"], np.full(pad, -1, np.int32)])
+        codes = np.zeros((cap, 5), np.int32)
+        codes[:len(table.settings)] = [
+            (s.resolution, s.colorspace, s.blur, s.artifact, s.diff)
+            for s in table.settings]
         return cls(jnp.asarray(sizes), jnp.asarray(acc), jnp.asarray(idx),
-                   jnp.asarray(n, jnp.int32))
+                   jnp.asarray(n, jnp.int32), jnp.asarray(codes))
 
 
 def swap_tables(live: JaxControllerTables | None,
@@ -543,9 +558,131 @@ def _set_lane(tree, i: int, row):
         lambda stacked, v: stacked.at[i].set(v), tree, row)
 
 
+# =============================================================================
+# Fused fleet tick: drift + control + decision application, ONE dispatch
+# =============================================================================
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FusedTickAux:
+    """Everything the host needs from one fused tick, in one transfer:
+    the per-lane controller decision detail, the chosen setting's knob
+    codes (so ``KnobSetting`` is rebuilt without touching the Python
+    table), and the drift fire-set."""
+    step: StepAux              # per-lane controller decision detail
+    codes: jax.Array           # i32[..., 5], chosen setting's knob codes
+    #                            (-1 rows when no live setting is served)
+    fired: jax.Array           # bool[...], drift lane fired this tick
+    score: jax.Array           # f32[...], drift windowed score
+
+    def tree_flatten(self):
+        return ((self.step, self.codes, self.fired, self.score), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _fused_lane_core(ctrl_state: ControllerState, drift_state: DriftState,
+                     latency: jax.Array, drift_err: jax.Array,
+                     drift_valid: jax.Array, tables: JaxControllerTables,
+                     params: ControllerParams, drift_params: DriftParams
+                     ) -> tuple[ControllerState, DriftState, FusedTickAux]:
+    """One camera's whole per-poll control plane, fused.
+
+    Built on the SAME cores as the unfused path (``_drift_lane_step`` then
+    ``_controller_step_core(best_effort=True)``), so fused decisions are
+    bit-identical to the three-dispatch path -- the parity tests hold this
+    lane by lane.  The drift observation is the residual the host
+    aggregated at the END of the previous poll; a fire is reported in the
+    aux for the host to act on (recharacterize + table swap + re-tick).
+    """
+    new_drift, fired, score = _drift_lane_step(drift_state, drift_err,
+                                               drift_valid, drift_params)
+    new_ctrl, aux = _controller_step_core(ctrl_state, latency, tables,
+                                          params, best_effort=True)
+    # decision application on device: gather the chosen setting's knob codes
+    safe = jnp.clip(aux.idx, 0, tables.codes.shape[0] - 1)
+    codes = jnp.where(aux.idx >= 0, jnp.take(tables.codes, safe, axis=0),
+                      jnp.full((5,), -1, jnp.int32))
+    return new_ctrl, new_drift, FusedTickAux(step=aux, codes=codes,
+                                             fired=fired, score=score)
+
+
+def fused_fleet_tick(ctrl_states: ControllerState, drift_states: DriftState,
+                     latencies: jax.Array, drift_errs: jax.Array,
+                     drift_valid: jax.Array, tables: JaxControllerTables,
+                     params: ControllerParams, drift_params: DriftParams
+                     ) -> tuple[ControllerState, DriftState, FusedTickAux]:
+    """The whole fleet's per-poll control plane as ONE compiled dispatch:
+    drift tick + PI step + decision->knob-code application, vmapped over
+    the leading camera axis.  This is the function ``FleetController``
+    jits (and, with a mesh, ``shard_map``s over the camera axis -- every
+    lane is independent, so lane sharding cannot change numerics)."""
+    lats = jnp.asarray(latencies, jnp.float32)
+    errs = jnp.asarray(drift_errs, jnp.float32)
+    valid = jnp.asarray(drift_valid, bool)
+    return jax.vmap(_fused_lane_core)(ctrl_states, drift_states, lats, errs,
+                                      valid, tables, params, drift_params)
+
+
+class FleetTickResult(Mapping):
+    """Lazy ``camera_id -> ControlDecision`` view over one fused tick.
+
+    ``poll_subscription`` only materializes decisions for the cameras it
+    actually fetches this poll (O(fetched), not O(N)); iterating the
+    mapping (the dict-compat ``FleetController.decide`` path) materializes
+    every lane.  ``setting`` is rebuilt from the tick's gathered knob codes
+    -- ``KnobSetting`` is a frozen value type, so this equals the host
+    table's ``setting_for(idx)`` bit for bit.
+    """
+
+    __slots__ = ("fired_cams", "_cam_ids", "_lane", "_aux", "_cache")
+
+    def __init__(self, cam_ids, lane_map, aux_host, fired_cams):
+        self._cam_ids = cam_ids
+        self._lane = lane_map
+        self._aux = aux_host            # device_get'd FusedTickAux (padded)
+        self._cache: dict[int, ControlDecision] = {}
+        self.fired_cams = fired_cams    # drift fire-set, lane order
+
+    def _materialize(self, i: int) -> ControlDecision:
+        d = self._cache.get(i)
+        if d is None:
+            a = self._aux
+            idx = int(a.step.idx[i])
+            setting = (KnobSetting(*(int(c) for c in a.codes[i]))
+                       if idx >= 0 else None)
+            d = ControlDecision(
+                feasible=bool(a.step.feasible[i]), setting=setting,
+                setting_index=idx,
+                predicted_accuracy=float(a.step.accuracy[i]),
+                requested_size=float(a.step.requested_size[i]),
+                error=float(a.step.error[i]), acted=bool(a.step.acted[i]))
+            self._cache[i] = d
+        return d
+
+    def get(self, cid, default=None):
+        i = self._lane.get(cid)
+        return default if i is None else self._materialize(i)
+
+    def __getitem__(self, cid) -> ControlDecision:
+        i = self._lane.get(cid)
+        if i is None:
+            raise KeyError(cid)
+        return self._materialize(i)
+
+    def __iter__(self):
+        return iter(self._cam_ids)
+
+    def __len__(self) -> int:
+        return len(self._cam_ids)
+
+
 class FleetController:
-    """Host-side orchestrator: N per-camera PI controllers as ONE vmapped,
-    jitted ``fleet_controller_step``.
+    """Host-side orchestrator: N per-camera control planes as ONE jitted
+    ``fused_fleet_tick`` (PI step + drift tick + decision application).
 
     Built over live ``CamBroker``-like objects (anything carrying
     ``camera_id``, ``controller``, ``table_version``, ``qos_version``); the
@@ -556,12 +693,20 @@ class FleetController:
     via a params-row write) without recompiling; only a table that outgrows
     the shared capacity rebuilds the stack, which recompiles once -- the
     correct cost.
+
+    ``mesh`` partitions the tick over the camera axis with ``shard_map``
+    (``repro.sharding.partition.fleet_mesh``): an int selects that many
+    host devices, a ``jax.sharding.Mesh`` is used as given, ``None`` stays
+    single-device.  Lanes are padded up to a device multiple (padding lanes
+    replicate lane 0 and are fed hold inputs; their outputs are never
+    read), and every lane is independent, so sharding never changes
+    numerics -- the 8-device parity test holds fused==host bit for bit.
     """
 
     HISTORY_LIMIT = 4096
 
     def __init__(self, cams, *, capacity: int | None = None,
-                 record_history: bool = False):
+                 record_history: bool = False, mesh=None):
         cams = list(cams)
         if not cams:
             raise ValueError("FleetController needs at least one camera")
@@ -571,41 +716,124 @@ class FleetController:
                     f"camera {cam.camera_id!r} has no controller installed")
         self._cams = cams
         self.cam_ids = [c.camera_id for c in cams]
+        self.lane_of = {cid: i for i, cid in enumerate(self.cam_ids)}
         need = max(len(c.controller.table.settings) for c in cams)
         self.capacity = max(need, capacity or 0)
         self.record_history = record_history
         self.history: "deque" = deque(maxlen=self.HISTORY_LIMIT)
+        self.mesh = None
+        tick_fn = fused_fleet_tick
+        if mesh is not None:
+            from repro.sharding import partition
+            self.mesh = partition.fleet_mesh(mesh)
+            tick_fn = partition.shard_fleet_tick(fused_fleet_tick, self.mesh)
+        n = len(cams)
+        lanes_mult = self.mesh.devices.size if self.mesh is not None else 1
+        self.n_lanes = n
+        self._n_padded = -(-n // lanes_mult) * lanes_mult
         # wrap in a per-instance function object: jax.jit keys its tracing
         # cache on the callable, so each fleet gets its own cache and
-        # ``cache_size()`` counts THIS fleet's compiled variants only
-        self._step = jax.jit(
-            lambda st, lat, tb, pr: fleet_controller_step(st, lat, tb, pr))
+        # ``cache_size()`` counts THIS fleet's compiled variants only.  On a
+        # mesh the lane sharding is pinned AND every dispatch normalizes its
+        # operands onto it (``device_put`` below): poll T feeds back poll
+        # T-1's sharded outputs while poll 0 sees host arrays, and without
+        # the normalization that placement split registers as a second
+        # cache entry even though the traced program is identical.
+        self._sharding = None
+        jit_kwargs = {}
+        if self.mesh is not None:
+            self._sharding = partition.fleet_sharding(self.mesh)
+            jit_kwargs = dict(in_shardings=self._sharding,
+                              out_shardings=self._sharding)
+        self._tick_jit = jax.jit(
+            lambda cs, ds, lat, de, dv, tb, pr, dp: tick_fn(
+                cs, ds, lat, de, dv, tb, pr, dp), **jit_kwargs)
+        # drift lanes: a bound DriftMonitor's state rides in the fused tick;
+        # without one, a window-1 placeholder holds forever (valid=False,
+        # count pinned at 0 < min_samples, so it can never fire)
+        self._drift = None
+        self._drift_window = 1
+        self._drift_state = drift_init(self._n_padded, 1)
+        self._drift_params = DriftParams.from_config(
+            DriftConfig(window=1), self._n_padded)
+        self._pre_state = None
         self._build_stack()
 
     # -- stack assembly ------------------------------------------------------
+    def _pad_rows(self, values, pad):
+        return list(values) + [values[0]] * pad
+
     def _build_stack(self) -> None:
+        pad = self._n_padded - self.n_lanes
         rows = [JaxControllerTables.from_table(c.controller.table,
                                                capacity=self.capacity)
                 for c in self._cams]
-        self.tables = stack_tables(rows)
-        self.params = stack_params(
+        self.tables = stack_tables(self._pad_rows(rows, pad))
+        self.params = stack_params(self._pad_rows(
             [ControllerParams.from_controller(c.controller)
-             for c in self._cams])
-        start = np.asarray([c.controller._current for c in self._cams],
-                           np.int32)
+             for c in self._cams], pad))
+        start = np.asarray(self._pad_rows(
+            [c.controller._current for c in self._cams], pad), np.int32)
         state = fleet_controller_init(self.tables, start_idx=start)
         self.state = ControllerState(
-            integral=jnp.asarray([c.controller.integral for c in self._cams],
-                                 jnp.float32),
+            integral=jnp.asarray(self._pad_rows(
+                [c.controller.integral for c in self._cams], pad),
+                jnp.float32),
             current_idx=state.current_idx,
             feasible=state.feasible,
             last_error=state.last_error)
         self._table_versions = [c.table_version for c in self._cams]
         self._qos_versions = [c.qos_version for c in self._cams]
+        self._targets = np.asarray(self._pad_rows(
+            [c.controller.config.latency_target for c in self._cams], pad),
+            np.float32)
+
+    def attach_drift(self, monitor) -> None:
+        """Fuse a ``DriftMonitor``'s per-poll tick into this fleet's
+        dispatch.  The monitor must share this fleet's lane order; its
+        state/params ride as traced tick inputs (mesh padding added here),
+        and post-tick lanes flow back via ``monitor.absorb_fused``."""
+        if list(monitor.cam_ids) != self.cam_ids:
+            raise ValueError("drift monitor lane order != fleet lane order")
+        monitor.bind_fused(self)
+        self._drift = monitor
+        self._drift_window = monitor.config.window
+        pad = self._n_padded - self.n_lanes
+        if pad:
+            pad_state = drift_init(pad, monitor.config.window)
+            pad_params = DriftParams.from_config(monitor.config, pad)
+            self._drift_params = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b]),
+                monitor.params, pad_params)
+            self._drift_pad_state = pad_state
+        else:
+            self._drift_params = monitor.params
+            self._drift_pad_state = None
+
+    def _drift_inputs(self, errs, valid):
+        """(state, errs, valid) for the tick, mesh-padded when needed."""
+        pad = self._n_padded - self.n_lanes
+        if self._drift is None:
+            return (self._drift_state,
+                    np.zeros(self._n_padded, np.float32),
+                    np.zeros(self._n_padded, bool))
+        state = self._drift.state
+        if errs is None:
+            errs = np.zeros(self.n_lanes, np.float32)
+            valid = np.zeros(self.n_lanes, bool)
+        if pad:
+            state = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b]),
+                state, self._drift_pad_state)
+            errs = np.concatenate(
+                [np.asarray(errs, np.float32), np.zeros(pad, np.float32)])
+            valid = np.concatenate([np.asarray(valid, bool),
+                                    np.zeros(pad, bool)])
+        return state, errs, valid
 
     def cache_size(self) -> int:
-        """Compiled-variant count of the fleet step (1 = no recompiles)."""
-        return self._step._cache_size()
+        """Compiled-variant count of the fused tick (1 = no recompiles)."""
+        return self._tick_jit._cache_size()
 
     def __len__(self) -> int:
         return len(self._cams)
@@ -653,6 +881,7 @@ class FleetController:
                     self.params = _set_lane(
                         self.params, i, ControllerParams.from_controller(ctl))
                     self._qos_versions[i] = cam.qos_version
+                    self._targets[i] = ctl.config.latency_target
         for i, cam in enumerate(self._cams):
             if not (table_swapped[i] or retargeted[i]):
                 continue
@@ -671,47 +900,109 @@ class FleetController:
         return ([i for i, s in enumerate(table_swapped) if s],
                 [i for i, r in enumerate(retargeted) if r])
 
-    # -- the fleet tick ------------------------------------------------------
-    def decide(self, feedback) -> dict[str, ControlDecision]:
-        """One control tick for the whole fleet.
+    # -- the fused fleet tick ------------------------------------------------
+    def _dispatch(self, lat_eff, drift_errs, drift_valid):
+        """Run the ONE compiled dispatch and absorb its state."""
+        dstate, derrs, dvalid = self._drift_inputs(drift_errs, drift_valid)
+        operands = (self.state, dstate, lat_eff, derrs, dvalid,
+                    self.tables, self.params, self._drift_params)
+        if self._sharding is not None:
+            # normalize operand placement onto the lane sharding: a no-op
+            # for the fed-back sharded state, a cheap host->device transfer
+            # (which jit would pay anyway) for per-poll numpy inputs --
+            # keeps the dispatch signature, and so cache_size(), at one.
+            # The placed stacks are kept so later polls skip the transfer.
+            operands = jax.device_put(operands, self._sharding)
+            (self.state, _, _, _, _, self.tables, self.params,
+             self._drift_params) = operands
+        new_ctrl, new_drift, aux = self._tick_jit(*operands)
+        self.state = new_ctrl
+        aux = jax.device_get(aux)
+        fired_cams: list[str] = []
+        if self._drift is not None:
+            fired_cams = self._drift.absorb_fused(
+                new_drift, aux.fired, aux.score)
+        return aux, fired_cams
 
-        ``feedback`` maps camera_id -> observed p95 latency (seconds), or
-        None for cameras with no samples yet.  None lanes are fed their own
-        latency target (zero error -> in-band hold, state untouched), so a
-        single compiled dispatch still covers every camera.  Returns one
-        host-shaped ``ControlDecision`` per camera.
+    # mezlint: poll-path
+    def tick(self, lat, valid, drift_errs=None, drift_valid=None, *,
+             record: bool = True) -> FleetTickResult:
+        """One fused control+drift tick for the whole fleet.
+
+        ``lat``/``valid`` are lane-ordered arrays: observed p95 latency
+        (seconds) and whether the lane actually has samples this poll.
+        Invalid lanes are fed their own latency target (zero error ->
+        in-band hold, state untouched), so a single compiled dispatch
+        still covers every camera.  ``drift_errs``/``drift_valid`` feed the
+        fused drift tick when a monitor is attached (None -> no drift
+        observation this poll).
+
+        Returns a lazy :class:`FleetTickResult`; its ``fired_cams`` lists
+        the drift lanes that crossed ``hi`` this tick, in lane order.  The
+        host recharacterizes those, then calls :meth:`retick` to re-decide
+        against the refreshed tables -- same compiled callable, cache
+        stays at one.
         """
         self.sync()
-        n = len(self._cams)
-        lat = np.empty(n, np.float32)
-        fed = np.zeros(n, bool)
-        for i, (cid, cam) in enumerate(zip(self.cam_ids, self._cams)):
-            f = feedback.get(cid)
-            fed[i] = f is not None
-            lat[i] = (f if f is not None
-                      else cam.controller.config.latency_target)
-        new_state, aux = self._step(self.state, jnp.asarray(lat),
-                                    self.tables, self.params)
-        self.state = new_state
-        a = jax.device_get(aux)
-        decisions: dict[str, ControlDecision] = {}
-        for i, (cid, cam) in enumerate(zip(self.cam_ids, self._cams)):
-            idx = int(a.idx[i])
-            tbl = cam.controller.table
-            decisions[cid] = ControlDecision(
-                feasible=bool(a.feasible[i]),
-                setting=tbl.setting_for(idx) if idx >= 0 else None,
-                setting_index=idx,
-                predicted_accuracy=float(a.accuracy[i]),
-                requested_size=float(a.requested_size[i]),
-                error=float(a.error[i]),
-                acted=bool(a.acted[i]))
-        if self.record_history:
+        lat = np.asarray(lat, np.float32)
+        valid = np.asarray(valid, bool)
+        pad = self._n_padded - self.n_lanes
+        if pad:
+            lat = np.concatenate([lat, np.zeros(pad, np.float32)])
+            valid = np.concatenate([valid, np.zeros(pad, bool)])
+        lat_eff = np.where(valid, lat, self._targets)
+        self._pre_state = self.state
+        aux, fired_cams = self._dispatch(lat_eff, drift_errs, drift_valid)
+        self._last_lat_eff = lat_eff
+        if record and self.record_history:
+            n = self.n_lanes
             self.history.append({
-                "lat": lat.tolist(), "fed": fed.tolist(),
-                "idx": np.asarray(a.idx).tolist(),
-                "acted": np.asarray(a.acted).tolist(),
-                "feasible": np.asarray(a.feasible).tolist(),
+                "lat": lat_eff[:n].tolist(), "fed": valid[:n].tolist(),
+                "idx": np.asarray(aux.step.idx)[:n].tolist(),
+                "acted": np.asarray(aux.step.acted)[:n].tolist(),
+                "feasible": np.asarray(aux.step.feasible)[:n].tolist(),
                 "table_versions": list(self._table_versions),
             })
-        return decisions
+        return FleetTickResult(self.cam_ids, self.lane_of, aux, fired_cams)
+
+    def retick(self) -> FleetTickResult:
+        """Re-decide the tick just taken, against freshly swapped tables.
+
+        Restores the pre-tick controller state, folds the host-side
+        refreshes in via ``sync()`` (which re-seeds the swapped lanes,
+        mirroring the unfused refresh-before-decide ordering), and
+        re-dispatches the SAME compiled tick with a no-op drift
+        observation: fired lanes were cleared+disarmed by the first
+        dispatch (cannot refire on an empty window) and rearmed lanes are
+        already armed, so the drift state is provably unchanged.
+        """
+        if self._pre_state is None:
+            raise RuntimeError("retick() without a preceding tick()")
+        self.state = self._pre_state
+        self.sync()
+        aux, _ = self._dispatch(self._last_lat_eff, None, None)
+        if self.record_history and self.history:
+            n = self.n_lanes
+            row = self.history[-1]
+            row["idx"] = np.asarray(aux.step.idx)[:n].tolist()
+            row["acted"] = np.asarray(aux.step.acted)[:n].tolist()
+            row["feasible"] = np.asarray(aux.step.feasible)[:n].tolist()
+            row["table_versions"] = list(self._table_versions)
+        return FleetTickResult(self.cam_ids, self.lane_of, aux, [])
+
+    def decide(self, feedback) -> dict[str, ControlDecision]:
+        """Dict-compat wrapper over :meth:`tick`.
+
+        ``feedback`` maps camera_id -> observed p95 latency (seconds), or
+        None for cameras with no samples yet.  Returns one host-shaped
+        ``ControlDecision`` per camera (every lane materialized).
+        """
+        n = self.n_lanes
+        lat = np.zeros(n, np.float32)
+        valid = np.zeros(n, bool)
+        for i, cid in enumerate(self.cam_ids):
+            f = feedback.get(cid)
+            if f is not None:
+                valid[i] = True
+                lat[i] = f
+        return dict(self.tick(lat, valid))

@@ -40,7 +40,8 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["DriftConfig", "DriftParams", "DriftState", "drift_init",
-           "drift_update", "relative_size_error", "DriftMonitor"]
+           "drift_update", "relative_size_error", "learned_thresholds",
+           "DriftMonitor"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,6 +164,37 @@ def drift_update(state: DriftState, errs: jax.Array, valid: jax.Array,
     return jax.vmap(_drift_lane_step)(state, errs, valid, params)
 
 
+# The learned-threshold law: fire when the windowed residual exceeds this
+# multiple of the calibration clip's own q95 residual spread.  The hand-set
+# DriftConfig constants stay as the FLOOR (and the fallback when a table
+# predates the spread statistic), so a quiet clip keeps the proven 0.35/0.15
+# hysteresis while a noisy-but-stationary scene raises its own bar instead
+# of false-firing.
+SPREAD_MULTIPLE = 3.0
+HI_CEILING = 0.90
+
+
+def learned_thresholds(spread: float | None,
+                       base: DriftConfig | None = None
+                       ) -> tuple[float, float]:
+    """Quantile-learned (hi, lo) hysteresis thresholds for one camera.
+
+    ``spread`` is ``CharacterizationTable.residual_spread`` -- the q95 of
+    per-frame ``|wire - median| / median`` over the calibration clip, i.e.
+    the residual the monitor would see on a PERFECTLY stationary scene.
+    ``hi`` is ``SPREAD_MULTIPLE``x that, floored at the base constants and
+    ceilinged below 1 (a regime shift lands near 1.0); ``lo`` keeps the
+    base config's hysteresis ratio.  ``None``/degenerate spread falls back
+    to the constants unchanged.
+    """
+    base = base or DriftConfig()
+    if spread is None or not np.isfinite(spread) or spread <= 0.0:
+        return float(base.hi), float(base.lo)
+    hi = float(np.clip(SPREAD_MULTIPLE * float(spread), base.hi, HI_CEILING))
+    lo = hi * (base.lo / base.hi)
+    return hi, lo
+
+
 def relative_size_error(predicted: float, observed: float) -> float:
     """|observed - predicted| / predicted -- the monitor's residual unit.
 
@@ -187,7 +219,8 @@ class DriftMonitor:
     (1 = the monitor never retraced across the run).
     """
 
-    def __init__(self, cam_ids, config: DriftConfig | None = None):
+    def __init__(self, cam_ids, config: DriftConfig | None = None, *,
+                 spreads: "dict[str, float | None] | None" = None):
         self.cam_ids = list(cam_ids)
         if not self.cam_ids:
             raise ValueError("DriftMonitor needs at least one camera")
@@ -195,16 +228,63 @@ class DriftMonitor:
         n = len(self.cam_ids)
         self._lane = {cid: i for i, cid in enumerate(self.cam_ids)}
         self.state = drift_init(n, self.config.window)
-        self.params = DriftParams.from_config(self.config, n)
+        if config is None and spreads:
+            # learned per-lane thresholds (quantile of the calibration
+            # clip's own residual spread); the thresholds are TRACED, so
+            # per-camera values cost nothing over the broadcast constants
+            pairs = [learned_thresholds(spreads.get(cid), self.config)
+                     for cid in self.cam_ids]
+            self.thresholds = {cid: pairs[i]
+                               for i, cid in enumerate(self.cam_ids)}
+            self.params = DriftParams(
+                hi=jnp.asarray([p[0] for p in pairs], jnp.float32),
+                lo=jnp.asarray([p[1] for p in pairs], jnp.float32),
+                min_samples=jnp.broadcast_to(
+                    jnp.asarray(self.config.min_samples, jnp.int32), (n,)))
+        else:
+            self.thresholds = {cid: (self.config.hi, self.config.lo)
+                               for cid in self.cam_ids}
+            self.params = DriftParams.from_config(self.config, n)
         self._step = jax.jit(
             lambda st, er, va, pr: drift_update(st, er, va, pr))
+        self._fused = None          # FleetController when ticked fused
         self.last_scores: dict[str, float] = {}
 
     def __len__(self) -> int:
         return len(self.cam_ids)
 
+    def bind_fused(self, fleet) -> None:
+        """Hand the per-poll tick to a fused ``FleetController`` dispatch.
+
+        The monitor's own jitted step is bypassed (the fleet tick runs
+        ``_drift_lane_step`` fused with the controller step), so
+        ``cache_size`` reports the fused tick's cache -- the one compiled
+        callable actually covering drift this run."""
+        self._fused = fleet
+
+    def absorb_fused(self, state: DriftState, fired, scores) -> list[str]:
+        """Adopt post-tick drift lanes computed inside a fused fleet tick.
+
+        ``state`` may carry mesh-padding lanes beyond ``len(cam_ids)``
+        (sliced off here); ``fired``/``scores`` are host arrays from the
+        tick's aux.  Returns fired camera ids in lane order, exactly like
+        ``observe``."""
+        n = len(self.cam_ids)
+        fired = np.asarray(fired)
+        scores = np.asarray(scores)
+        if state.pos.shape[0] != n:
+            state = jax.tree_util.tree_map(lambda a: a[:n], state)
+            fired, scores = fired[:n], scores[:n]
+        self.state = state
+        self.last_scores = {cid: float(scores[i])
+                            for i, cid in enumerate(self.cam_ids)}
+        return [cid for i, cid in enumerate(self.cam_ids) if fired[i]]
+
     def cache_size(self) -> int:
-        """Compiled-variant count of the monitor step (1 = no retraces)."""
+        """Compiled-variant count of the monitor step (1 = no retraces).
+        Fused monitors report the fused fleet tick's cache."""
+        if self._fused is not None:
+            return self._fused.cache_size()
         return self._step._cache_size()
 
     def observe(self, samples: "dict[str, float]") -> list[str]:

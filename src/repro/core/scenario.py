@@ -247,6 +247,9 @@ class ScenarioSpec:
     accuracy: float = 0.95             # normalized F1 lower bound
     controlled: bool = True
     fleet: bool = False
+    # device mesh for the fused fleet tick (None | device count | Mesh with
+    # a "cams" axis); sharding never changes the trace
+    mesh: object = None
     credit_limit: int = 2
     feedback_window: int = 8
     max_frames_per_poll: int | None = None   # default: n_cameras * credit
@@ -600,6 +603,7 @@ def run_scenario(
                              0.0, spec.frames / fps,
                              latency=spec.latency, accuracy=spec.accuracy,
                              controlled=spec.controlled, fleet=spec.fleet,
+                             mesh=spec.mesh,
                              feedback_window=spec.feedback_window,
                              credit_limit=spec.credit_limit,
                              auto_recharacterize=spec.auto_recharacterize,

@@ -64,7 +64,7 @@ class Session:
                   t_stop: float, *, latency: float, accuracy: float,
                   controlled: bool = True, feedback_window: int = 8,
                   credit_limit: int = 2, fleet: bool = False,
-                  auto_recharacterize: bool = False,
+                  mesh=None, auto_recharacterize: bool = False,
                   drift_config=None) -> "Subscription":
         """Subscribe one or many cameras under shared QoS bounds; frames from
         all of them arrive timestamp-merged through one ``poll()``.
@@ -73,7 +73,10 @@ class Session:
         ONE compiled vmapped step per poll (the fleet control plane):
         per-poll control cost is ~flat in camera count, and per-camera QoS
         retargets / table refreshes hot-swap into the compiled step without
-        recompiling.
+        recompiling.  ``mesh`` additionally partitions the fused tick over
+        the camera axis (``shard_map``): pass a device count, a
+        ``jax.sharding.Mesh`` with a ``cams`` axis, or None to stay
+        single-device -- sharding never changes the decisions.
 
         ``auto_recharacterize=True`` arms the drift-aware refresh loop: a
         vectorized staleness monitor watches each camera's observed wire
@@ -91,7 +94,8 @@ class Session:
         sub_id = self._edge.create_subscription(
             self.session_id, specs, controlled=controlled,
             feedback_window=feedback_window, credit_limit=credit_limit,
-            fleet=fleet, auto_recharacterize=auto_recharacterize,
+            fleet=fleet, mesh=mesh,
+            auto_recharacterize=auto_recharacterize,
             drift_config=drift_config)
         return Subscription(self._edge, sub_id, tuple(camera_ids))
 

@@ -40,7 +40,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig, ShapeCell
 
 __all__ = ["param_specs", "batch_specs", "cache_specs", "fsdp_axes",
-           "shardings_for", "opt_state_specs", "logical_to_sharding"]
+           "shardings_for", "opt_state_specs", "logical_to_sharding",
+           "fleet_mesh", "padded_lane_count", "shard_fleet_tick",
+           "fleet_sharding"]
 
 
 def fsdp_axes(mesh: Mesh, cfg: ModelConfig):
@@ -265,6 +267,74 @@ def cache_specs(cache_shape: Any, cfg: ModelConfig, mesh: Mesh,
         return P()
 
     return jax.tree_util.tree_map_with_path(spec, cache_shape)
+
+
+# -----------------------------------------------------------------------------
+# fleet control plane (camera-axis data parallelism)
+# -----------------------------------------------------------------------------
+
+
+def fleet_mesh(devices=None) -> Mesh:
+    """One-axis ``("cams",)`` mesh for the fleet control plane.
+
+    ``devices`` is a ``Mesh`` (used as given -- must carry a ``cams`` axis),
+    an int (first k host devices; on CPU CI, k > 1 needs
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=k`` set before jax
+    import), an explicit device sequence, or None (all devices).
+    """
+    if isinstance(devices, Mesh):
+        if "cams" not in devices.axis_names:
+            raise ValueError("fleet mesh needs a 'cams' axis, got "
+                             f"{devices.axis_names}")
+        return devices
+    if devices is None:
+        devs = jax.devices()
+    elif isinstance(devices, int):
+        avail = jax.devices()
+        if not 1 <= devices <= len(avail):
+            raise ValueError(
+                f"mesh wants {devices} devices but only {len(avail)} are "
+                "available (set XLA_FLAGS=--xla_force_host_platform_"
+                "device_count=N before importing jax)")
+        devs = avail[:devices]
+    else:
+        devs = list(devices)
+    return Mesh(np.asarray(devs), ("cams",))
+
+
+def padded_lane_count(n: int, mesh: Mesh | None) -> int:
+    """Smallest lane count >= n divisible by the mesh's device count."""
+    if mesh is None:
+        return n
+    m = int(mesh.devices.size)
+    return -(-n // m) * m
+
+
+def fleet_sharding(mesh: Mesh) -> NamedSharding:
+    """The lane-axis sharding of every fleet tick operand: dim 0 split over
+    ``cams``, everything else replicated (prefix spec covers any rank).
+
+    Pinning this as the jitted tick's in/out shardings keeps the compile
+    cache at ONE variant: without it, the first dispatch sees host-committed
+    arrays while later dispatches feed back the sharded outputs -- two
+    distinct input layouts, two compiles.
+    """
+    return NamedSharding(mesh, P("cams"))
+
+
+def shard_fleet_tick(fn, mesh: Mesh):
+    """Partition a per-lane fleet tick over the ``cams`` axis.
+
+    Every argument and output leaf carries the lane axis at dim 0 (the
+    caller pads lanes to a device multiple with ``padded_lane_count``), so
+    a prefix ``P("cams")`` spec covers the whole pytree of each.  Lanes are
+    fully independent -- no collectives -- so sharding is pure data
+    parallelism and cannot change numerics.
+    """
+    from jax.experimental.shard_map import shard_map
+    spec = P("cams")
+    return shard_map(fn, mesh=mesh, in_specs=(spec,) * 8, out_specs=spec,
+                     check_rep=False)
 
 
 def logical_to_sharding(specs: Any, mesh: Mesh):

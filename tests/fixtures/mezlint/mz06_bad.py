@@ -1,0 +1,24 @@
+"""mezlint fixture: MZ06 violations -- per-camera decision application
+inside Python loops on the poll path (the pre-fused-tick broker shape)."""
+
+
+class ControlDecision:
+    def __init__(self, setting, index):
+        self.setting = setting
+        self.index = index
+
+
+# mezlint: poll-path
+def poll(cams, aux):
+    decisions = {}
+    for i, cam in enumerate(cams):                  # O(N) per poll
+        idx = int(aux.idx[i])
+        setting = cam.controller.table.setting_for(idx)
+        decisions[cam.camera_id] = ControlDecision(setting, idx)
+    return decisions
+
+
+# mezlint: poll-path
+def feed_back(cams, latencies):
+    for cam, lat in zip(cams, latencies):
+        cam.controller.update(lat)                  # host PI step per camera

@@ -1,0 +1,18 @@
+"""mezlint fixture: MZ06 clean -- the poll path consumes a fused, lazily
+materialized decision mapping instead of applying decisions per camera."""
+
+
+# mezlint: poll-path
+def poll(fleet, lat, valid, cams):
+    decisions = fleet.tick(lat, valid)      # one sharded dispatch
+    out = []
+    for cam in cams:                        # loop does I/O only
+        out.append((cam.camera_id, decisions.get(cam.camera_id)))
+    return out
+
+
+def off_path_refresh(cams, aux):
+    # Not marked poll-path: per-camera application is fine here (rare,
+    # host-side maintenance such as table refreshes).
+    for i, cam in enumerate(cams):
+        cam.controller.update(float(aux.lat[i]))

@@ -75,6 +75,21 @@ class TestEngineEquivalence:
         np.testing.assert_array_equal(a.sizes_sorted, b.sizes_sorted)
         np.testing.assert_array_equal(a.best_acc, b.best_acc)
 
+    def test_residual_spread_measured_and_quiet(self, tables):
+        """Both engines report the calibration clip's wire-size residual
+        spread, and on the synthetic clips it stays well under the drift
+        floor -- learned hysteresis falls back to the proven constants, so
+        characterization changes never perturb the committed goldens."""
+        from repro.core.drift import (SPREAD_MULTIPLE, DriftConfig,
+                                      learned_thresholds)
+        base = DriftConfig()
+        for tbl in tables:
+            assert tbl.residual_spread is not None
+            assert np.isfinite(tbl.residual_spread)
+            assert 0.0 < tbl.residual_spread < base.hi / SPREAD_MULTIPLE
+            assert learned_thresholds(tbl.residual_spread) == (base.hi,
+                                                               base.lo)
+
     def test_auto_covers_artifact_knob_batched(self):
         """knob4 no longer forces the reference fallback: auto resolves to
         the batched engine and still characterizes artifact settings."""

@@ -21,8 +21,9 @@ import pytest
 
 from repro.analysis.trace_guard import assert_compiled_once, trace_guard
 from repro.core.characterization import characterize
-from repro.core.drift import (DriftConfig, DriftMonitor, DriftParams,
-                              drift_init, drift_update)
+from repro.core.drift import (HI_CEILING, SPREAD_MULTIPLE, DriftConfig,
+                              DriftMonitor, DriftParams, drift_init,
+                              drift_update, learned_thresholds)
 from repro.core.scenario import (CameraSpec, ScenarioSpec, SceneShift,
                                  TableStaleness, run_scenario)
 from repro.data.camera import CameraConfig, SyntheticCamera
@@ -99,6 +100,64 @@ class TestDriftProperties:
             state, fired, _ = drift_update(state, 99.0, False, params)
             assert not bool(fired)
         assert int(state.count) == 0
+
+
+# =============================================================================
+# Learned hysteresis thresholds (satellite: quantile-based hi/lo from the
+# calibration clip's residual spread, constants as the floor/fallback)
+# =============================================================================
+
+
+class TestLearnedThresholds:
+    def test_degenerate_spread_falls_back_to_constants(self):
+        base = DriftConfig()
+        for spread in (None, 0.0, -1.0, float("nan"), float("inf")):
+            assert learned_thresholds(spread, base) == (base.hi, base.lo)
+
+    def test_quiet_clip_floors_at_the_proven_constants(self):
+        """A clean calibration clip (spread well under hi/SPREAD_MULTIPLE)
+        keeps the hand-set 0.35/0.15 hysteresis exactly -- which is why the
+        committed golden traces are unaffected by learning."""
+        base = DriftConfig()
+        assert learned_thresholds(0.01, base) == (base.hi, base.lo)
+        assert learned_thresholds(base.hi / SPREAD_MULTIPLE * 0.999,
+                                  base) == (base.hi, base.lo)
+
+    def test_noisy_clip_raises_its_own_bar_keeping_the_ratio(self):
+        base = DriftConfig()
+        hi, lo = learned_thresholds(0.2, base)
+        assert hi == pytest.approx(SPREAD_MULTIPLE * 0.2)
+        assert lo / hi == pytest.approx(base.lo / base.hi)
+
+    def test_ceiling_stays_below_regime_shift_scale(self):
+        hi, _ = learned_thresholds(10.0)
+        assert hi == HI_CEILING < 1.0
+
+    def test_monitor_learns_per_lane_params_from_spreads(self):
+        base = DriftConfig()
+        m = DriftMonitor(["a", "b", "c"],
+                         spreads={"a": 0.2, "b": None, "c": 0.001})
+        np.testing.assert_allclose(
+            np.asarray(m.params.hi),
+            [SPREAD_MULTIPLE * 0.2, base.hi, base.hi], rtol=1e-6)
+        assert m.thresholds["a"][0] == pytest.approx(SPREAD_MULTIPLE * 0.2)
+        assert m.thresholds["b"] == (base.hi, base.lo)
+
+    def test_explicit_config_disables_learning(self):
+        m = DriftMonitor(["a"], CFG, spreads={"a": 0.5})
+        assert m.thresholds["a"] == (CFG.hi, CFG.lo)
+        assert float(m.params.hi[0]) == pytest.approx(CFG.hi)
+
+    def test_characterized_tables_carry_a_quiet_spread(self, simple_tables):
+        """End to end: ``characterize`` measures each clip's residual
+        spread, and on the standard synthetic clips it lands far enough
+        under the floor that learning == the proven constants."""
+        base = DriftConfig()
+        for tbl in simple_tables.values():
+            assert tbl.residual_spread is not None
+            assert 0.0 < tbl.residual_spread < base.hi / SPREAD_MULTIPLE
+            assert learned_thresholds(tbl.residual_spread) == (base.hi,
+                                                               base.lo)
 
 
 # =============================================================================

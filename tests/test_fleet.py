@@ -199,6 +199,55 @@ class TestFleetPrimitives:
             assert 0 <= int(aux.idx[i]) < int(stack.n_valid[i])
 
 
+class TestMeshParity:
+    """The sharded dispatch: a mesh-partitioned fleet (``shard_map`` over
+    the camera axis) is bit-identical to the unmeshed fleet and the host
+    controllers, with ONE compiled (and placement-stable) dispatch across
+    subset swaps and retargets.  The 8-device variant lives in
+    tests/test_fleet_sharded.py (forced host platform device count)."""
+
+    def test_one_device_mesh_matches_unmeshed(self):
+        n = 13
+        cams, hosts, fleet, rng = build_fleet(n)
+        meshed = FleetController(cams, capacity=128, mesh=1)
+        assert meshed.mesh is not None
+        with trace_guard(fleet), trace_guard(meshed):
+            for step in range(40):
+                if step == 12:
+                    for i in (2, 7, 11):
+                        fresh = synthetic_table(20 + i,
+                                                smin=3e3 + 11.0 * i,
+                                                smax=7e4)
+                        cams[i].controller.swap_table(fresh)
+                        cams[i].table_version += 1
+                        hosts[i].swap_table(fresh)
+                if step == 24:
+                    for i in (0, 5):
+                        cams[i].controller.set_target(0.075, 0.91)
+                        cams[i].qos_version += 1
+                        hosts[i].set_target(0.075, 0.91)
+                fb = {c.camera_id: float(rng.uniform(0.005, 0.5))
+                      for c in cams}
+                dm = meshed.decide(fb)
+                du = fleet.decide(fb)
+                for i, cam in enumerate(cams):
+                    dh = hosts[i].update(fb[cam.camera_id])
+                    a, b = dm[cam.camera_id], du[cam.camera_id]
+                    assert a == b, (step, i)
+                    assert a.setting_index == dh.setting_index, (step, i)
+                    assert a.acted == dh.acted, (step, i)
+                    assert a.feasible == dh.feasible, (step, i)
+        assert meshed.cache_size() == 1
+
+    def test_mesh_pads_lanes_to_device_multiple(self):
+        from repro.sharding.partition import fleet_mesh, padded_lane_count
+        mesh = fleet_mesh(1)
+        assert padded_lane_count(13, mesh) == 13
+        cams, _, _, _ = build_fleet(3)
+        meshed = FleetController(cams, capacity=64, mesh=1)
+        assert meshed._n_padded >= meshed.n_lanes == 3
+
+
 class TestFleetScenarioParity:
     """The satellite: fleet decisions equal the per-camera host controller
     across a WHOLE scenario, and the compiled step survives a mid-scenario
@@ -224,6 +273,17 @@ class TestFleetScenarioParity:
                             tables=tables)
         assert flt.to_json() == host.to_json()
         assert_compiled_once(flt.fleet_cache_size, "fleet step")
+
+    def test_mesh_scenario_trace_identical_to_host_trace(self):
+        """Satellite 3: the fused + sharded replay (1-device mesh) is
+        byte-identical to the host-path trace -- so the committed golden
+        traces pin the meshed path too."""
+        tables = {"medium": synthetic_table()}
+        meshed = run_scenario(self._spec(mesh=1), tables=tables)
+        host = run_scenario(self._spec(fleet=False, record_decisions=False),
+                            tables=tables)
+        assert meshed.to_json() == host.to_json()
+        assert_compiled_once(meshed.fleet_cache_size, "meshed fleet step")
 
     def test_history_replays_against_host_controllers(self):
         """Replay the recorded fleet decision history through fresh host
@@ -314,6 +374,18 @@ class TestFleetDriftParity:
         # drift-triggered per-lane table swaps never recompile the fleet
         assert_compiled_once(flt.fleet_cache_size, "fleet step")
         assert host.fleet_cache_size is None      # host path has no fleet
+
+    def test_mesh_drift_scene_shift_matches_host_bit_for_bit(
+            self, drift_tables):
+        """Satellite 3: SceneShift + drift-fired mid-run table swaps on a
+        1-device mesh -- fused sharded decisions bit-identical to the host
+        path, one compiled dispatch throughout."""
+        meshed = run_scenario(self._spec(mesh=1), tables=drift_tables)
+        host = run_scenario(self._spec(fleet=False), tables=drift_tables)
+        assert meshed.to_json() == host.to_json()
+        assert meshed.drift_fire_counts["cam1"] >= 1
+        assert_compiled_once(meshed.fleet_cache_size, "meshed fleet step")
+        assert_compiled_once(meshed.drift_cache_size, "drift step")
 
     def test_sync_reports_exactly_the_refreshed_lanes(self):
         """``FleetController.sync`` returns the lane sets it rewrote --

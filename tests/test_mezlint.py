@@ -38,13 +38,14 @@ class TestRuleFixtures:
         ("mz03_bad.py", "MZ03"),
         ("mz04_bad.py", "MZ04"),
         ("mz05_bad.py", "MZ05"),
+        ("mz06_bad.py", "MZ06"),
     ])
     def test_bad_fixture_triggers_rule(self, name, rule):
         assert rule in rules_of(lint(name))
 
     @pytest.mark.parametrize("name", [
         "mz01_good.py", "mz02_good.py", "mz03_good.py", "mz04_good.py",
-        "mz05_good.py",
+        "mz05_good.py", "mz06_good.py",
     ])
     def test_good_fixture_is_clean(self, name):
         assert lint(name) == []
@@ -65,6 +66,12 @@ class TestRuleFixtures:
     def test_mz03_caller_side_holds_lock(self):
         details = {f.detail for f in lint("mz03_bad.py")}
         assert "call-unlocked:_reset_unsafe@Counter.reset" in details
+
+    def test_mz06_flags_each_application_site(self):
+        details = {f.detail for f in lint("mz06_bad.py")}
+        assert any("setting_for" in d for d in details)
+        assert any("ControlDecision" in d for d in details)
+        assert any("update" in d for d in details)
 
     def test_mz05_flags_closure_and_interpret_and_parity(self):
         details = {f.detail for f in lint("mz05_bad.py")}
@@ -97,7 +104,7 @@ class TestRuleFixtures:
 class TestCli:
     @pytest.mark.parametrize("name", [
         "mz01_bad.py", "mz02_bad.py", "mz03_bad.py", "mz04_bad.py",
-        "mz05_bad.py",
+        "mz05_bad.py", "mz06_bad.py",
     ])
     def test_bad_fixture_exits_nonzero(self, name):
         assert main([str(FIXDIR / name), "--no-baseline"]) == 1

@@ -241,6 +241,27 @@ class TestDriftDetectorProperties:
         assert not any(fires[:len(warmup)])
         assert any(fires[len(warmup):])
 
+    @given(st.floats(0.0, 0.5),
+           st.lists(st.floats(0.0, 1.0), min_size=1, max_size=60))
+    @settings(**SETTINGS)
+    def test_learned_thresholds_keep_stationary_bound(self, spread, raw):
+        """Quantile-learned hysteresis preserves the false-positive bound:
+        for any calibration spread, hi floors at the proven constant, caps
+        below 1.0, keeps the lo/hi ratio, and residuals at or below the
+        learned hi still never fire."""
+        from repro.core.drift import (DriftParams, drift_init, drift_update,
+                                      learned_thresholds)
+        hi, lo = learned_thresholds(spread, self.CFG)
+        assert self.CFG.hi <= hi <= 0.90
+        assert lo / hi == pytest.approx(self.CFG.lo / self.CFG.hi)
+        cfg = self._DC(window=8, hi=hi, lo=lo, min_samples=4)
+        state = drift_init(None, cfg.window)
+        params = DriftParams.from_config(cfg)
+        for r in raw:
+            state, fired, _ = drift_update(state, r * hi * 0.98, True,
+                                           params)
+            assert not bool(fired)
+
     @given(st.lists(st.floats(0.15 * 1.05, 50.0), min_size=1,
                     max_size=120))
     @settings(**SETTINGS)

@@ -241,6 +241,50 @@ class TestEventsAndFailures:
         assert sess.close() is Status.OK
 
 
+class TestRoundRobinFairness:
+    """Regression for the cached round-robin active order: the cache must
+    be invalidated on crash/detach/drain/reattach so rotation stays fair
+    across membership changes (satellite of the fused-tick PR)."""
+
+    def test_rotation_fair_across_crash_and_reattach(self, table):
+        cams = [f"cam{i}" for i in range(4)]
+        sys = build_system(table, n_cams=4, frames=40)
+        sess, sub = open_sub(sys, cams)
+
+        def window(n):
+            """n consecutive max_frames=1 polls -> the head camera of each
+            rotation (every camera always has frames pending)."""
+            ids = []
+            for _ in range(n):
+                batch = sub.poll(max_frames=1)
+                assert len(batch) == 1
+                ids.append(batch.frames[0].camera_id)
+            return ids
+
+        # 4 live cameras: every window of 4 polls visits each exactly once
+        for _ in range(2):
+            assert sorted(window(4)) == cams
+
+        # crash one mid-stream; rotation discovers it (no cam1 frames) and
+        # the cached order is rebuilt over the 3 survivors
+        sys.cams["cam1"].crash()
+        assert "cam1" not in window(4)
+        survivors = ["cam0", "cam2", "cam3"]
+        for _ in range(2):
+            assert sorted(window(3)) == survivors
+        assert any(e.kind is EventKind.RPC_TIMEOUT and e.camera_id == "cam1"
+                   for e in sub.events())
+
+        # recover + reattach: cache invalidates again, rotation is fair
+        # over all 4 and the late camera resumes from its old cursor
+        sys.cams["cam1"].recover()
+        assert sys.edge.reattach_camera(sub.subscription_id,
+                                        "cam1") is Status.OK
+        for _ in range(2):
+            assert sorted(window(4)) == cams
+        sess.close()
+
+
 class TestLifecycle:
     def test_close_is_idempotent(self, table):
         sys = build_system(table)
