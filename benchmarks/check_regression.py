@@ -30,7 +30,11 @@ compile exactly once across the sweep.  The whole-poll gates additionally
 bound the REAL ``poll_subscription`` cost (fetch + merge + one fused
 sharded tick): per-camera cost at 64 lanes under a generous absolute
 ceiling, and per-camera cost at 4096 lanes on the forced 8-device mesh
-within the committed flatness ratio of the 64-lane figure.
+within the committed flatness ratio of the 64-lane figure.  The
+multi-tenant gates bound per-tenant whole-poll cost at 64 tenants over
+one 256-camera fleet relative to the single-tenant figure (the shared
+degraded-frame cache must amortize transforms across tenants) and floor
+that cache's hit rate.
 
 When ``BENCH_fig12.json`` exists (produced by ``python -m benchmarks.paper
 fig12``), the fig12 gate runs against ``benchmarks/baseline_fig12.json``:
@@ -177,6 +181,35 @@ def check_fleet(fresh: dict, baseline: dict) -> list[str]:
                 f"lanes on the {sharded.get('devices')}-device mesh is no "
                 f"longer flat relative to 64 lanes (per-poll host work "
                 f"crept back to O(N))")
+
+    # multi-tenant serving gates (shared degraded-frame cache); baselines
+    # that predate the metrics skip them
+    ratio_ceiling = baseline.get("max_tenant_poll_ratio_64_over_1")
+    if ratio_ceiling is not None:
+        mt = fresh.get("multi_tenant") or {}
+        ratio = mt.get("tenant_poll_ratio_64_over_1")
+        if ratio is None:
+            failures.append("multi_tenant.tenant_poll_ratio_64_over_1: "
+                            "missing from fleet results (run fleet_sweep "
+                            "without --skip-tenants)")
+        elif ratio > ratio_ceiling:
+            failures.append(
+                f"multi_tenant.tenant_poll_ratio_64_over_1: {ratio:.2f} "
+                f"exceeds {ratio_ceiling:.2f} -- per-tenant whole-poll "
+                f"cost at 64 tenants over {mt.get('cameras')} cameras is "
+                f"no longer amortized by the shared degraded-frame cache")
+    hit_floor = baseline.get("min_shared_cache_hit_rate_64")
+    if hit_floor is not None:
+        mt = fresh.get("multi_tenant") or {}
+        hit = (mt.get("cache_hit_rate") or {}).get("64")
+        if hit is None:
+            failures.append("multi_tenant.cache_hit_rate[64]: missing "
+                            "from fleet results")
+        elif hit < hit_floor:
+            failures.append(
+                f"multi_tenant.cache_hit_rate[64]: {hit:.3f} fell below "
+                f"the committed floor {hit_floor:.2f} -- 64 tenants at "
+                f"one operating point stopped sharing transforms")
     return failures
 
 
@@ -286,6 +319,10 @@ def main() -> int:
               f"{fleet_fresh.get('whole_poll_us_per_cam')} "
               f"sharded_flatness_4096/64="
               f"{sharded.get('flatness_4096_over_64')}")
+        mt = fleet_fresh.get("multi_tenant") or {}
+        print(f"fleet:    tenant_poll_ratio_64/1="
+              f"{mt.get('tenant_poll_ratio_64_over_1')} "
+              f"cache_hit_rate={mt.get('cache_hit_rate')}")
     else:
         print(f"fleet:    {args.fleet_fresh} absent -- fleet gate skipped")
     if os.path.exists(args.fig12_fresh):

@@ -22,6 +22,13 @@ Measured numbers:
                                (``--xla_force_host_platform_device_count``)
                                at 64 / 512 / 1024 / 4096 lanes, plus the
                                per-camera flatness ratio 4096-vs-64
+  * ``multi_tenant``           per-tenant whole-poll cost with 1 / 8 / 64
+                               tenant sessions sharing ONE 256-camera fleet
+                               (round-robin polls), plus the shared
+                               degraded-frame cache hit rate: N tenants at
+                               one operating point must pay ~one transform
+                               + deflate, so per-tenant cost at 64 tenants
+                               stays within 1.5x the single-tenant figure
   * ``cache_size``             compiled variants across the whole sweep of
                                one fleet (must stay 1 per fleet instance)
 
@@ -202,6 +209,7 @@ def time_whole_poll(n: int, *, polls: int, repeats: int,
     subscription never drains mid-measurement (a poll budget of
     ``MAX_FRAMES`` visits only ~16 cameras per round-robin rotation).
     """
+    from repro.core.api import QosBounds, SubscriptionOptions
     from repro.core.broker import MezSystem
     from repro.core.channel import calibrated_channel
     from repro.core.session import MezClient
@@ -227,8 +235,8 @@ def time_whole_poll(n: int, *, polls: int, repeats: int,
         for ts, f in clip:
             cam.publish(ts, f)
     sess = MezClient(system).open_session("bench")
-    sub = sess.subscribe(ids, 0.0, 1e9, latency=0.050, accuracy=0.90,
-                         fleet=True, mesh=mesh)
+    sub = sess.subscribe(ids, 0.0, 1e9, qos=QosBounds(0.050, 0.90),
+                         options=SubscriptionOptions(fleet=True, mesh=mesh))
     for _ in range(3):                           # warmup (compiles the tick)
         sub.poll(max_frames=MAX_FRAMES)
     best = float("inf")
@@ -241,6 +249,69 @@ def time_whole_poll(n: int, *, polls: int, repeats: int,
     assert fleet is not None and fleet.cache_size() == 1
     sess.close()
     return best * 1e6
+
+
+TENANT_CAMS = 256
+TENANT_COUNTS = (1, 8, 64)
+TENANT_POLLS = 5            # timed round-robin rounds per repeat
+
+
+def time_tenant_serving(n: int, tenants: int, *, polls: int,
+                        repeats: int) -> tuple[float, float]:
+    """Per-tenant whole-poll cost with ``tenants`` sessions sharing ONE
+    n-camera fleet, plus the shared degraded-frame cache hit rate.
+
+    Each tenant session subscribes every camera at the same operating
+    point (the common multi-viewer shape) and the host control path is
+    polled round-robin, so tenant cursors stay aligned: the first tenant
+    of a round pays the knob transform + deflate, the rest must hit the
+    ``EdgeBroker``-owned shared cache.  Returns ``(us_per_tenant_poll,
+    cache_hit_rate)``.
+    """
+    from repro.core.api import QosBounds
+    from repro.core.broker import MezSystem
+    from repro.core.channel import calibrated_channel
+    from repro.core.session import MezClient
+    from repro.data.camera import CameraConfig, SyntheticCamera
+
+    reg = LatencyRegression(slope=1.2e-6, intercept=0.008)
+    system = MezSystem(calibrated_channel(seed=11))
+    rounds = 1 + polls * repeats                 # warmup + timed
+    frames_per_cam = math.ceil(rounds * MAX_FRAMES / n) + 2
+    src = SyntheticCamera(CameraConfig(camera_id="clip", height=32,
+                                       width=32, seed=5))
+    clip = [(ts, f) for ts, f, _ in src.stream(frames_per_cam)]
+    ids = []
+    for i in range(n):
+        cid = f"cam{i:04d}"
+        ids.append(cid)
+        cam = system.add_camera(cid)
+        cam.background = src.background
+        tbl = synthetic_table(12 + i % 29, smin=2e3 + 37.0 * (i % 64),
+                              smax=9e4 - 101.0 * (i % 64))
+        cam.set_target(0.040 + 0.001 * (i % 17), 0.90 + 0.002 * (i % 4),
+                       tbl, reg)
+        for ts, f in clip:
+            cam.publish(ts, f)
+    client = MezClient(system)
+    sessions = []
+    for t in range(tenants):
+        sess = client.open_session(f"bench-t{t:02d}", tenant=f"t{t:02d}")
+        sub = sess.subscribe(ids, 0.0, 1e9, qos=QosBounds(0.050, 0.90))
+        sessions.append((sess, sub))
+    for _, sub in sessions:                      # warmup round
+        sub.poll(max_frames=MAX_FRAMES)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(polls):
+            for _, sub in sessions:
+                sub.poll(max_frames=MAX_FRAMES)
+        best = min(best, (time.perf_counter() - t0) / (polls * tenants))
+    hit_rate = system.edge.frame_cache.hit_rate()
+    for sess, _ in sessions:
+        sess.close()
+    return best * 1e6, hit_rate
 
 
 CHILD_MARKER = "WHOLE_POLL_RESULT "
@@ -275,6 +346,8 @@ def main() -> None:
                     help="timed poll_subscription calls per repeat")
     ap.add_argument("--skip-sharded", action="store_true",
                     help="skip the 8-device mesh subprocess sweep")
+    ap.add_argument("--skip-tenants", action="store_true",
+                    help="skip the 256-camera multi-tenant serving sweep")
     ap.add_argument("--whole-poll-child", type=int, default=None,
                     metavar="N", help="internal: measure one whole-poll "
                     "size on a forced mesh and print the result marker")
@@ -336,6 +409,24 @@ def main() -> None:
         print(f"per-camera whole-poll flatness {hi_n}/{lo_n} on "
               f"{SHARDED_DEVICES}-device mesh: "
               f"{sh['flatness_4096_over_64']:.3f} (<= 1.5 required)")
+    if not args.skip_tenants:
+        mt: dict = {"cameras": TENANT_CAMS, "tenant_counts":
+                    list(TENANT_COUNTS), "poll_us_per_tenant": {},
+                    "cache_hit_rate": {}}
+        for t in TENANT_COUNTS:
+            us, hit = time_tenant_serving(
+                TENANT_CAMS, t, polls=TENANT_POLLS,
+                repeats=max(args.repeats - 2, 2))
+            mt["poll_us_per_tenant"][str(t)] = us
+            mt["cache_hit_rate"][str(t)] = hit
+            print(f"tenants={t:3d} over n={TENANT_CAMS}: {us:9.1f} us per "
+                  f"tenant-poll  (shared-cache hit rate {hit:.3f})")
+        lo_t, hi_t = str(TENANT_COUNTS[0]), str(TENANT_COUNTS[-1])
+        mt["tenant_poll_ratio_64_over_1"] = (
+            mt["poll_us_per_tenant"][hi_t] / mt["poll_us_per_tenant"][lo_t])
+        out["multi_tenant"] = mt
+        print(f"per-tenant poll ratio {hi_t}/{lo_t} tenants: "
+              f"{mt['tenant_poll_ratio_64_over_1']:.3f} (<= 1.5 required)")
     out["cache_size"] = 1                   # asserted inside the timers
 
     ensure_dir()

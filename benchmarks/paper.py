@@ -17,7 +17,8 @@ import numpy as np
 
 from benchmarks.common import Timer, camera_factory, emit, get_table
 from repro.configs.mez_edge import CONFIG as EDGE
-from repro.core.api import SubscribeSpec
+from repro.compat import subscribe_v1
+from repro.core.api import QosBounds, SubscribeSpec, SubscriptionOptions
 from repro.core.broker import MezSystem, NatsLikeSystem
 from repro.core.channel import calibrated_channel
 from repro.core.characterization import fit_latency_regression
@@ -181,12 +182,12 @@ def _closed_loop(dynamics: str, workload: str, *, frames=60, n_cams=5,
     client = MezClient(sys)
     out = []
     with client.open_session("app0") as sess:
-        sub = sess.subscribe("cam0", 0.0, frames / EDGE.fps,
-                             latency=EDGE.latency_target,
-                             accuracy=EDGE.accuracy_target,
-                             controlled=controlled,
-                             feedback_window=EDGE.feedback_window,
-                             credit_limit=EDGE.fetch_window)
+        sub = sess.subscribe(
+            "cam0", 0.0, frames / EDGE.fps,
+            qos=QosBounds(EDGE.latency_target, EDGE.accuracy_target),
+            options=SubscriptionOptions(controlled=controlled,
+                                        feedback_window=EDGE.feedback_window,
+                                        credit_limit=EDGE.fetch_window))
         while (fb := sub.poll(max_frames=EDGE.fetch_window)):
             out.extend(fb.frames)
     delivered = [d for d in out if d.frame is not None]
@@ -431,8 +432,8 @@ def fig15_subscriber_scaling() -> dict:
                 cam.publish(ts, f)
             # one wireless transfer; subscribers fan out from the edge replica
             lats = []
-            first = list(sys.edge.subscribe(
-                SubscribeSpec("app0", "cam0", 0, 100, 0.1, 0.9)))
+            first = list(subscribe_v1(
+                sys.edge, SubscribeSpec("app0", "cam0", 0, 100, 0.1, 0.9)))
             base = [d.latency.total for d in first if d.frame is not None]
             for s in range(n_subs):
                 # replica reads add broker processing + subscribe API costs
@@ -480,7 +481,8 @@ def fig16_latency_breakdown() -> dict:
                 cam.publish(ts, f)
         client = MezClient(sys)
         with client.open_session("app0") as sess:
-            sub = sess.subscribe("cam0", 0, 100, latency=0.1, accuracy=0.95)
+            sub = sess.subscribe("cam0", 0, 100,
+                                 qos=QosBounds(0.1, 0.95))
             out_frames = [d for d in sub.frames(max_frames=EDGE.fetch_window)
                           if d.frame is not None]
         comps = {"publish_api": 0.0, "controller": 0.0, "log_copy": 0.0,

@@ -18,6 +18,7 @@ Run:  PYTHONPATH=src python examples/multi_camera_pedestrian.py
 import numpy as np
 
 from repro.configs.mez_edge import CONFIG as EDGE
+from repro.core.api import QosBounds
 from repro.core.broker import MezSystem
 from repro.core.channel import calibrated_channel
 from repro.core.characterization import characterize, fit_latency_regression
@@ -78,8 +79,8 @@ def main() -> None:
     target_total = EDGE.num_cameras * N_FRAMES
     with client.open_session("app0") as session:
         sub = session.subscribe(cam_ids, 0.0, N_FRAMES / EDGE.fps,
-                                latency=EDGE.latency_target,
-                                accuracy=EDGE.accuracy_target)
+                                qos=QosBounds(EDGE.latency_target,
+                                              EDGE.accuracy_target))
         while (batch := sub.poll(max_frames=2 * EDGE.num_cameras)):
             if not total:
                 # a jitted NN detector would consume this dense payload;

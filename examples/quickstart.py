@@ -9,6 +9,7 @@ quality.  Run:  PYTHONPATH=src python examples/quickstart.py
 import numpy as np
 
 from repro.configs.mez_edge import CONFIG as EDGE
+from repro.core.api import QosBounds
 from repro.core.broker import MezSystem
 from repro.core.channel import calibrated_channel
 from repro.core.characterization import characterize, fit_latency_regression
@@ -48,8 +49,8 @@ def main() -> None:
     latencies, wires = [], []
     with client.open_session("app0") as session:
         sub = session.subscribe("cam0", 0.0, 8.0,
-                                latency=EDGE.latency_target,
-                                accuracy=EDGE.accuracy_target)
+                                qos=QosBounds(EDGE.latency_target,
+                                              EDGE.accuracy_target))
         while (batch := sub.poll(max_frames=EDGE.fetch_window)):
             for d in batch.delivered:                    # knob5 drops excluded
                 latencies.append(d.latency.total)

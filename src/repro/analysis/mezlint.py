@@ -17,7 +17,10 @@ Rules (details in ``repro.analysis.rules`` and README "Static analysis"):
        static args, shape-unstable ``from_table``); MZ03 ``# guarded-by:``
        lock discipline; MZ04 f64 leaking into traced f32 lanes; MZ05
        Pallas kernel hygiene (closures, ``interpret=`` path, declared
-       ``ref.py`` parity).
+       ``ref.py`` parity); MZ06 per-camera decision application inside
+       poll-path loops; MZ07 deprecated per-kwarg (or ``**kwargs``)
+       ``create_subscription`` call sites instead of one frozen
+       ``options=SubscriptionOptions(...)``.
 """
 
 from __future__ import annotations

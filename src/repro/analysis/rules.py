@@ -37,6 +37,11 @@ MZ06   Poll-path loop discipline: inside a function marked
        work per poll.  Fold the application into the fused fleet tick (one
        compiled dispatch) or materialize decisions lazily per fetched
        camera.
+MZ07   Subscription config discipline: ``create_subscription(...)`` call
+       sites must pass configuration as one frozen
+       ``options=SubscriptionOptions(...)`` -- the per-kwarg spelling
+       (``controlled=``, ``fleet=``, ``mesh=``, ...) is deprecated, and
+       ``**kwargs`` forwarding hides which spelling is used.
 =====  ========================================================================
 """
 
@@ -557,6 +562,61 @@ def check_mz06(idx: Index) -> list[Finding]:
     return out
 
 
+# =============================================================================
+# MZ07 -- deprecated per-kwarg create_subscription call sites
+# =============================================================================
+
+MZ07_LEGACY_KWARGS = frozenset({
+    "controlled", "feedback_window", "credit_limit", "fleet", "mesh",
+    "auto_recharacterize", "drift_config", "tenant", "slo",
+})
+
+
+def _walk_scoped(node: ast.AST, scope: str):
+    """Yield ``(node, innermost function/class scope)`` over a subtree."""
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef)):
+            inner = child.name if scope == "<module>" else \
+                f"{scope}.{child.name}"
+            yield from _walk_scoped(child, inner)
+        else:
+            yield child, scope
+            yield from _walk_scoped(child, scope)
+
+
+def check_mz07(idx: Index) -> list[Finding]:
+    out = []
+    for name in sorted(idx.modules):
+        mod = idx.modules[name]
+        for node, scope in _walk_scoped(mod.tree, "<module>"):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            callee = func.attr if isinstance(func, ast.Attribute) else \
+                func.id if isinstance(func, ast.Name) else None
+            if callee != "create_subscription":
+                continue
+            legacy = sorted(kw.arg for kw in node.keywords
+                            if kw.arg in MZ07_LEGACY_KWARGS)
+            starred = any(kw.arg is None for kw in node.keywords)
+            if legacy:
+                out.append(_mk(
+                    "MZ07", mod, node.lineno, scope,
+                    "deprecated per-kwarg create_subscription call "
+                    f"({', '.join(legacy)}): pass one frozen "
+                    "options=SubscriptionOptions(...) instead",
+                    f"legacy-kwargs:{','.join(legacy)}@{node.lineno}"))
+            if starred:
+                out.append(_mk(
+                    "MZ07", mod, node.lineno, scope,
+                    "create_subscription(**kwargs) hides whether the "
+                    "deprecated per-kwarg config spelling is used: build "
+                    "a SubscriptionOptions and pass options= explicitly",
+                    f"star-kwargs@{node.lineno}"))
+    return out
+
+
 ALL_RULES = {
     "MZ00": check_mz00,
     "MZ01": check_mz01,
@@ -565,6 +625,7 @@ ALL_RULES = {
     "MZ04": check_mz04,
     "MZ05": check_mz05,
     "MZ06": check_mz06,
+    "MZ07": check_mz07,
 }
 
 

@@ -1,11 +1,13 @@
 """Mez core: the paper's contribution (brokers, log, latency controller) plus
 the TPU-native extension (controller-driven approximate collectives)."""
 
-from repro.core.api import (BrokerDown, DeliveredFrame, EventKind,
-                            FrameBatch, LatencyBreakdown, MessagingSystem,
+from repro.core.api import (AdmissionRejected, BrokerDown, CameraQosResult,
+                            DeliveredFrame, EventKind, FrameBatch,
+                            LatencyBreakdown, MessagingSystem, QosBounds,
                             QosUpdate, RPCTimeout, SessionEvent,
-                            SessionedMessagingSystem, Status, SubscribeSpec,
-                            SubscriptionState)
+                            SessionedMessagingSystem, SloClass, SLO_CLASSES,
+                            Status, SubscribeSpec, SubscriptionOptions,
+                            SubscriptionState, resolve_slo)
 from repro.core.channel import ChannelConfig, WirelessChannel, calibrated_channel
 from repro.core.characterization import (CharacterizationTable,
                                          LatencyRegression, characterize,
@@ -38,4 +40,6 @@ __all__ = [
     "MezClient", "Session", "Subscription", "GridCharacterization",
     "WireSizeProxy", "run_grid", "TransformMemo", "DriftConfig",
     "DriftMonitor", "DriftState", "drift_init", "drift_update",
+    "AdmissionRejected", "CameraQosResult", "QosBounds", "SloClass",
+    "SLO_CLASSES", "SubscriptionOptions", "resolve_slo",
 ]

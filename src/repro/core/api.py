@@ -38,7 +38,9 @@ import numpy as np
 __all__ = ["DeliveredFrame", "SubscribeSpec", "RPCTimeout", "BrokerDown",
            "MessagingSystem", "Status", "FrameBatch", "QosUpdate",
            "SubscriptionState", "SessionEvent", "EventKind",
-           "SessionedMessagingSystem"]
+           "SessionedMessagingSystem", "SloClass", "SLO_CLASSES",
+           "resolve_slo", "QosBounds", "SubscriptionOptions",
+           "AdmissionRejected", "CameraQosResult"]
 
 
 class RPCTimeout(TimeoutError):
@@ -54,6 +56,90 @@ class Status(enum.Enum):
     OK = "ok"
     FAIL = "fail"
     INFEASIBLE = "infeasible"     # latency/accuracy bounds can't both be met
+
+
+class AdmissionRejected(RuntimeError):
+    """Fleet-wide admission control rejected a subscription: the aggregate
+    wire budget cannot fit the newcomer's accuracy-floor demand even after
+    degrading every lower-priority tenant to its floor (raised only under
+    ``SubscriptionOptions(admission="reject")``; the default ``"degrade"``
+    policy admits at a capped budget instead)."""
+
+    def __init__(self, message: str, *, demand_bps: float = 0.0,
+                 budget_bps: float = 0.0) -> None:
+        super().__init__(message)
+        self.demand_bps = demand_bps
+        self.budget_bps = budget_bps
+
+
+# =============================================================================
+# Multi-tenant SLO classes + subscription configuration
+# =============================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class SloClass:
+    """A per-tenant service class: default QoS bounds plus a preemption
+    priority.  Under fleet-wide oversubscription, admission control degrades
+    lower-priority classes first (``best_effort`` before ``silver`` before
+    ``gold``); a class is never degraded to make room for a lower or equal
+    priority newcomer."""
+    name: str
+    max_latency: float             # default latency upper bound, seconds
+    min_accuracy: float            # default accuracy floor, normalized F1
+    priority: int                  # higher = preempted later
+
+
+SLO_CLASSES: dict[str, SloClass] = {
+    "gold": SloClass("gold", max_latency=0.050, min_accuracy=0.95,
+                     priority=2),
+    "silver": SloClass("silver", max_latency=0.100, min_accuracy=0.92,
+                       priority=1),
+    "best_effort": SloClass("best_effort", max_latency=0.250,
+                            min_accuracy=0.80, priority=0),
+}
+
+
+def resolve_slo(slo: "SloClass | str | None") -> "SloClass | None":
+    """Accept a class name (``"gold"``), an ``SloClass``, or ``None``."""
+    if slo is None or isinstance(slo, SloClass):
+        return slo
+    try:
+        return SLO_CLASSES[slo]
+    except KeyError:
+        raise ValueError(f"unknown SLO class {slo!r}; expected one of "
+                         f"{sorted(SLO_CLASSES)} or an SloClass") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class QosBounds:
+    """The (latency upper bound, accuracy lower bound) pair of a
+    subscription -- the paper's two Subscribe() QoS arguments."""
+    latency: float                 # seconds
+    accuracy: float                # normalized F1
+
+
+@dataclasses.dataclass(frozen=True)
+class SubscriptionOptions:
+    """Everything about a subscription that is not a QoS bound.
+
+    Replaces the kwarg sprawl on ``Session.subscribe`` /
+    ``EdgeBroker.create_subscription`` (the legacy kwargs keep working for
+    one release behind a ``DeprecationWarning``).  Frozen so a spec can be
+    shared across scenario runs and threads without defensive copies.
+    """
+    controlled: bool = True        # run the latency controller
+    feedback_window: int = 8       # latency samples fed back per poll
+    credit_limit: int = 2          # per-camera in-flight frame credits
+    fleet: bool = False            # one fused compiled tick for all lanes
+    mesh: object = None            # device mesh / axis size for shard_map
+    auto_recharacterize: bool = False  # drift-triggered table re-sweeps
+    drift_config: object = None    # DriftConfig override
+    tenant: str | None = None      # tenant identity (defaults to session's)
+    slo: "SloClass | str | None" = None  # service class (name or instance)
+    admission: str = "degrade"     # oversubscription policy:
+                                   #   "degrade" -> cap budgets, admit
+                                   #   "reject"  -> raise AdmissionRejected
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,6 +204,12 @@ class EventKind(enum.Enum):
     TABLE_REFRESH = "table_refresh"  # drift monitor auto-recharacterized a
                                      # camera's knob tables (detail says
                                      # whether the re-sweep succeeded)
+    ADMISSION_REJECTED = "admission_rejected"  # fleet wire budget can't fit
+                                               # the subscription (session-
+                                               # level event)
+    TENANT_DEGRADED = "tenant_degraded"  # admission control capped this
+                                         # subscription's wire budget below
+                                         # its nominal demand
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,8 +225,24 @@ class SessionEvent:
 
 
 @dataclasses.dataclass(frozen=True)
+class CameraQosResult:
+    """Per-camera outcome of one QoS renegotiation."""
+    camera_id: str
+    status: Status
+    recharacterized: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
 class QosUpdate:
-    """Result of a live QoS renegotiation (``Subscription.update_qos``)."""
+    """Result of a live QoS renegotiation.
+
+    One shape for both surfaces: ``Subscription.update_qos`` returns an
+    update covering one subscription, ``Session.update_qos`` returns ONE
+    merged update covering every subscription in the session (it used to
+    return a list).  ``per_camera`` carries the per-camera results,
+    ``subscription_ids`` the subscriptions touched, and ``tenant`` /
+    ``slo_class`` the tenant identity the renegotiation ran under.
+    """
     latency: float                 # new upper bound, seconds
     accuracy: float                # new lower bound, normalized F1
     status: Status
@@ -143,6 +251,33 @@ class QosUpdate:
     # cameras whose characterization tables were re-swept online as part of
     # this renegotiation (``update_qos(recharacterize=True)``)
     recharacterized: tuple[str, ...] = ()
+    per_camera: tuple[CameraQosResult, ...] = ()
+    tenant: str = ""
+    slo_class: str = ""
+    subscription_ids: tuple[str, ...] = ()
+
+    @classmethod
+    def merge(cls, updates: "Sequence[QosUpdate]") -> "QosUpdate":
+        """Fold per-subscription updates into one session-level update."""
+        if not updates:
+            return cls(0.0, 0.0, Status.FAIL, (), subscription_ids=())
+        applied: list[str] = []
+        rechar: list[str] = []
+        per_cam: list[CameraQosResult] = []
+        for u in updates:
+            applied.extend(c for c in u.applied_cameras if c not in applied)
+            rechar.extend(c for c in u.recharacterized if c not in rechar)
+            per_cam.extend(u.per_camera)
+        status = (Status.OK if any(u.status is Status.OK for u in updates)
+                  else updates[0].status)
+        head = updates[0]
+        return cls(head.latency, head.accuracy, status, tuple(applied),
+                   subscription_id=head.subscription_id,
+                   recharacterized=tuple(rechar),
+                   per_camera=tuple(per_cam),
+                   tenant=head.tenant, slo_class=head.slo_class,
+                   subscription_ids=tuple(u.subscription_id
+                                          for u in updates))
 
 
 @dataclasses.dataclass(frozen=True)

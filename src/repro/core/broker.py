@@ -26,15 +26,18 @@ import dataclasses
 import itertools
 import threading
 import time
+import warnings
 from collections import deque
 from typing import Iterator, Sequence
 
 import numpy as np
 
-from repro.core.api import (BrokerDown, DeliveredFrame, EventKind, FrameBatch,
+from repro.core.api import (AdmissionRejected, BrokerDown, CameraQosResult,
+                            DeliveredFrame, EventKind, FrameBatch,
                             LatencyBreakdown, QosUpdate, RPCTimeout,
-                            SessionEvent, Status, SubscribeSpec,
-                            SubscriptionState)
+                            SessionEvent, SloClass, Status, SubscribeSpec,
+                            SubscriptionOptions, SubscriptionState,
+                            resolve_slo)
 from repro.core.channel import WirelessChannel
 from repro.core.characterization import CharacterizationTable, LatencyRegression
 from repro.core.controller import (ControlDecision, ControllerConfig,
@@ -47,7 +50,11 @@ from repro.core.knobs import wire_size
 from repro.core.log import HostLog, LogSegmentStore
 from repro.kernels import frame_knobs as FK
 
-__all__ = ["CamBroker", "EdgeBroker", "NatsLikeSystem", "MezSystem"]
+__all__ = ["CamBroker", "EdgeBroker", "NatsLikeSystem", "MezSystem",
+           "SharedFrameCache"]
+
+# sentinel for deprecated create_subscription kwargs (None is meaningful)
+_UNSET = object()
 
 # Broker-side fixed costs (seconds) -- small constants in the paper's Fig. 16
 # breakdown ("all processing delays inside the messaging system").
@@ -75,6 +82,56 @@ DRIFT_ACTIVITY_FLOOR = 0.01        # activity-residual denominator floor
                                    # -- without the floor a near-static
                                    # calibration clip makes the RELATIVE
                                    # residual ill-conditioned
+
+
+class SharedFrameCache:
+    """Fleet-shared degraded-frame cache, keyed ``(camera, timestamp,
+    transform key)``.
+
+    Promotion of ``CamBroker``'s per-camera payload cache to the edge: N
+    tenants subscribed to the same camera at the same operating point pay
+    ONE knob transform + deflate instead of N.  Entries are the same
+    mutable ``[payload, wire_bytes|None]`` pairs the per-camera cache used
+    (deflate still fills in lazily, only for frames actually shipped), so
+    promotion changes cost accounting only -- never payload bytes.
+
+    One instance lives on the ``EdgeBroker`` and is attached to every
+    ``CamBroker`` at ``register()``; a camera invalidates exactly its own
+    keys on background change / recovery / re-characterization.  Hit/miss
+    counters feed the multi-tenant benchmark's hit-rate gate.
+    """
+
+    def __init__(self, capacity: int = 4096):
+        self.capacity = int(capacity)
+        self._entries: dict[tuple, list] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: tuple) -> list | None:
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return entry
+
+    def put(self, key: tuple, entry: list) -> None:
+        if len(self._entries) >= self.capacity:    # bounded: ring-ish evict
+            self._entries.pop(next(iter(self._entries)))
+        self._entries[key] = entry
+
+    def invalidate(self, camera_id: str) -> None:
+        """Drop every entry of one camera (its transform inputs changed)."""
+        stale = [k for k in self._entries if k[0] == camera_id]
+        for k in stale:
+            del self._entries[k]
+
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def __len__(self) -> int:
+        return len(self._entries)
 
 
 class CamBroker:
@@ -113,6 +170,10 @@ class CamBroker:
         # frame is actually shipped: the pre-screen only ever needs the
         # payload + proxy features, never exact deflate.
         self._payload_cache: dict[tuple, list] = {}
+        # edge-attached shared degraded-frame cache (multi-tenant fan-out);
+        # None until EdgeBroker.register(), then transforms are shared
+        # across every camera/subscription of the edge
+        self.shared_cache: SharedFrameCache | None = None
         # per-frame scene-activity fractions (knob5's change metric)
         # observed by fetch since the last drain -- the drift monitor's
         # second channel (bounded; drained per poll by _drift_tick).
@@ -143,8 +204,15 @@ class CamBroker:
     def background(self, bg: np.ndarray | None) -> None:
         self._background = bg
         self._bg_memo = K.TransformMemo(bg) if bg is not None else None
-        self._payload_cache.clear()
+        self._clear_payload_cache()
         self._rechar_memo = None           # sweeps keyed the old background
+
+    def _clear_payload_cache(self) -> None:
+        """Invalidate this camera's cached transforms (private dict AND its
+        keys in the edge-shared cache): the transform inputs changed."""
+        self._payload_cache.clear()
+        if self.shared_cache is not None:
+            self.shared_cache.invalidate(self.camera_id)
 
     def degraded_background(self, setting: K.KnobSetting) -> np.ndarray | None:
         """The camera's background model pushed through ``setting``'s
@@ -233,7 +301,7 @@ class CamBroker:
         self.jax_tables = swap_tables(self.jax_tables, jt)
         with self._version_lock:
             self.table_version += 1
-        self._payload_cache.clear()
+        self._clear_payload_cache()
         self._rechar_memo = memo_key
         return True
 
@@ -297,7 +365,8 @@ class CamBroker:
               latency_feedback: float | None = None,
               controlled: bool = True,
               max_frames: int | None = None,
-              decision: ControlDecision | None = None
+              decision: ControlDecision | None = None,
+              budget_scale: float = 1.0
               ) -> list[DeliveredFrame]:
         """Serve the frames in [t_start, t_stop] across the wireless channel.
 
@@ -309,7 +378,10 @@ class CamBroker:
         pre-made control decision (the fleet-backed ``EdgeBroker`` computes
         decisions for ALL cameras of a session in one compiled vmapped step
         and hands each camera its lane) -- the host controller is then not
-        consulted for this fetch.
+        consulted for this fetch.  ``budget_scale`` is the owning
+        subscription's admission-control cap on the nominal operating size
+        (1.0 outside multi-tenant oversubscription; the fleet path carries
+        the same cap inside its params, so host/fleet parity holds).
         """
         if self.crashed:
             raise BrokerDown(self.camera_id)
@@ -325,7 +397,7 @@ class CamBroker:
             setting = decision.setting
             knob_idx = decision.setting_index
         elif controlled and self.controller is not None and latency_feedback is not None:
-            decision = self.controller.update(latency_feedback)
+            decision = self.controller.update(latency_feedback, budget_scale)
             infeasible = not decision.feasible
             if infeasible:
                 self.infeasible_reported += 1
@@ -445,7 +517,10 @@ class CamBroker:
         so the pre-screen never pays zlib for rejected candidates."""
         key = (ts, setting.resolution, setting.colorspace, setting.blur,
                setting.artifact)
-        entry = self._payload_cache.get(key)
+        if self.shared_cache is not None:
+            entry = self.shared_cache.get((self.camera_id,) + key)
+        else:
+            entry = self._payload_cache.get(key)
         if entry is not None:
             self.payload_cache_hits += 1
             return entry
@@ -457,9 +532,12 @@ class CamBroker:
             out = K._artifact_removal(out, bg, mode)
         out = K.transform_frame(out, setting)
         entry = [out, None]
-        if len(self._payload_cache) >= 512:           # bounded: ring-ish evict
-            self._payload_cache.pop(next(iter(self._payload_cache)))
-        self._payload_cache[key] = entry
+        if self.shared_cache is not None:
+            self.shared_cache.put((self.camera_id,) + key, entry)
+        else:
+            if len(self._payload_cache) >= 512:       # bounded: ring-ish evict
+                self._payload_cache.pop(next(iter(self._payload_cache)))
+            self._payload_cache[key] = entry
         return entry
 
     def _apply_knobs_cached(self, ts: float, frame: np.ndarray,
@@ -519,7 +597,7 @@ class CamBroker:
         self.crashed = False
         self._last_sent = None
         self._prev_frame = None
-        self._payload_cache.clear()
+        self._clear_payload_cache()
         self._activity_obs.clear()
 
 
@@ -579,6 +657,16 @@ class _Subscription:
     lat_lane: np.ndarray | None = None
     lat_valid: np.ndarray | None = None
     drift_pending: tuple | None = None
+    # multi-tenant serving: tenant identity + SLO class (None = untenanted,
+    # exempt from admission control), the admission-control cap currently
+    # applied to this subscription's wire budget, the full options record,
+    # and a monotonic creation sequence (within one class, newer
+    # subscriptions degrade before incumbents)
+    tenant: str | None = None
+    slo: SloClass | None = None
+    budget_scale: float = 1.0
+    options: SubscriptionOptions | None = None
+    seq: int = 0
 
     def invalidate_active(self) -> None:
         self.active_order = None
@@ -589,6 +677,15 @@ class _Session:
     session_id: str
     application_id: str
     sub_ids: list[str] = dataclasses.field(default_factory=list)
+    # session-level tenant identity / SLO class: the default for every
+    # subscription the session opens (SubscriptionOptions can override)
+    tenant: str | None = None
+    slo: SloClass | None = None
+    # session-level events (e.g. ADMISSION_REJECTED fires before the
+    # subscription exists); drained by session_events alongside the
+    # per-subscription streams
+    events: deque = dataclasses.field(
+        default_factory=lambda: deque(maxlen=256))
 
 
 class EdgeBroker:
@@ -610,7 +707,8 @@ class EdgeBroker:
     """
 
     def __init__(self, *, log_capacity: int = 4096,
-                 store: LogSegmentStore | None = None):
+                 store: LogSegmentStore | None = None,
+                 wire_budget: float | None = None):
         self._cams: dict[str, CamBroker] = {}
         self.replicas: dict[str, HostLog] = {}
         self._ids = itertools.count()
@@ -621,6 +719,14 @@ class EdgeBroker:
         self.log_capacity = log_capacity
         self.store = store
         self.crashed = False
+        # multi-tenant serving: the shared degraded-frame cache every
+        # registered camera transforms through, the aggregate wire budget
+        # admission control allocates (None -> the shared channel's base
+        # rate), and the mutex serializing admission decisions (two joins
+        # racing one budget must not both be admitted against it)
+        self.frame_cache = SharedFrameCache()
+        self._wire_budget = wire_budget
+        self._admission_lock = threading.Lock()
 
     # -- Mez API -------------------------------------------------------------------
     def connect(self, url: str) -> str:
@@ -635,6 +741,7 @@ class EdgeBroker:
         self._cams[cam.camera_id] = cam
         self.replicas[cam.camera_id] = HostLog(self.log_capacity,
                                                topic=cam.camera_id)
+        cam.shared_cache = self.frame_cache
         cam.channel.activate(cam.camera_id)
 
     def unregister(self, camera_id: str) -> None:
@@ -648,11 +755,21 @@ class EdgeBroker:
         return sorted(self._cams)
 
     # -- v2 session API ------------------------------------------------------------
-    def open_session(self, application_id: str) -> str:
+    def open_session(self, application_id: str, *,
+                     tenant: str | None = None,
+                     slo: SloClass | str | None = None) -> str:
+        """Open a session, optionally under a tenant identity + SLO class.
+
+        ``tenant``/``slo`` become the defaults for every subscription the
+        session creates (``SubscriptionOptions`` can override per
+        subscription).  A session with an SLO class participates in
+        fleet-wide admission control; untenanted sessions keep the exact
+        pre-multi-tenant behavior."""
         if self.crashed:
             raise RPCTimeout("EdgeBroker down")
         sid = f"sess-{next(self._ids)}"
-        self._sessions[sid] = _Session(sid, application_id)
+        self._sessions[sid] = _Session(sid, application_id, tenant=tenant,
+                                       slo=resolve_slo(slo))
         return sid
 
     def close_session(self, session_id: str) -> Status:
@@ -670,15 +787,21 @@ class EdgeBroker:
 
     def create_subscription(self, session_id: str,
                             specs: Sequence[SubscribeSpec], *,
-                            controlled: bool = True,
-                            feedback_window: int = 8,
-                            credit_limit: int = 2,
+                            options: SubscriptionOptions | None = None,
                             retarget: bool = True,
-                            fleet: bool = False,
-                            mesh=None,
-                            auto_recharacterize: bool = False,
-                            drift_config: DriftConfig | None = None) -> str:
+                            controlled=_UNSET,
+                            feedback_window=_UNSET,
+                            credit_limit=_UNSET,
+                            fleet=_UNSET,
+                            mesh=_UNSET,
+                            auto_recharacterize=_UNSET,
+                            drift_config=_UNSET) -> str:
         """Register a (possibly multi-camera) subscription on a session.
+
+        Configuration lives in a frozen ``SubscriptionOptions``; the
+        individual kwargs (``controlled``, ``feedback_window``, ...) are
+        deprecated and accepted for one release, folding into ``options``
+        with a ``DeprecationWarning``.
 
         With ``retarget`` (the default), each spec's (latency, accuracy)
         bounds are pushed to the camera's live controller -- the paper's
@@ -688,79 +811,297 @@ class EdgeBroker:
         A camera that is crashed at create time is marked failed and
         surfaces on the event stream at the first poll.
 
-        With ``fleet``, every poll drives ALL cameras of the subscription
-        through ONE compiled vmapped controller step (``FleetController``)
-        instead of one host PI update per camera -- per-poll control-plane
-        cost is ~flat in camera count.  Requires ``controlled``; cameras
-        whose controllers are installed later join the fleet lazily at the
-        first poll where every camera is ready.
+        With ``options.fleet``, every poll drives ALL cameras of the
+        subscription through ONE compiled vmapped controller step
+        (``FleetController``) instead of one host PI update per camera --
+        per-poll control-plane cost is ~flat in camera count.  Requires
+        ``controlled``; cameras whose controllers are installed later join
+        the fleet lazily at the first poll where every camera is ready.
 
-        With ``auto_recharacterize``, a per-subscription ``DriftMonitor``
-        watches every camera's observed wire sizes against its live table's
-        predictions; a camera whose windowed drift score crosses the
-        hysteresis threshold is re-characterized from its own recent frames
-        automatically (``CamBroker.recharacterize``) and the fresh tables
-        hot-swap into the live controller -- and, in fleet mode, into
-        exactly that camera's stacked lane -- with no operator call and no
-        recompile.  ``drift_config`` tunes the monitor; requires
-        ``controlled``.  Each refresh (or failed re-sweep attempt) surfaces
-        as a ``TABLE_REFRESH`` event on the subscription's event stream.
+        With ``options.auto_recharacterize``, a per-subscription
+        ``DriftMonitor`` watches every camera's observed wire sizes against
+        its live table's predictions; a camera whose windowed drift score
+        crosses the hysteresis threshold is re-characterized from its own
+        recent frames automatically (``CamBroker.recharacterize``) and the
+        fresh tables hot-swap into the live controller -- and, in fleet
+        mode, into exactly that camera's stacked lane -- with no operator
+        call and no recompile.  ``options.drift_config`` tunes the monitor;
+        requires ``controlled``.  Each refresh (or failed re-sweep attempt)
+        surfaces as a ``TABLE_REFRESH`` event on the subscription's event
+        stream.
+
+        A subscription whose effective SLO class (``options.slo``, falling
+        back to the session's) is set enters fleet-wide admission control:
+        its aggregate wire demand -- ``Regression^-1(latency)`` bytes/frame
+        x fps summed over cameras, from the live characterization tables --
+        is checked against ``wire_budget()``.  When the fleet is
+        oversubscribed, lower SLO classes are degraded first
+        (``TENANT_DEGRADED`` events, ``budget_scale`` < 1 on their control
+        lanes); if even fully-degraded lanes cannot fit, the new
+        subscription is rejected (``ADMISSION_REJECTED`` event +
+        ``AdmissionRejected``) under ``options.admission == "reject"``, or
+        admitted maximally degraded under ``"degrade"`` (the default).
+        Subscriptions with no SLO class never degrade and never enter
+        admission -- their behavior is byte-identical to the
+        single-tenant system.
         """
         if self.crashed:
             raise RPCTimeout("EdgeBroker down")
         sess = self._sessions.get(session_id)
         if sess is None:
             raise RPCTimeout(f"unknown session {session_id}")
+        opts = options if options is not None else SubscriptionOptions()
+        legacy = {k: v for k, v in [("controlled", controlled),
+                                    ("feedback_window", feedback_window),
+                                    ("credit_limit", credit_limit),
+                                    ("fleet", fleet),
+                                    ("mesh", mesh),
+                                    ("auto_recharacterize", auto_recharacterize),
+                                    ("drift_config", drift_config)]
+                  if v is not _UNSET}
+        if legacy:
+            warnings.warn(
+                "passing {} to create_subscription is deprecated; use "
+                "options=SubscriptionOptions(...)".format(
+                    ", ".join(sorted(legacy))),
+                DeprecationWarning, stacklevel=2)
+            opts = dataclasses.replace(opts, **legacy)
         if not specs:
             raise ValueError("subscription needs at least one camera spec")
-        if fleet and not controlled:
+        if opts.fleet and not opts.controlled:
             raise ValueError("fleet control plane requires controlled=True")
-        if mesh is not None and not fleet:
+        if opts.mesh is not None and not opts.fleet:
             raise ValueError("mesh partitioning requires fleet=True")
-        if auto_recharacterize and not controlled:
+        if opts.auto_recharacterize and not opts.controlled:
             raise ValueError("auto_recharacterize requires controlled=True")
+        if opts.admission not in ("degrade", "reject"):
+            raise ValueError(f"unknown admission policy {opts.admission!r}")
         for spec in specs:
             if spec.camera_id not in self._cams:
                 raise RPCTimeout(f"unknown camera {spec.camera_id}")
-        sub_id = f"sub-{next(self._ids)}"
+        tenant = opts.tenant if opts.tenant is not None else sess.tenant
+        slo = resolve_slo(opts.slo) if opts.slo is not None else sess.slo
+        num = next(self._ids)
+        sub_id = f"sub-{num}"
         cameras = {spec.camera_id: _CamCursor(spec, spec.t_start)
                    for spec in specs}
         rec = _Subscription(sub_id, session_id, sess.application_id, cameras,
-                            controlled, feedback_window, credit_limit,
-                            want_fleet=fleet, mesh=mesh)
-        if auto_recharacterize:
+                            opts.controlled, opts.feedback_window,
+                            opts.credit_limit, want_fleet=opts.fleet,
+                            mesh=opts.mesh, tenant=tenant, slo=slo,
+                            options=opts, seq=num)
+        if opts.auto_recharacterize:
             # lane order is the sorted camera-id order, matching the fleet
             # stack, so drift telemetry and fleet lanes line up.  With no
             # explicit config, each lane's hysteresis thresholds are
             # learned from its calibration clip's own residual spread
             # (``drift.learned_thresholds``; hand-set constants floor it).
             spreads = None
-            if drift_config is None:
+            if opts.drift_config is None:
                 spreads = {}
                 for cid in cameras:
                     ctl = self._cams[cid].controller
                     tbl = ctl.table if ctl is not None else None
                     spreads[cid] = getattr(tbl, "residual_spread", None)
-            rec.drift = DriftMonitor(sorted(cameras), drift_config,
+            rec.drift = DriftMonitor(sorted(cameras), opts.drift_config,
                                      spreads=spreads)
-        if retarget:
+        with self._admission_lock:
+            admitting = slo is not None or any(
+                r.slo is not None for r in self._subscriptions.values())
+            if admitting and slo is not None:
+                self._admission_check(rec, sess, opts.admission)
+            if retarget:
+                for spec in specs:
+                    try:
+                        self._cams[spec.camera_id].retarget(spec.latency,
+                                                            spec.accuracy)
+                    except BrokerDown as e:
+                        cameras[spec.camera_id].failed = True
+                        rec.events.append(SessionEvent(
+                            EventKind.RPC_TIMEOUT, spec.camera_id, sub_id,
+                            spec.t_start, str(e)))
+            self._subscriptions[sub_id] = rec
+            sess.sub_ids.append(sub_id)
             for spec in specs:
-                try:
-                    self._cams[spec.camera_id].retarget(spec.latency,
-                                                        spec.accuracy)
-                except BrokerDown as e:
-                    cameras[spec.camera_id].failed = True
-                    rec.events.append(SessionEvent(
-                        EventKind.RPC_TIMEOUT, spec.camera_id, sub_id,
-                        spec.t_start, str(e)))
-        self._subscriptions[sub_id] = rec
-        sess.sub_ids.append(sub_id)
-        for spec in specs:
-            self._sub_index.setdefault(
-                (sess.application_id, spec.camera_id), []).append(sub_id)
-        if fleet:
+                self._sub_index.setdefault(
+                    (sess.application_id, spec.camera_id), []).append(sub_id)
+            if admitting:
+                self._reallocate(at=min(s.t_start for s in specs))
+        if opts.fleet:
             self._ensure_fleet(rec)      # build now if controllers are live
         return sub_id
+
+    # -- fleet-wide admission control (multi-tenant serving) ---------------------
+    def wire_budget(self) -> float:
+        """Aggregate bytes/s the shared fleet may offer the wireless
+        channel: an explicit ``EdgeBroker(wire_budget=...)`` override, else
+        the shared channel's base rate."""
+        if self._wire_budget is not None:
+            return self._wire_budget
+        for cam in self._cams.values():
+            return cam.channel.config.base_rate
+        return float("inf")
+
+    def _lane_load(self, cam: CamBroker,
+                   spec: SubscribeSpec) -> tuple[float, float] | None:
+        """(demand_bps, floor_bps) for one camera lane of a subscription,
+        from the camera's live characterization.
+
+        demand: the wire rate the lane wants at full QoS -- the nominal
+        operating size ``Regression^-1(latency)`` (clipped to the table's
+        characterized range) x the camera's fps, workload-scaled like the
+        channel's own cost model.  floor: the cheapest rate that still
+        meets the spec's accuracy bound (the smallest characterized setting
+        with ``acc >= accuracy``); a lane can be degraded down to its floor
+        but never below.  None when the camera has no live controller yet
+        (an uncharacterized lane cannot be costed -- it joins admission
+        accounting at its first retarget/poll)."""
+        ctl = cam.controller
+        if ctl is None:
+            return None
+        tbl = ctl.table
+        nominal = float(np.clip(ctl.regression.invert(spec.latency),
+                                tbl.sizes_sorted[0], tbl.sizes_sorted[-1]))
+        ok = tbl.size_by_setting[tbl.acc_by_setting >= spec.accuracy]
+        floor = float(ok.min()) if ok.size else float(tbl.sizes_sorted[0])
+        floor = min(floor, nominal)
+        return (cam.channel.scaled_bytes(nominal) * cam.fps,
+                cam.channel.scaled_bytes(floor) * cam.fps)
+
+    def _sub_load(self, rec: _Subscription) -> tuple[float, float]:
+        """Aggregate (demand_bps, floor_bps) over a subscription's active
+        cameras."""
+        demand = floor = 0.0
+        for cid, cur in rec.cameras.items():
+            if not cur.active or cur.failed:
+                continue
+            cam = self._cams.get(cid)
+            if cam is None or cam.crashed:
+                continue
+            load = self._lane_load(cam, cur.spec)
+            if load is not None:
+                demand += load[0]
+                floor += load[1]
+        return demand, floor
+
+    def _slo_subs(self) -> list[_Subscription]:
+        return [r for r in self._subscriptions.values() if r.slo is not None]
+
+    def _admission_check(self, rec: _Subscription, sess: _Session,
+                         policy: str) -> None:
+        """Reject ``rec`` if even the maximally-degraded fleet cannot fit
+        it: its own floor + the demand admission may NOT touch (untenanted
+        subscriptions, higher-priority classes at full rate is not
+        required -- they too can degrade to floor, so only their floors are
+        protected) must fit the wire budget."""
+        budget = self.wire_budget()
+        if not np.isfinite(budget):
+            return
+        _, floor_new = self._sub_load(rec)
+        protected = 0.0
+        for other in self._subscriptions.values():
+            d, f = self._sub_load(other)
+            # untenanted subscriptions never degrade: full demand protected
+            protected += d if other.slo is None else f
+        if floor_new + protected > budget:
+            at = min(c.spec.t_start for c in rec.cameras.values())
+            if policy == "reject":
+                sess.events.append(SessionEvent(
+                    EventKind.ADMISSION_REJECTED, "", rec.sub_id, at,
+                    f"demand floor {floor_new + protected:.0f} B/s exceeds "
+                    f"wire budget {budget:.0f} B/s"))
+                raise AdmissionRejected(
+                    f"subscription {rec.sub_id} (tenant={rec.tenant!r}, "
+                    f"slo={rec.slo.name}) infeasible: floor "
+                    f"{floor_new + protected:.0f} B/s > budget {budget:.0f} B/s",
+                    demand_bps=floor_new + protected, budget_bps=budget)
+            rec.events.append(SessionEvent(
+                EventKind.TENANT_DEGRADED, "", rec.sub_id, at,
+                "admitted over budget: fleet remains oversubscribed even "
+                "fully degraded"))
+
+    def _reallocate(self, at: float = 0.0) -> None:
+        """Re-divide the wire budget across all SLO-classed subscriptions.
+
+        Lower-priority classes absorb the shortfall first (``best_effort``
+        before ``silver`` before ``gold``; newest-first within a class), by
+        scaling each victim's nominal operating point
+        (``budget_scale = (demand - cut) / demand``) down toward -- never
+        below -- its accuracy floor.  Untenanted subscriptions are never
+        touched; their demand is simply subtracted from the budget.  Scales
+        are quantized to f32 so the host PI path and the fleet's
+        params-lane path compute identical operating points.  Restores
+        (scale moving back up, e.g. after a tenant leaves) are silent;
+        decreases emit one ``TENANT_DEGRADED`` event per subscription.
+        Caller holds ``_admission_lock``."""
+        slo_subs = self._slo_subs()
+        if not slo_subs:
+            return
+        budget = self.wire_budget()
+        if not np.isfinite(budget):
+            for r in slo_subs:
+                self._apply_budget_scale(r, 1.0, at)
+            return
+        protected = sum(self._sub_load(r)[0]
+                        for r in self._subscriptions.values()
+                        if r.slo is None)
+        loads = {r.sub_id: self._sub_load(r) for r in slo_subs}
+        offered = protected + sum(d for d, _ in loads.values())
+        excess = offered - budget
+        # victims in ascending (priority, newest-first) order
+        order = sorted(slo_subs, key=lambda r: (r.slo.priority, -r.seq))
+        scales = {r.sub_id: 1.0 for r in slo_subs}
+        for r in order:
+            if excess <= 1e-9:
+                break
+            d, f = loads[r.sub_id]
+            if d <= 0.0:
+                continue
+            cut = min(excess, d - f)
+            if cut <= 0.0:
+                continue
+            scales[r.sub_id] = float(np.float32((d - cut) / d))
+            excess -= cut
+        for r in slo_subs:
+            self._apply_budget_scale(r, scales[r.sub_id], at)
+
+    def _apply_budget_scale(self, rec: _Subscription, scale: float,
+                            at: float) -> None:
+        """Install a budget scale on a subscription's control plane (host
+        PI path via the per-poll ``budget_scale`` argument, fleet path via
+        one params-leaf write -- no retrace either way)."""
+        if scale == rec.budget_scale:
+            return
+        decreased = scale < rec.budget_scale
+        rec.budget_scale = scale
+        if rec.fleet is not None:
+            rec.fleet.set_budget_scale(scale)
+        if decreased:
+            rec.events.append(SessionEvent(
+                EventKind.TENANT_DEGRADED, "", rec.sub_id, at,
+                f"tenant={rec.tenant!r} slo={rec.slo.name} "
+                f"budget_scale={scale:.4f}"))
+
+    def wire_report(self) -> dict:
+        """Introspection: the admission controller's current allocation."""
+        budget = self.wire_budget()
+        subs = {}
+        offered = 0.0
+        for r in self._subscriptions.values():
+            d, f = self._sub_load(r)
+            offered += d * (r.budget_scale if r.slo is not None else 1.0)
+            subs[r.sub_id] = {
+                "tenant": r.tenant,
+                "slo": r.slo.name if r.slo is not None else None,
+                "priority": r.slo.priority if r.slo is not None else None,
+                "demand_bps": d,
+                "floor_bps": f,
+                "scale": r.budget_scale if r.slo is not None else 1.0,
+                "allocated_bps": d * (r.budget_scale
+                                      if r.slo is not None else 1.0),
+            }
+        return {"budget_bps": budget, "offered_bps": offered,
+                "subscriptions": subs}
 
     def _ensure_fleet(self, rec: _Subscription) -> FleetController | None:
         """Build the subscription's fleet control plane once every camera
@@ -776,7 +1117,10 @@ class EdgeBroker:
                 return None
             cams.append(cam)
         rec.fleet = FleetController(cams, capacity=TABLE_CAPACITY,
-                                    mesh=rec.mesh)
+                                    mesh=rec.mesh,
+                                    tier=rec.slo.priority if rec.slo else 0)
+        if rec.budget_scale != 1.0:
+            rec.fleet.set_budget_scale(rec.budget_scale)
         if rec.drift is not None:
             rec.fleet.attach_drift(rec.drift)
         # lane-ordered incremental feedback, seeded from whatever the host
@@ -1053,7 +1397,8 @@ class EdgeBroker:
                                latency_feedback=feedback,
                                controlled=rec.controlled,
                                max_frames=budget,
-                               decision=decision)
+                               decision=decision,
+                               budget_scale=rec.budget_scale)
         except BrokerDown as e:
             cur.failed = True
             rec.invalidate_active()
@@ -1122,9 +1467,10 @@ class EdgeBroker:
         rec = self._subscriptions.get(subscription_id)
         if rec is None:
             return QosUpdate(latency or 0.0, accuracy or 0.0, Status.FAIL,
-                             (), subscription_id)
+                             (), subscription_id, subscription_ids=())
         applied: list[str] = []
         recharacterized: list[str] = []
+        per_camera: list[CameraQosResult] = []
         new_lat = new_acc = 0.0
         for cid, cur in rec.cameras.items():
             if cur.detached or cur.failed:
@@ -1137,22 +1483,40 @@ class EdgeBroker:
             if cam is None:
                 continue
             try:
-                if recharacterize and cam.recharacterize():
+                did_rechar = bool(recharacterize and cam.recharacterize())
+                if did_rechar:
                     recharacterized.append(cid)
                 # retarget AFTER the table swap: the operating point
                 # re-seeds into the freshly characterized size axis
                 if cam.retarget(new_lat, new_acc):
                     applied.append(cid)
+                    per_camera.append(CameraQosResult(
+                        cid, Status.OK, recharacterized=did_rechar))
+                else:
+                    per_camera.append(CameraQosResult(
+                        cid, Status.FAIL, recharacterized=did_rechar))
             except BrokerDown as e:
                 cur.failed = True
                 rec.invalidate_active()
                 rec.events.append(SessionEvent(
                     EventKind.RPC_TIMEOUT, cid, rec.sub_id, cur.cursor,
                     str(e)))
+                per_camera.append(CameraQosResult(cid, Status.FAIL))
+        if rec.slo is not None or any(r.slo is not None
+                                      for r in self._subscriptions.values()):
+            # new bounds move the subscription's wire demand: re-divide
+            with self._admission_lock:
+                self._reallocate(at=max((c.cursor
+                                         for c in rec.cameras.values()),
+                                        default=0.0))
         return QosUpdate(new_lat, new_acc,
                          Status.OK if applied else Status.FAIL,
                          tuple(applied), subscription_id,
-                         recharacterized=tuple(recharacterized))
+                         recharacterized=tuple(recharacterized),
+                         per_camera=tuple(per_camera),
+                         tenant=rec.tenant or "",
+                         slo_class=rec.slo.name if rec.slo else "",
+                         subscription_ids=(subscription_id,))
 
     def reattach_camera(self, subscription_id: str, camera_id: str) -> Status:
         """Re-admit a recovered camera into a live subscription.
@@ -1196,6 +1560,12 @@ class EdgeBroker:
                     ids.remove(subscription_id)
                 if not ids:
                     del self._sub_index[key]
+        if any(r.slo is not None for r in self._subscriptions.values()):
+            # a leaving tenant frees wire budget: restore degraded lanes
+            with self._admission_lock:
+                self._reallocate(at=max((c.cursor
+                                         for c in rec.cameras.values()),
+                                        default=0.0))
         return Status.OK
 
     def subscription_fleet(self, subscription_id: str
@@ -1231,11 +1601,14 @@ class EdgeBroker:
         return [sid for sid in sess.sub_ids if sid in self._subscriptions]
 
     def session_events(self, session_id: str) -> list[SessionEvent]:
-        """Drain pending events across all subscriptions of a session."""
+        """Drain pending events across all subscriptions of a session,
+        plus session-level events (admission rejections happen before a
+        subscription record exists, so they land on the session)."""
         sess = self._sessions.get(session_id)
         if sess is None:
             return []
-        out: list[SessionEvent] = []
+        out: list[SessionEvent] = list(sess.events)
+        sess.events.clear()
         for sub_id in sess.sub_ids:
             out.extend(self.subscription_events(sub_id))
         return out
@@ -1256,6 +1629,22 @@ class EdgeBroker:
                   controlled: bool = True,
                   feedback_window: int = 8,
                   fetch_window: int = 2) -> Iterator[DeliveredFrame]:
+        """Deprecated v1 streaming subscription.  Use the v2 session API
+        (``open_session`` / ``create_subscription`` / ``poll_subscription``)
+        or, for existing v1 callers, ``repro.compat.subscribe_v1`` which
+        wraps this without a per-call warning."""
+        warnings.warn(
+            "EdgeBroker.subscribe (v1 iterator API) is deprecated; use the "
+            "v2 session API or repro.compat.subscribe_v1",
+            DeprecationWarning, stacklevel=2)
+        return self._subscribe_v1(spec, controlled=controlled,
+                                  feedback_window=feedback_window,
+                                  fetch_window=fetch_window)
+
+    def _subscribe_v1(self, spec: SubscribeSpec, *,
+                      controlled: bool = True,
+                      feedback_window: int = 8,
+                      fetch_window: int = 2) -> Iterator[DeliveredFrame]:
         """v1 streaming subscription (paper Fig. 7), as a shim over the v2
         session machinery.
 
@@ -1271,8 +1660,10 @@ class EdgeBroker:
         def gen() -> Iterator[DeliveredFrame]:
             sid = self.open_session(spec.application_id)
             sub_id = self.create_subscription(
-                sid, (spec,), controlled=controlled,
-                feedback_window=feedback_window, credit_limit=fetch_window,
+                sid, (spec,),
+                options=SubscriptionOptions(controlled=controlled,
+                                            feedback_window=feedback_window,
+                                            credit_limit=fetch_window),
                 retarget=False)
             try:
                 while True:
@@ -1329,9 +1720,10 @@ class MezSystem:
     benchmarks instantiate)."""
 
     def __init__(self, channel: WirelessChannel, *,
-                 store: LogSegmentStore | None = None):
+                 store: LogSegmentStore | None = None,
+                 wire_budget: float | None = None):
         self.channel = channel
-        self.edge = EdgeBroker(store=store)
+        self.edge = EdgeBroker(store=store, wire_budget=wire_budget)
         self.cams: dict[str, CamBroker] = {}
 
     def add_camera(self, camera_id: str, *, distance_m: float = 6.0,

@@ -132,8 +132,13 @@ class LatencyController:
                           table.sizes_sorted[-1])))
         self._current = int(idx)
 
-    def update(self, latency_sampled: float) -> ControlDecision:
+    def update(self, latency_sampled: float,
+               budget_scale: float = 1.0) -> ControlDecision:
+        """One PI step.  ``budget_scale`` caps the nominal operating size
+        (fleet admission control's per-tenant degradation knob; 1.0 -- the
+        single-tenant case -- is exact, so decisions are unchanged)."""
         cfg = self.config
+        nominal = self._nominal * budget_scale
         error = latency_sampled - cfg.latency_target
         act = error > cfg.error_threshold or (
             cfg.relax and error < -cfg.error_threshold)
@@ -142,10 +147,10 @@ class LatencyController:
             idx = self._current
             acc = float(self.table.acc_by_setting[idx]) if idx >= 0 else 0.0
             return ControlDecision(idx >= 0, self.table.setting_for(idx) if idx >= 0
-                                   else None, idx, acc, self._nominal, error, False)
+                                   else None, idx, acc, nominal, error, False)
         self.integral = float(np.clip(self.integral + error,
                                       -cfg.integral_clip, cfg.integral_clip))
-        size = self._nominal + self.k1 * error + self.k2 * self.integral
+        size = nominal + self.k1 * error + self.k2 * self.integral
         size = float(np.clip(size, self.table.sizes_sorted[0],
                              self.table.sizes_sorted[-1]))
         accuracy, idx = self.table.query_size(size)
@@ -322,11 +327,22 @@ class ControllerParams:
     nominal: jax.Array           # f32, Regression^-1(latency_target), bytes
     integral_clip: jax.Array     # f32
     relax: jax.Array             # bool
+    # multi-tenant axes: admission control reallocates the shared wire
+    # budget by writing these leaves (values, not shapes -- no retrace).
+    budget_scale: jax.Array = None  # f32, cap on nominal (1.0 = full budget)
+    tier: jax.Array = None          # i32, tenant SLO preemption priority
+
+    def __post_init__(self):
+        if self.budget_scale is None:
+            self.budget_scale = jnp.float32(1.0)
+        if self.tier is None:
+            self.tier = jnp.int32(0)
 
     def tree_flatten(self):
         return ((self.latency_target, self.accuracy_target,
                  self.error_threshold, self.k1, self.k2, self.nominal,
-                 self.integral_clip, self.relax), None)
+                 self.integral_clip, self.relax, self.budget_scale,
+                 self.tier), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -337,25 +353,33 @@ class ControllerParams:
                      slope: float, intercept: float,
                      error_threshold: float = 0.010, alpha_p: float = 0.8,
                      alpha_i: float = 0.25, integral_clip: float = 1.0,
-                     relax: bool = True) -> "ControllerParams":
+                     relax: bool = True, budget_scale: float = 1.0,
+                     tier: int = 0) -> "ControllerParams":
         k1 = -alpha_p / max(slope, 1e-12)
         k2 = -alpha_i / max(slope, 1e-12)
         nominal = max(0.0, (latency_target - intercept) / max(slope, 1e-12))
         return cls(jnp.float32(latency_target), jnp.float32(accuracy_target),
                    jnp.float32(error_threshold), jnp.float32(k1),
                    jnp.float32(k2), jnp.float32(nominal),
-                   jnp.float32(integral_clip), jnp.asarray(relax))
+                   jnp.float32(integral_clip), jnp.asarray(relax),
+                   jnp.float32(budget_scale), jnp.int32(tier))
 
     @classmethod
-    def from_controller(cls, host: "LatencyController") -> "ControllerParams":
+    def from_controller(cls, host: "LatencyController", *,
+                        budget_scale: float = 1.0,
+                        tier: int = 0) -> "ControllerParams":
         """Mirror a live host controller's law (gains/nominal copied verbatim
-        from the float64 host state, so fleet decisions track host decisions)."""
+        from the float64 host state, so fleet decisions track host decisions).
+        ``budget_scale``/``tier`` carry the owning subscription's admission
+        cap and SLO class -- per-subscription state the host controller
+        (shared across tenants) does not own."""
         cfg = host.config
         return cls(jnp.float32(cfg.latency_target),
                    jnp.float32(cfg.accuracy_target),
                    jnp.float32(cfg.error_threshold), jnp.float32(host.k1),
                    jnp.float32(host.k2), jnp.float32(host._nominal),
-                   jnp.float32(cfg.integral_clip), jnp.asarray(cfg.relax))
+                   jnp.float32(cfg.integral_clip), jnp.asarray(cfg.relax),
+                   jnp.float32(budget_scale), jnp.int32(tier))
 
 
 @jax.tree_util.register_pytree_node_class
@@ -401,7 +425,8 @@ def _controller_step_core(state: ControllerState, latency_sampled: jax.Array,
                             -params.integral_clip, params.integral_clip)
     integral = jnp.where(act, new_integral, state.integral)
 
-    size = params.nominal + params.k1 * error + params.k2 * integral
+    nominal = params.nominal * params.budget_scale
+    size = nominal + params.k1 * error + params.k2 * integral
     # clip into the LIVE size range (padding rows carry +inf)
     hi = jnp.take(tables.sizes_sorted, tables.n_valid - 1)
     size = jnp.clip(size, tables.sizes_sorted[0], hi)
@@ -431,7 +456,7 @@ def _controller_step_core(state: ControllerState, latency_sampled: jax.Array,
     aux = StepAux(idx=new_state.current_idx,
                   feasible=jnp.where(act, ok, new_state.current_idx >= 0),
                   acted=act, error=error,
-                  requested_size=jnp.where(act, size, params.nominal),
+                  requested_size=jnp.where(act, size, nominal),
                   accuracy=accuracy)
     return new_state, aux
 
@@ -706,8 +731,13 @@ class FleetController:
     HISTORY_LIMIT = 4096
 
     def __init__(self, cams, *, capacity: int | None = None,
-                 record_history: bool = False, mesh=None):
+                 record_history: bool = False, mesh=None, tier: int = 0):
         cams = list(cams)
+        # multi-tenant axes: the owning subscription's SLO class rides as a
+        # per-lane i32 leaf, and admission control caps the fleet's wire
+        # budget by writing the per-lane budget_scale leaf (set_budget_scale)
+        self._tier = int(tier)
+        self._budget_scale = 1.0
         if not cams:
             raise ValueError("FleetController needs at least one camera")
         for cam in cams:
@@ -770,7 +800,9 @@ class FleetController:
                 for c in self._cams]
         self.tables = stack_tables(self._pad_rows(rows, pad))
         self.params = stack_params(self._pad_rows(
-            [ControllerParams.from_controller(c.controller)
+            [ControllerParams.from_controller(c.controller,
+                                              budget_scale=self._budget_scale,
+                                              tier=self._tier)
              for c in self._cams], pad))
         start = np.asarray(self._pad_rows(
             [c.controller._current for c in self._cams], pad), np.int32)
@@ -835,6 +867,26 @@ class FleetController:
         """Compiled-variant count of the fused tick (1 = no recompiles)."""
         return self._tick_jit._cache_size()
 
+    @property
+    def budget_scale(self) -> float:
+        """The admission-control cap currently applied to every lane."""
+        return self._budget_scale
+
+    def set_budget_scale(self, scale: float) -> None:
+        """Fleet-level wire-budget reallocation (admission control's
+        degradation knob): cap every lane's nominal operating size at
+        ``scale`` x the regression nominal.  A pure params-LEAF write --
+        values change, shapes don't -- so the compiled tick's cache stays
+        at one; degrading (or restoring) a tenant under oversubscription
+        costs the same single dispatch as a quiet poll."""
+        s = float(np.float32(scale))
+        if not 0.0 < s <= 1.0:
+            raise ValueError(f"budget_scale must be in (0, 1], got {scale}")
+        if s == self._budget_scale:
+            return
+        self._budget_scale = s
+        self.params.budget_scale = jnp.full_like(self.params.budget_scale, s)
+
     def __len__(self) -> int:
         return len(self._cams)
 
@@ -879,7 +931,9 @@ class FleetController:
                     self._table_versions[i] = cam.table_version
                 if retargeted[i]:
                     self.params = _set_lane(
-                        self.params, i, ControllerParams.from_controller(ctl))
+                        self.params, i, ControllerParams.from_controller(
+                            ctl, budget_scale=self._budget_scale,
+                            tier=self._tier))
                     self._qos_versions[i] = cam.qos_version
                     self._targets[i] = ctl.config.latency_target
         for i, cam in enumerate(self._cams):

@@ -45,7 +45,8 @@ from typing import Callable, Mapping, Sequence
 import numpy as np
 
 from repro.core import detector as det
-from repro.core.api import RPCTimeout
+from repro.core.api import (AdmissionRejected, QosBounds, RPCTimeout,
+                            SubscriptionOptions, resolve_slo)
 from repro.core.broker import MezSystem
 from repro.core.channel import calibrated_channel
 from repro.core.characterization import (CharacterizationTable, characterize,
@@ -59,7 +60,8 @@ __all__ = [
     "InterferenceSpike", "CongestionRamp", "DistanceDrift",
     "PeerJoin", "PeerLeave", "CameraCrash", "CameraRecover",
     "EdgeCrash", "EdgeRecover", "QosChange", "TableRefresh",
-    "SceneShift", "TableStaleness", "run_scenario",
+    "SceneShift", "TableStaleness", "TenantJoin", "TenantLeave",
+    "run_scenario",
 ]
 
 
@@ -212,6 +214,33 @@ class SceneShift:
 
 
 @dataclasses.dataclass(frozen=True)
+class TenantJoin:
+    """A new tenant session joins the shared fleet mid-scenario under an
+    SLO class, subscribing its own view of the cameras from ``at`` to
+    scenario end.  The join passes through fleet-wide admission control:
+    under ``admission="degrade"`` (default) lower SLO classes absorb the
+    shortfall (``TENANT_DEGRADED`` events); under ``"reject"`` an
+    infeasible join raises and is logged ``admitted=False``.  ``cameras``
+    defaults to the whole fleet; QoS bounds default to the SLO class's
+    (latency, accuracy) pair."""
+    at: float
+    tenant: str
+    slo: str = "best_effort"
+    cameras: tuple[str, ...] | None = None
+    latency: float | None = None
+    accuracy: float | None = None
+    admission: str = "degrade"
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantLeave:
+    """The tenant's session closes; admission control re-divides the freed
+    wire budget across the remaining tenants (degraded lanes restore)."""
+    at: float
+    tenant: str
+
+
+@dataclasses.dataclass(frozen=True)
 class TableStaleness:
     """Fault injection: ONE camera's LIVE tables go stale in place
     (``CamBroker.inject_table_staleness``) -- the size axis is rescaled by
@@ -267,6 +296,15 @@ class ScenarioSpec:
     # ``ScenarioResult.measured_f1``.  Costs one host detector pass per
     # published + delivered frame; off by default.
     score_frames: bool = False
+    # pre-built SubscriptionOptions for the main subscription; when set it
+    # is used AS-IS and the legacy per-field knobs above (controlled,
+    # fleet, mesh, credit_limit, feedback_window, auto_recharacterize,
+    # drift_config) are ignored
+    options: SubscriptionOptions | None = None
+    # aggregate bytes/s admission control divides across SLO-classed
+    # tenants (None = the channel's base rate); only consulted once a
+    # TenantJoin puts an SLO class on the fleet
+    wire_budget: float | None = None
     events: tuple = ()
 
 
@@ -315,6 +353,10 @@ class ScenarioResult:
     # and cumulative fires per camera
     drift_cache_size: int | None = None
     drift_fire_counts: dict | None = None
+    # per-tenant delivery/accuracy aggregates (only populated when the
+    # timeline contains TenantJoin events): tenant -> {slo, admitted,
+    # delivered, dropped, mean_accuracy, min_budget_scale, [f1]}
+    tenant_stats: dict | None = None
 
     # -- trace queries -------------------------------------------------------
     def select(self, t0: float | None = None, t1: float | None = None, *,
@@ -412,6 +454,8 @@ class ScenarioResult:
                         "knob_index", "accuracy", "infeasible", "dropped"],
             "rows": [r.as_list() for r in self.rows],
             "events": self.events_log,
+            **({"tenant_stats": self.tenant_stats}
+               if self.tenant_stats else {}),
         }
 
     def to_json(self, *, indent: int | None = None) -> str:
@@ -427,12 +471,21 @@ class _Engine:
     """Applies the spec's timeline to the live system at each clock tick."""
 
     def __init__(self, spec: ScenarioSpec, system: MezSystem, session,
-                 subscription, events_log: list[dict]):
+                 subscription, events_log: list[dict], *,
+                 client: MezClient | None = None,
+                 t_end: float = 0.0):
         self.spec = spec
         self.system = system
         self.session = session
         self.sub = subscription
         self.log = events_log
+        self.client = client
+        self.t_end = t_end
+        # live tenant sessions keyed by tenant name: {"session", "sub",
+        # "slo"}; polled in sorted-name order each tick after the main
+        # subscription (deterministic interleave)
+        self.tenants: dict[str, dict] = {}
+        self.tenant_stats: dict[str, dict] = {}
         self.continuous = [e for e in spec.events
                            if isinstance(e, _CONTINUOUS)]
         self.oneshot = sorted(
@@ -514,9 +567,96 @@ class _Engine:
             entry["camera_id"] = ev.camera_id
             entry["factor"] = ev.factor
             entry["stale"] = cam.inject_table_staleness(ev.factor)
+        elif isinstance(ev, TenantJoin):
+            slo = resolve_slo(ev.slo)
+            entry["tenant"] = ev.tenant
+            entry["slo"] = slo.name
+            cam_ids = (list(ev.cameras) if ev.cameras is not None
+                       else [c.camera_id for c in self.spec.cameras])
+            lat = ev.latency if ev.latency is not None else slo.max_latency
+            acc = (ev.accuracy if ev.accuracy is not None
+                   else slo.min_accuracy)
+            sess = self.client.open_session(f"tenant-{ev.tenant}",
+                                            tenant=ev.tenant, slo=slo)
+            stats = self.tenant_stats.setdefault(ev.tenant, {
+                "slo": slo.name, "admitted": False, "delivered": 0,
+                "dropped": 0, "acc_sum": 0.0, "acc_n": 0,
+                "min_budget_scale": 1.0})
+            try:
+                sub = sess.subscribe(
+                    cam_ids, ev.at, self.t_end, qos=QosBounds(lat, acc),
+                    options=SubscriptionOptions(tenant=ev.tenant, slo=slo,
+                                                admission=ev.admission))
+            except AdmissionRejected as e:
+                entry["admitted"] = False
+                entry["detail"] = str(e)
+                for sev in sess.events():
+                    self.log.append({"t": t, "kind": sev.kind.value,
+                                     "tenant": ev.tenant,
+                                     "detail": sev.detail})
+                sess.close()
+            else:
+                entry["admitted"] = True
+                stats["admitted"] = True
+                self.tenants[ev.tenant] = {"session": sess, "sub": sub,
+                                           "slo": slo}
+        elif isinstance(ev, TenantLeave):
+            st = self.tenants.pop(ev.tenant, None)
+            entry["tenant"] = ev.tenant
+            entry["closed"] = st is not None
+            if st is not None:
+                for sev in st["sub"].events():
+                    self.log.append({"t": t, "kind": sev.kind.value,
+                                     "tenant": ev.tenant,
+                                     "detail": sev.detail})
+                st["session"].close()
         else:
             raise TypeError(f"unknown scenario event {type(ev).__name__}")
         self.log.append(entry)
+
+
+def _poll_tenants(engine: _Engine, system: MezSystem, max_frames: int,
+                  frame_acc, frame_counts, clock: float) -> int:
+    """One poll round over every live tenant subscription (sorted tenant
+    order -- deterministic interleave with the main stream), folding frames
+    into per-tenant aggregates and tenant events into the scenario log.
+    Returns the number of frames seen."""
+    if not engine.tenants:
+        return 0
+    seen = 0
+    for name in sorted(engine.tenants):
+        st = engine.tenants[name]
+        stats = engine.tenant_stats[name]
+        try:
+            batch = st["sub"].poll(max_frames=max_frames)
+        except RPCTimeout:
+            continue
+        seen += len(batch)
+        for d in batch.frames:
+            cam = system.cams.get(d.camera_id)
+            if d.frame is None:
+                stats["dropped"] += 1
+            else:
+                stats["delivered"] += 1
+            acc = frame_acc(d, cam)
+            if acc is not None:
+                stats["acc_sum"] += acc
+                stats["acc_n"] += 1
+            c = frame_counts(d, cam)
+            if c is not None:
+                agg = stats.setdefault("counts", [0, 0, 0])
+                agg[0] += c[0]; agg[1] += c[1]; agg[2] += c[2]
+        for ev in st["sub"].events():
+            engine.log.append({"t": clock, "kind": ev.kind.value,
+                               "tenant": name, "detail": ev.detail})
+    # track how deep admission control pushed each tenant's wire allocation
+    report = system.edge.wire_report()
+    for name, st in engine.tenants.items():
+        sid = st["sub"].subscription_id
+        scale = report["subscriptions"].get(sid, {}).get("scale", 1.0)
+        stats = engine.tenant_stats[name]
+        stats["min_budget_scale"] = min(stats["min_budget_scale"], scale)
+    return seen
 
 
 def run_scenario(
@@ -554,7 +694,7 @@ def run_scenario(
         return resolved[dynamics]
 
     ch = calibrated_channel(seed=spec.seed, workload=spec.workload)
-    system = MezSystem(ch)
+    system = MezSystem(ch, wire_budget=spec.wire_budget)
     n_cams = len(spec.cameras)
     fps = max(c.fps for c in spec.cameras)
     events_log: list[dict] = []
@@ -597,21 +737,54 @@ def run_scenario(
     rows: list[TraceRow] = []
     measured: list[tuple[int, int, int] | None] = []
     max_frames = spec.max_frames_per_poll or n_cams * spec.credit_limit
+    opts = spec.options if spec.options is not None else SubscriptionOptions(
+        controlled=spec.controlled, feedback_window=spec.feedback_window,
+        credit_limit=spec.credit_limit, fleet=spec.fleet, mesh=spec.mesh,
+        auto_recharacterize=spec.auto_recharacterize,
+        drift_config=spec.drift_config)
+
+    def frame_acc(d, cam):
+        """Table-predicted normalized F1 of one delivered frame."""
+        if d.frame is None:
+            return None
+        if d.knob_index >= 0 and cam is not None \
+                and cam.controller is not None:
+            return float(cam.controller.table.acc_by_setting[d.knob_index])
+        return 1.0                         # raw frame = full fidelity
+
+    def frame_counts(d, cam):
+        """Measured (tp, fp, fn) vs the full-quality pseudo-GT (None when
+        unscored)."""
+        if not spec.score_frames or cam is None:
+            return None
+        base = base_dets.get((d.camera_id, float(d.timestamp)))
+        if base is None:
+            return None
+        if d.frame is None:
+            # knob5-dropped: the application never saw the frame, its
+            # pseudo-GT becomes false negatives (detector.normalized_f1's
+            # protocol)
+            return (0, 0, len(base))
+        if d.knob_index >= 0 and cam.controller is not None:
+            setting = cam.controller.table.setting_for(d.knob_index)
+            bg = cam.degraded_background(setting)
+        else:
+            bg = cam.background
+        boxes = det.detect(np.asarray(d.frame), bg,
+                           scale_to=cam.background.shape[:2])
+        return det.match_f1(base, boxes)
+
     sess = client.open_session(f"scenario-{spec.name}")
     try:
         sub = sess.subscribe([c.camera_id for c in spec.cameras],
                              0.0, spec.frames / fps,
-                             latency=spec.latency, accuracy=spec.accuracy,
-                             controlled=spec.controlled, fleet=spec.fleet,
-                             mesh=spec.mesh,
-                             feedback_window=spec.feedback_window,
-                             credit_limit=spec.credit_limit,
-                             auto_recharacterize=spec.auto_recharacterize,
-                             drift_config=spec.drift_config)
+                             qos=QosBounds(spec.latency, spec.accuracy),
+                             options=opts)
         fleet = system.edge.subscription_fleet(sub.subscription_id)
         if fleet is not None and spec.record_decisions:
             fleet.record_history = True
-        engine = _Engine(spec, system, sess, sub, events_log)
+        engine = _Engine(spec, system, sess, sub, events_log,
+                         client=client, t_end=spec.frames / fps)
         clock = 0.0
         while True:
             engine.tick(clock)
@@ -628,37 +801,14 @@ def run_scenario(
                     break
                 clock = nxt
                 continue
+            _poll_tenants(engine, system, max_frames, frame_acc,
+                          frame_counts, clock)
             if not batch:
                 break
             for d in batch.frames:
                 cam = system.cams.get(d.camera_id)
-                acc = None
-                if d.frame is not None:
-                    if d.knob_index >= 0 and cam is not None \
-                            and cam.controller is not None:
-                        acc = float(cam.controller.table.acc_by_setting[
-                            d.knob_index])
-                    else:
-                        acc = 1.0          # raw frame = full fidelity
-                counts = None
-                if spec.score_frames and cam is not None:
-                    base = base_dets.get((d.camera_id, float(d.timestamp)))
-                    if base is not None and d.frame is None:
-                        # knob5-dropped: the application never saw the
-                        # frame, its pseudo-GT becomes false negatives
-                        # (detector.normalized_f1's protocol)
-                        counts = (0, 0, len(base))
-                    elif base is not None:
-                        if d.knob_index >= 0 and cam.controller is not None:
-                            setting = cam.controller.table.setting_for(
-                                d.knob_index)
-                            bg = cam.degraded_background(setting)
-                        else:
-                            bg = cam.background
-                        boxes = det.detect(
-                            np.asarray(d.frame), bg,
-                            scale_to=cam.background.shape[:2])
-                        counts = det.match_f1(base, boxes)
+                acc = frame_acc(d, cam)
+                counts = frame_counts(d, cam)
                 measured.append(counts)
                 rows.append(TraceRow(
                     camera_id=d.camera_id,
@@ -676,6 +826,30 @@ def run_scenario(
                 events_log.append({"t": clock, "kind": ev.kind.value,
                                    "camera_id": ev.camera_id,
                                    "detail": ev.detail})
+        # tenants may still hold undelivered frames after the main
+        # subscription drains: keep polling until every stream is dry
+        while engine.tenants:
+            if not _poll_tenants(engine, system, max_frames, frame_acc,
+                                 frame_counts, clock):
+                break
+        tenant_stats = None
+        if engine.tenant_stats:
+            tenant_stats = {}
+            for name, s in sorted(engine.tenant_stats.items()):
+                out = {"slo": s["slo"], "admitted": s["admitted"],
+                       "delivered": s["delivered"], "dropped": s["dropped"],
+                       "mean_accuracy": (s["acc_sum"] / s["acc_n"]
+                                         if s["acc_n"] else None),
+                       "min_budget_scale": s["min_budget_scale"]}
+                if "counts" in s:
+                    out["f1"] = det.f1_from_counts(*s["counts"])
+                tenant_stats[name] = out
+        for st in engine.tenants.values():
+            try:
+                st["session"].close()
+            except RPCTimeout:
+                pass
+        engine.tenants.clear()
         fleet = system.edge.subscription_fleet(sub.subscription_id)
         history = list(fleet.history) if fleet is not None else []
         cache_size = fleet.cache_size() if fleet is not None else None
@@ -694,4 +868,5 @@ def run_scenario(
         fleet_cache_size=cache_size,
         measured_counts=measured if spec.score_frames else None,
         drift_cache_size=drift_cache,
-        drift_fire_counts=drift_fires)
+        drift_fire_counts=drift_fires,
+        tenant_stats=tenant_stats)

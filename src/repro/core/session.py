@@ -5,9 +5,10 @@ headline workload (Section 5.1) is five cameras feeding one detector.  This
 module is the session-oriented client shape that matches that workload:
 
     client = MezClient(system)
-    with client.open_session("app0") as session:
+    with client.open_session("app0", tenant="acme", slo="gold") as session:
         sub = session.subscribe(["cam0", "cam1"], 0.0, 8.0,
-                                latency=0.100, accuracy=0.95)
+                                qos=QosBounds(latency=0.100, accuracy=0.95),
+                                options=SubscriptionOptions(fleet=True))
         while (batch := sub.poll(max_frames=10)):
             payload, valid = batch.stack()        # jit-ready [B,H,W,C]
             ...
@@ -18,16 +19,27 @@ module is the session-oriented client shape that matches that workload:
 Handles are thin: all state lives broker-side (``EdgeBroker`` session
 registry), so a handle can be dropped and the registry stays authoritative
 -- the same reasoning the paper uses to keep subscriber recovery trivial.
+
+Configuration is a frozen ``SubscriptionOptions`` (``core.api``); the old
+per-kwarg spelling (``controlled=``, ``fleet=``, ...) still works for one
+release with a ``DeprecationWarning``.  Sessions opened under a tenant/SLO
+class enter fleet-wide admission control (see ``EdgeBroker.wire_budget``).
 """
 
 from __future__ import annotations
 
+import dataclasses
+import warnings
 from typing import Sequence
 
-from repro.core.api import (FrameBatch, QosUpdate, SessionEvent, Status,
-                            SubscribeSpec, SubscriptionState)
+from repro.core.api import (FrameBatch, QosBounds, QosUpdate, SessionEvent,
+                            SloClass, Status, SubscribeSpec,
+                            SubscriptionOptions, SubscriptionState,
+                            resolve_slo)
 
 __all__ = ["MezClient", "Session", "Subscription"]
+
+_UNSET = object()
 
 
 class MezClient:
@@ -44,68 +56,118 @@ class MezClient:
     def get_camera_info(self) -> list[str]:
         return self._edge.get_camera_info()
 
-    def open_session(self, application_id: str) -> "Session":
+    def open_session(self, application_id: str, *,
+                     tenant: str | None = None,
+                     slo: SloClass | str | None = None) -> "Session":
+        """Open a session, optionally under a tenant identity + SLO class
+        (``"gold"`` / ``"silver"`` / ``"best_effort"`` or a custom
+        ``SloClass``).  The pair becomes the default for every subscription
+        the session creates and opts them into fleet-wide admission
+        control."""
         return Session(self._edge,
-                       self._edge.open_session(application_id),
-                       application_id)
+                       self._edge.open_session(application_id, tenant=tenant,
+                                               slo=slo),
+                       application_id, tenant=tenant, slo=resolve_slo(slo))
 
 
 class Session:
     """One application's conversation with the edge broker.  Context-manager;
     closing the session closes every subscription it created."""
 
-    def __init__(self, edge, session_id: str, application_id: str):
+    def __init__(self, edge, session_id: str, application_id: str, *,
+                 tenant: str | None = None, slo: SloClass | None = None):
         self._edge = edge
         self.session_id = session_id
         self.application_id = application_id
+        self.tenant = tenant
+        self.slo = slo
         self._closed = False
 
     def subscribe(self, camera_ids: str | Sequence[str], t_start: float,
-                  t_stop: float, *, latency: float, accuracy: float,
-                  controlled: bool = True, feedback_window: int = 8,
-                  credit_limit: int = 2, fleet: bool = False,
-                  mesh=None, auto_recharacterize: bool = False,
-                  drift_config=None) -> "Subscription":
+                  t_stop: float, *,
+                  qos: QosBounds | None = None,
+                  options: SubscriptionOptions | None = None,
+                  latency: float | None = None,
+                  accuracy: float | None = None,
+                  controlled=_UNSET, feedback_window=_UNSET,
+                  credit_limit=_UNSET, fleet=_UNSET, mesh=_UNSET,
+                  auto_recharacterize=_UNSET,
+                  drift_config=_UNSET) -> "Subscription":
         """Subscribe one or many cameras under shared QoS bounds; frames from
         all of them arrive timestamp-merged through one ``poll()``.
 
-        ``fleet=True`` runs the subscription's per-camera PI controllers as
-        ONE compiled vmapped step per poll (the fleet control plane):
+        Bounds come from ``qos`` (a ``QosBounds``); with a session-level SLO
+        class and no explicit ``qos``, the class's (latency, accuracy) pair
+        is used.  ``latency=``/``accuracy=`` floats are the deprecated
+        spelling of ``qos`` and fold into it with a ``DeprecationWarning``
+        when ``qos`` is not given.
+
+        Everything else lives in ``options`` (a frozen
+        ``SubscriptionOptions``); the individual kwargs (``controlled``,
+        ``fleet``, ...) are deprecated and fold into ``options`` likewise.
+
+        ``options.fleet`` runs the subscription's per-camera PI controllers
+        as ONE compiled vmapped step per poll (the fleet control plane):
         per-poll control cost is ~flat in camera count, and per-camera QoS
         retargets / table refreshes hot-swap into the compiled step without
-        recompiling.  ``mesh`` additionally partitions the fused tick over
-        the camera axis (``shard_map``): pass a device count, a
-        ``jax.sharding.Mesh`` with a ``cams`` axis, or None to stay
-        single-device -- sharding never changes the decisions.
+        recompiling.  ``options.mesh`` additionally partitions the fused
+        tick over the camera axis (``shard_map``).
 
-        ``auto_recharacterize=True`` arms the drift-aware refresh loop: a
-        vectorized staleness monitor watches each camera's observed wire
-        sizes against its live table's predictions and re-characterizes a
-        camera automatically when its windowed drift score crosses the
-        hysteresis threshold -- no ``update_qos(recharacterize=True)``
-        needed when the scene regime shifts mid-stream.  Refreshes surface
-        as ``TABLE_REFRESH`` events on ``events()``.  ``drift_config`` is an
-        optional ``repro.core.drift.DriftConfig`` tuning window/thresholds.
+        ``options.auto_recharacterize`` arms the drift-aware refresh loop
+        (see ``EdgeBroker.create_subscription``); refreshes surface as
+        ``TABLE_REFRESH`` events on ``events()``.
         """
         if isinstance(camera_ids, str):
             camera_ids = [camera_ids]
+        opts = options if options is not None else SubscriptionOptions()
+        legacy = {k: v for k, v in [("controlled", controlled),
+                                    ("feedback_window", feedback_window),
+                                    ("credit_limit", credit_limit),
+                                    ("fleet", fleet),
+                                    ("mesh", mesh),
+                                    ("auto_recharacterize", auto_recharacterize),
+                                    ("drift_config", drift_config)]
+                  if v is not _UNSET}
+        if legacy:
+            warnings.warn(
+                "passing {} to Session.subscribe is deprecated; use "
+                "options=SubscriptionOptions(...)".format(
+                    ", ".join(sorted(legacy))),
+                DeprecationWarning, stacklevel=2)
+            opts = dataclasses.replace(opts, **legacy)
+        if qos is None and (latency is not None or accuracy is not None):
+            if latency is not None and accuracy is not None:
+                warnings.warn(
+                    "passing latency=/accuracy= to Session.subscribe is "
+                    "deprecated; use qos=QosBounds(latency, accuracy)",
+                    DeprecationWarning, stacklevel=2)
+                qos = QosBounds(latency, accuracy)
+            else:
+                raise ValueError("latency and accuracy must be given together"
+                                 " (or use qos=QosBounds(...))")
+        if qos is None:
+            slo = (resolve_slo(opts.slo) if opts.slo is not None
+                   else self.slo)
+            if slo is None:
+                raise ValueError(
+                    "subscribe needs qos=QosBounds(...) (or a session/"
+                    "options SLO class to default the bounds from)")
+            qos = QosBounds(slo.max_latency, slo.min_accuracy)
         specs = tuple(SubscribeSpec(self.application_id, cid, t_start, t_stop,
-                                    latency, accuracy) for cid in camera_ids)
-        sub_id = self._edge.create_subscription(
-            self.session_id, specs, controlled=controlled,
-            feedback_window=feedback_window, credit_limit=credit_limit,
-            fleet=fleet, mesh=mesh,
-            auto_recharacterize=auto_recharacterize,
-            drift_config=drift_config)
+                                    qos.latency, qos.accuracy)
+                      for cid in camera_ids)
+        sub_id = self._edge.create_subscription(self.session_id, specs,
+                                                options=opts)
         return Subscription(self._edge, sub_id, tuple(camera_ids))
 
     def events(self) -> list[SessionEvent]:
-        """Drain pending events across all of this session's subscriptions."""
+        """Drain pending events across all of this session's subscriptions
+        (plus session-level ones, e.g. ``ADMISSION_REJECTED``)."""
         return self._edge.session_events(self.session_id)
 
     def update_qos(self, *, latency: float | None = None,
                    accuracy: float | None = None,
-                   recharacterize: bool = False) -> list[QosUpdate]:
+                   recharacterize: bool = False) -> QosUpdate:
         """Renegotiate bounds across EVERY subscription of this session.
 
         With ``recharacterize=True`` each camera first re-sweeps its knob
@@ -113,13 +175,22 @@ class Session:
         seconds, cheap enough to fold into a renegotiation) and hot-swaps
         them into its live controller before the new bounds are applied --
         online re-characterization, per the CANS self-configuration model.
-        Returns one ``QosUpdate`` per subscription.
+
+        Returns ONE merged ``QosUpdate`` covering every subscription
+        (``per_camera`` / ``subscription_ids`` carry the fan-out detail; it
+        used to return a list).
         """
-        return [self._edge.update_subscription_qos(
-                    sid, latency=latency, accuracy=accuracy,
-                    recharacterize=recharacterize)
-                for sid in self._edge.session_subscription_ids(
-                    self.session_id)]
+        updates = [self._edge.update_subscription_qos(
+                       sid, latency=latency, accuracy=accuracy,
+                       recharacterize=recharacterize)
+                   for sid in self._edge.session_subscription_ids(
+                       self.session_id)]
+        merged = QosUpdate.merge(updates)
+        if self.tenant or self.slo is not None:
+            merged = dataclasses.replace(
+                merged, tenant=self.tenant or "",
+                slo_class=self.slo.name if self.slo else merged.slo_class)
+        return merged
 
     @property
     def closed(self) -> bool:
@@ -167,13 +238,16 @@ class Subscription:
         into the live controller (and its jitted twin) before retargeting,
         so the new bounds are enforced against current conditions
         (``QosUpdate.recharacterized`` lists the cameras that re-swept).
+        Same ``QosUpdate`` shape as ``Session.update_qos`` -- ``per_camera``
+        carries the per-camera statuses.
         """
         return self._edge.update_subscription_qos(
             self.subscription_id, latency=latency, accuracy=accuracy,
             recharacterize=recharacterize)
 
     def events(self) -> list[SessionEvent]:
-        """Drain this subscription's INFEASIBLE / RPC_TIMEOUT notifications."""
+        """Drain this subscription's INFEASIBLE / RPC_TIMEOUT /
+        TENANT_DEGRADED notifications."""
         return self._edge.subscription_events(self.subscription_id)
 
     @property

@@ -1,0 +1,17 @@
+"""mezlint fixture: MZ07 violations -- create_subscription called with the
+deprecated per-kwarg config spelling (or opaque **kwargs forwarding)."""
+
+
+def open_legacy(edge, session_id, specs):
+    return edge.create_subscription(session_id, specs,
+                                    controlled=True, fleet=True,
+                                    feedback_window=4)
+
+
+def open_tenanted_legacy(edge, session_id, specs):
+    return edge.create_subscription(session_id, specs,
+                                    tenant="acme", slo="gold")
+
+
+def forward_blindly(edge, session_id, specs, **kw):
+    return edge.create_subscription(session_id, specs, **kw)

@@ -1,0 +1,17 @@
+"""mezlint fixture: MZ07 clean -- configuration travels as one frozen
+SubscriptionOptions; positional/retarget/options keywords are fine."""
+
+
+class SubscriptionOptions:
+    def __init__(self, **cfg):
+        self.cfg = cfg
+
+
+def open_sub(edge, session_id, specs):
+    opts = SubscriptionOptions(controlled=True, fleet=True, tenant="acme",
+                               slo="gold")
+    return edge.create_subscription(session_id, specs, options=opts)
+
+
+def open_default(edge, session_id, specs):
+    return edge.create_subscription(session_id, specs, retarget=False)

@@ -320,12 +320,15 @@ class TestWireSizePrescreen:
         assert eff_idx != idx
         assert (batched.size_by_setting[eff_idx]
                 < batched.size_by_setting[idx])
-        # the returned entry is the ACCEPTED setting's payload...
-        key = (ts, eff_setting.resolution, eff_setting.colorspace,
-               eff_setting.blur, eff_setting.artifact)
-        assert cam._payload_cache[key] is entry
+        # the returned entry is the ACCEPTED setting's payload, held in the
+        # fleet-shared degraded-frame cache (the per-camera dict only backs
+        # unregistered brokers)...
+        key = (cam.camera_id, ts, eff_setting.resolution,
+               eff_setting.colorspace, eff_setting.blur,
+               eff_setting.artifact)
+        assert cam.shared_cache._entries[key] is entry
         # ...and no deflate was paid along the walk
-        assert all(e[1] is None for e in cam._payload_cache.values())
+        assert all(e[1] is None for e in cam.shared_cache._entries.values())
 
     def test_prescreen_inert_without_proxy(self, tables):
         """Reference-engine tables carry no proxy: fetch must behave

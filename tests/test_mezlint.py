@@ -39,13 +39,14 @@ class TestRuleFixtures:
         ("mz04_bad.py", "MZ04"),
         ("mz05_bad.py", "MZ05"),
         ("mz06_bad.py", "MZ06"),
+        ("mz07_bad.py", "MZ07"),
     ])
     def test_bad_fixture_triggers_rule(self, name, rule):
         assert rule in rules_of(lint(name))
 
     @pytest.mark.parametrize("name", [
         "mz01_good.py", "mz02_good.py", "mz03_good.py", "mz04_good.py",
-        "mz05_good.py", "mz06_good.py",
+        "mz05_good.py", "mz06_good.py", "mz07_good.py",
     ])
     def test_good_fixture_is_clean(self, name):
         assert lint(name) == []
@@ -72,6 +73,13 @@ class TestRuleFixtures:
         assert any("setting_for" in d for d in details)
         assert any("ControlDecision" in d for d in details)
         assert any("update" in d for d in details)
+
+    def test_mz07_flags_legacy_kwargs_and_star_forwarding(self):
+        details = {f.detail for f in lint("mz07_bad.py")}
+        assert any(d.startswith("legacy-kwargs:controlled,feedback_window,"
+                                "fleet") for d in details)
+        assert any(d.startswith("legacy-kwargs:slo,tenant") for d in details)
+        assert any(d.startswith("star-kwargs") for d in details)
 
     def test_mz05_flags_closure_and_interpret_and_parity(self):
         details = {f.detail for f in lint("mz05_bad.py")}
@@ -104,7 +112,7 @@ class TestRuleFixtures:
 class TestCli:
     @pytest.mark.parametrize("name", [
         "mz01_bad.py", "mz02_bad.py", "mz03_bad.py", "mz04_bad.py",
-        "mz05_bad.py", "mz06_bad.py",
+        "mz05_bad.py", "mz06_bad.py", "mz07_bad.py",
     ])
     def test_bad_fixture_exits_nonzero(self, name):
         assert main([str(FIXDIR / name), "--no-baseline"]) == 1

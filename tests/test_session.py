@@ -1,11 +1,15 @@
 """v2 session API: multi-camera fan-in, FrameBatch invariants, live QoS
-renegotiation, events, lifecycle, and compat-shim equivalence."""
+renegotiation, events, lifecycle, compat-shim equivalence, and multi-tenant
+admission control (SLO classes, wire-budget feasibility, shared cache)."""
+
+import threading
 
 import numpy as np
 import pytest
 
-from repro.core.api import (EventKind, FrameBatch, RPCTimeout, Status,
-                            SubscribeSpec, SubscriptionState)
+from repro.core.api import (AdmissionRejected, EventKind, FrameBatch,
+                            QosBounds, RPCTimeout, Status, SubscribeSpec,
+                            SubscriptionOptions, SubscriptionState)
 from repro.core.broker import MezSystem
 from repro.core.channel import calibrated_channel
 from repro.core.characterization import characterize, fit_latency_regression
@@ -22,9 +26,10 @@ def table():
         clip_len=10)
 
 
-def build_system(table, *, n_cams=2, frames=10, workload=None, seed=3):
+def build_system(table, *, n_cams=2, frames=10, workload=None, seed=3,
+                 wire_budget=None):
     ch = calibrated_channel(seed=seed, workload=workload)
-    sys = MezSystem(ch)
+    sys = MezSystem(ch, wire_budget=wire_budget)
     sizes = np.linspace(table.sizes_sorted[0], table.sizes_sorted[-1], 12)
     reg = fit_latency_regression(sizes, ch.regression_points(sizes, n=n_cams))
     for i in range(n_cams):
@@ -41,7 +46,7 @@ def build_system(table, *, n_cams=2, frames=10, workload=None, seed=3):
 def open_sub(sys, cameras, *, latency=0.1, accuracy=0.9, t_stop=100.0):
     sess = MezClient(sys).open_session("app")
     return sess, sess.subscribe(cameras, 0.0, t_stop,
-                                latency=latency, accuracy=accuracy)
+                                qos=QosBounds(latency, accuracy))
 
 
 class TestFanIn:
@@ -76,8 +81,9 @@ class TestFanIn:
         """One poll never pulls more than credit_limit frames per camera."""
         sys = build_system(table, n_cams=2, frames=10)
         sess = MezClient(sys).open_session("app")
-        sub = sess.subscribe(["cam0", "cam1"], 0.0, 100.0, latency=0.1,
-                             accuracy=0.9, credit_limit=2)
+        sub = sess.subscribe(["cam0", "cam1"], 0.0, 100.0,
+                             qos=QosBounds(0.1, 0.9),
+                             options=SubscriptionOptions(credit_limit=2))
         while (batch := sub.poll(max_frames=16)):
             per_cam = {}
             for d in batch.frames:
@@ -173,16 +179,32 @@ class TestQosRenegotiation:
         sess.close()
 
     def test_session_update_qos_fans_out(self, table):
+        """Session.update_qos returns ONE merged QosUpdate whose
+        subscription_ids / per_camera fields carry the fan-out detail (it
+        used to return a list)."""
         sys = build_system(table, n_cams=2, frames=10)
         sess = MezClient(sys).open_session("app")
-        sub0 = sess.subscribe("cam0", 0.0, 100.0, latency=0.1, accuracy=0.9)
-        sub1 = sess.subscribe("cam1", 0.0, 100.0, latency=0.1, accuracy=0.9)
-        updates = sess.update_qos(latency=0.050)
-        assert len(updates) == 2
-        assert {u.subscription_id for u in updates} == {
+        sub0 = sess.subscribe("cam0", 0.0, 100.0, qos=QosBounds(0.1, 0.9))
+        sub1 = sess.subscribe("cam1", 0.0, 100.0, qos=QosBounds(0.1, 0.9))
+        merged = sess.update_qos(latency=0.050)
+        assert set(merged.subscription_ids) == {
             sub0.subscription_id, sub1.subscription_id}
-        assert all(u.status is Status.OK for u in updates)
+        assert merged.status is Status.OK
+        assert set(merged.applied_cameras) == {"cam0", "cam1"}
+        assert {r.camera_id for r in merged.per_camera} == {"cam0", "cam1"}
+        assert all(r.status is Status.OK for r in merged.per_camera)
         assert sys.cams["cam0"].controller.config.latency_target == 0.050
+        sess.close()
+
+    def test_subscription_update_qos_same_shape(self, table):
+        """Subscription.update_qos fills the same unified fields."""
+        sys = build_system(table, n_cams=1, frames=10)
+        sess = MezClient(sys).open_session("app", tenant="acme", slo="gold")
+        sub = sess.subscribe("cam0", 0.0, 100.0, qos=QosBounds(0.1, 0.9))
+        q = sub.update_qos(latency=0.080)
+        assert q.subscription_ids == (sub.subscription_id,)
+        assert q.tenant == "acme" and q.slo_class == "gold"
+        assert [r.camera_id for r in q.per_camera] == ["cam0"]
         sess.close()
 
     def test_update_qos_on_closed_subscription_fails(self, table):
@@ -230,8 +252,8 @@ class TestEventsAndFailures:
         sys = build_system(table, n_cams=2, frames=10)
         sys.cams["cam0"].crash()
         sess = MezClient(sys).open_session("app")
-        sub0 = sess.subscribe("cam0", 0.0, 100.0, latency=0.1, accuracy=0.9)
-        sub1 = sess.subscribe("cam1", 0.0, 100.0, latency=0.1, accuracy=0.9)
+        sub0 = sess.subscribe("cam0", 0.0, 100.0, qos=QosBounds(0.1, 0.9))
+        sub1 = sess.subscribe("cam1", 0.0, 100.0, qos=QosBounds(0.1, 0.9))
         with pytest.raises(RPCTimeout):
             sub0.poll()
         while sub1.poll(max_frames=4):
@@ -299,8 +321,8 @@ class TestLifecycle:
     def test_context_managers_close(self, table):
         sys = build_system(table)
         with MezClient(sys).open_session("app") as sess:
-            with sess.subscribe("cam0", 0.0, 100.0, latency=0.1,
-                                accuracy=0.9) as sub:
+            with sess.subscribe("cam0", 0.0, 100.0,
+                                qos=QosBounds(0.1, 0.9)) as sub:
                 assert sub.poll(max_frames=2)
             assert sub.state is SubscriptionState.CLOSED
         assert sess.closed
@@ -309,7 +331,7 @@ class TestLifecycle:
         sys = build_system(table)
         sess = MezClient(sys).open_session("app")
         with pytest.raises(RPCTimeout):
-            sess.subscribe("ghost", 0.0, 1.0, latency=0.1, accuracy=0.9)
+            sess.subscribe("ghost", 0.0, 1.0, qos=QosBounds(0.1, 0.9))
         sess.close()
 
 
@@ -364,3 +386,286 @@ class TestBatchConsumers:
         for d, boxes in pairs:
             assert boxes.ndim == 2 and boxes.shape[1] == 4
         sess.close()
+
+
+# -- multi-tenant serving ------------------------------------------------------
+
+
+def slo_loads(table, *, n_cams=1, latency=0.1, accuracy=0.9):
+    """(demand_bps, floor_bps) of one SLO-classed single-camera subscription,
+    measured on a throwaway system.  Deterministic: the admission controller
+    costs lanes from the characterization tables + channel config only, so a
+    rebuilt identical system reports identical loads."""
+    sys = build_system(table, n_cams=n_cams)
+    sess = MezClient(sys).open_session("probe", tenant="probe", slo="gold")
+    sub = sess.subscribe("cam0", 0.0, 100.0, qos=QosBounds(latency, accuracy))
+    rep = sys.edge.wire_report()["subscriptions"][sub.subscription_id]
+    sess.close()
+    return rep["demand_bps"], rep["floor_bps"]
+
+
+def sub_scale(sys, sub):
+    return sys.edge.wire_report()["subscriptions"][
+        sub.subscription_id]["scale"]
+
+
+class TestAdmissionControl:
+    def test_untenanted_flows_never_enter_admission(self, table):
+        """No SLO class anywhere => no budget math, scale pinned at 1."""
+        sys = build_system(table, n_cams=1, wire_budget=1.0)  # absurdly tight
+        sess, sub = open_sub(sys, "cam0")
+        assert sub_scale(sys, sub) == 1.0
+        assert sub.poll(max_frames=2)
+        assert not any(e.kind is EventKind.TENANT_DEGRADED
+                       for e in sub.events())
+        sess.close()
+
+    def test_exactly_feasible_budget_admits_full_rate(self, table):
+        d, f = slo_loads(table)
+        sys = build_system(table, n_cams=1, wire_budget=d)
+        sess = MezClient(sys).open_session("t", tenant="t", slo="gold")
+        sub = sess.subscribe("cam0", 0.0, 100.0, qos=QosBounds(0.1, 0.9))
+        assert sub_scale(sys, sub) == 1.0
+        assert not any(e.kind is EventKind.TENANT_DEGRADED
+                       for e in sub.events())
+        assert sub.poll(max_frames=2)
+        sess.close()
+
+    def test_gold_preempts_best_effort(self, table):
+        d, f = slo_loads(table)
+        assert f < d                       # a lane must have degradation room
+        sys = build_system(table, n_cams=1, wire_budget=1.5 * d)
+        be_sess = MezClient(sys).open_session("be", tenant="be",
+                                              slo="best_effort")
+        be = be_sess.subscribe("cam0", 0.0, 100.0, qos=QosBounds(0.1, 0.9))
+        assert sub_scale(sys, be) == 1.0   # alone: full rate
+        g_sess = MezClient(sys).open_session("g", tenant="g", slo="gold")
+        gold = g_sess.subscribe("cam0", 0.0, 100.0, qos=QosBounds(0.1, 0.9))
+        assert sub_scale(sys, gold) == 1.0          # gold untouched
+        s = sub_scale(sys, be)
+        assert s < 1.0                              # best_effort took the cut
+        assert s * d >= f - 1e-6                    # but never below its floor
+        evs = sys.edge.subscription_events(be.subscription_id)
+        assert any(e.kind is EventKind.TENANT_DEGRADED for e in evs)
+        g_sess.close()
+        be_sess.close()
+
+    def test_leave_restores_degraded_lanes(self, table):
+        d, f = slo_loads(table)
+        sys = build_system(table, n_cams=1, wire_budget=1.5 * d)
+        be_sess = MezClient(sys).open_session("be", tenant="be",
+                                              slo="best_effort")
+        be = be_sess.subscribe("cam0", 0.0, 100.0, qos=QosBounds(0.1, 0.9))
+        g_sess = MezClient(sys).open_session("g", tenant="g", slo="gold")
+        g_sess.subscribe("cam0", 0.0, 100.0, qos=QosBounds(0.1, 0.9))
+        assert sub_scale(sys, be) < 1.0
+        g_sess.close()                     # tenant leaves, budget frees
+        assert sub_scale(sys, be) == 1.0
+        # restores are silent: no second TENANT_DEGRADED
+        evs = sys.edge.subscription_events(be.subscription_id)
+        assert sum(1 for e in evs
+                   if e.kind is EventKind.TENANT_DEGRADED) == 1
+        be_sess.close()
+
+    def test_reject_vs_degrade_policy(self, table):
+        d, f = slo_loads(table)
+        budget = 1.5 * f                   # one floored lane fits, two don't
+        sys = build_system(table, n_cams=1, wire_budget=budget)
+        s1 = MezClient(sys).open_session("a", tenant="a", slo="gold")
+        s1.subscribe("cam0", 0.0, 100.0, qos=QosBounds(0.1, 0.9))
+        s2 = MezClient(sys).open_session("b", tenant="b", slo="gold")
+        with pytest.raises(AdmissionRejected) as ei:
+            s2.subscribe("cam0", 0.0, 100.0, qos=QosBounds(0.1, 0.9),
+                         options=SubscriptionOptions(admission="reject"))
+        assert ei.value.budget_bps == budget
+        assert any(e.kind is EventKind.ADMISSION_REJECTED
+                   for e in s2.events())
+        # same join under "degrade": admitted, flagged oversubscribed
+        sub2 = s2.subscribe("cam0", 0.0, 100.0, qos=QosBounds(0.1, 0.9),
+                            options=SubscriptionOptions(admission="degrade"))
+        evs = sys.edge.subscription_events(sub2.subscription_id)
+        assert any(e.kind is EventKind.TENANT_DEGRADED for e in evs)
+        s2.close()
+        s1.close()
+
+    def test_simultaneous_joins_race_one_budget(self, table):
+        """Two joins racing a budget that fits only one: the admission lock
+        serializes them, so exactly one is admitted and one rejected --
+        never both admitted against the same budget."""
+        d, f = slo_loads(table)
+        sys = build_system(table, n_cams=1, wire_budget=1.5 * f)
+        results = []
+
+        def join(name):
+            sess = MezClient(sys).open_session(name, tenant=name,
+                                               slo="silver")
+            try:
+                sess.subscribe("cam0", 0.0, 100.0, qos=QosBounds(0.1, 0.9),
+                               options=SubscriptionOptions(
+                                   admission="reject"))
+                results.append("ok")
+            except AdmissionRejected:
+                results.append("rejected")
+
+        threads = [threading.Thread(target=join, args=(f"t{i}",))
+                   for i in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert sorted(results) == ["ok", "rejected"]
+
+    def test_unknown_slo_and_policy_rejected(self, table):
+        sys = build_system(table, n_cams=1)
+        with pytest.raises(ValueError):
+            MezClient(sys).open_session("x", slo="platinum")
+        sess = MezClient(sys).open_session("x", tenant="x", slo="gold")
+        with pytest.raises(ValueError):
+            sess.subscribe("cam0", 0.0, 100.0, qos=QosBounds(0.1, 0.9),
+                           options=SubscriptionOptions(admission="maybe"))
+        sess.close()
+
+
+class TestSharedFrameCache:
+    def test_n_tenants_one_transform(self, table):
+        """N tenants at the same operating point pay ~1 transform+deflate
+        per (frame, setting): the edge-shared cache serves repeats."""
+        n_tenants, frames = 4, 8
+        sys = build_system(table, n_cams=1, frames=frames)
+        sessions, subs = [], []
+        for i in range(n_tenants):
+            sess = MezClient(sys).open_session(f"t{i}", tenant=f"t{i}",
+                                               slo="silver")
+            subs.append(sess.subscribe("cam0", 0.0, 100.0,
+                                       qos=QosBounds(0.1, 0.9)))
+            sessions.append(sess)
+        total = 0
+        live = True
+        while live:                        # lockstep round-robin drain
+            live = False
+            for sub in subs:
+                batch = sub.poll(max_frames=2)
+                total += len(batch)
+                live = live or bool(batch)
+        cache = sys.edge.frame_cache
+        assert total == n_tenants * frames
+        assert cache.hits > 0
+        # strictly fewer transforms than delivered frames: sharing happened
+        assert cache.misses < total
+        assert cache.hit_rate() > 0.5
+        for sess in sessions:
+            sess.close()
+
+    def test_recharacterize_invalidates_only_that_camera(self, table):
+        sys = build_system(table, n_cams=2, frames=4)
+        sess, sub = open_sub(sys, ["cam0", "cam1"])
+        while sub.poll(max_frames=4):
+            pass
+        cache = sys.edge.frame_cache
+        n = len(cache)
+        assert n > 0
+        keys0 = sum(1 for k in cache._entries if k[0] == "cam0")
+        sys.cams["cam0"].recharacterize()
+        assert len(cache) == n - keys0
+        assert all(k[0] != "cam0" for k in cache._entries)
+        sess.close()
+
+
+class TestDeprecatedSurfaces:
+    def test_subscribe_legacy_kwargs_warn_and_fold(self, table):
+        sys = build_system(table, n_cams=1, frames=6)
+        sess = MezClient(sys).open_session("app")
+        with pytest.warns(DeprecationWarning, match="SubscriptionOptions"):
+            sub = sess.subscribe("cam0", 0.0, 100.0,
+                                 qos=QosBounds(0.1, 0.9),
+                                 controlled=True, credit_limit=1)
+        while (batch := sub.poll(max_frames=4)):
+            per_cam = {}
+            for d in batch.frames:
+                per_cam[d.camera_id] = per_cam.get(d.camera_id, 0) + 1
+            assert all(v <= 1 for v in per_cam.values())  # folded credit
+        sess.close()
+
+    def test_subscribe_legacy_latency_accuracy_warn(self, table):
+        sys = build_system(table, n_cams=1, frames=4)
+        sess = MezClient(sys).open_session("app")
+        with pytest.warns(DeprecationWarning, match="QosBounds"):
+            sub = sess.subscribe("cam0", 0.0, 100.0, latency=0.1,
+                                 accuracy=0.9)
+        assert sub.poll(max_frames=2)
+        sess.close()
+
+    def test_slo_session_defaults_qos_bounds(self, table):
+        """No qos given: the session's SLO class supplies the bounds."""
+        sys = build_system(table, n_cams=1, frames=4)
+        sess = MezClient(sys).open_session("app", tenant="t", slo="gold")
+        sub = sess.subscribe("cam0", 0.0, 100.0)
+        assert sub.poll(max_frames=2)
+        ctl = sys.cams["cam0"].controller
+        assert ctl.config.latency_target == pytest.approx(0.050)
+        sess.close()
+
+    def test_subscribe_without_qos_or_slo_raises(self, table):
+        sys = build_system(table, n_cams=1)
+        sess = MezClient(sys).open_session("app")
+        with pytest.raises(ValueError):
+            sess.subscribe("cam0", 0.0, 100.0)
+        sess.close()
+
+    def test_v1_iterator_warns_and_compat_module_does_not(self, table):
+        from repro import compat
+        sys = build_system(table, n_cams=1, frames=4)
+        spec = SubscribeSpec("app", "cam0", 0.0, 100.0, 0.1, 0.9)
+        with pytest.warns(DeprecationWarning, match="v1 iterator"):
+            old = [d.timestamp for d in sys.edge.subscribe(spec)]
+        sys2 = build_system(table, n_cams=1, frames=4)
+        import warnings as _w
+        with _w.catch_warnings():
+            _w.simplefilter("error", DeprecationWarning)
+            new = [d.timestamp for d in compat.subscribe_v1(sys2, spec)]
+        assert old == new
+
+
+class TestTenantFleetParity:
+    def test_fleet_host_parity_across_joins_and_leaves(self, table):
+        """A degradation cycle (tenant joins, victim's budget_scale drops,
+        tenant leaves, scale restores) produces identical frame streams on
+        the host PI path and the fused fleet path, and the fleet never
+        retraces (cache_size stays 1)."""
+        d, f = slo_loads(table, n_cams=2)
+
+        def run(fleet):
+            sys = build_system(table, n_cams=2, frames=12,
+                               wire_budget=3.0 * d)
+            sess = MezClient(sys).open_session("be", tenant="be",
+                                               slo="best_effort")
+            sub = sess.subscribe(["cam0", "cam1"], 0.0, 100.0,
+                                 qos=QosBounds(0.1, 0.9),
+                                 options=SubscriptionOptions(fleet=fleet))
+            keys = []
+
+            def drain(n):
+                for _ in range(n):
+                    for dfr in sub.poll(max_frames=2).frames:
+                        keys.append((dfr.camera_id, dfr.timestamp,
+                                     dfr.wire_bytes, dfr.knob_index))
+
+            drain(2)                       # settle at full rate
+            g = MezClient(sys).open_session("g", tenant="g", slo="gold")
+            g.subscribe(["cam0", "cam1"], 0.0, 100.0,
+                        qos=QosBounds(0.1, 0.9))
+            scale = sub_scale(sys, sub)
+            drain(2)                       # degraded stretch
+            g.close()                      # tenant leaves, scale restores
+            drain(2)
+            fc = sys.edge.subscription_fleet(sub.subscription_id)
+            cache = fc.cache_size() if fc is not None else None
+            sess.close()
+            return keys, scale, cache
+
+        host_keys, host_scale, _ = run(fleet=False)
+        fleet_keys, fleet_scale, cache = run(fleet=True)
+        assert host_scale < 1.0            # the cycle really degraded
+        assert host_scale == fleet_scale   # f32-quantized identically
+        assert host_keys == fleet_keys
+        assert cache == 1                  # scale writes never retraced
