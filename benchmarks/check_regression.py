@@ -45,13 +45,30 @@ shifted cameras, keep both the drift monitor and the fleet step at one
 compiled variant -- and the no-refresh control arm must still degrade
 (otherwise the scenario stopped exercising staleness at all).
 
+When ``BENCH_gauntlet.json`` exists (produced by ``python -m
+benchmarks.gauntlet``), the gauntlet gate runs against
+``benchmarks/baseline_gauntlet.json``: every phase's credit ledger must
+conserve (granted - returned - in_flight - dropped == 0, with in-flight
+and dropped both zero after the phase drains -- the crash-wave phase is
+the one that trips when ``reattach_camera`` leaks credits held by
+in-flight fetches at crash time), per-phase p99.9 delivered latency must
+stay under the committed ceiling, the 64-tenant churn phase must keep the
+shared-frame-cache hit rate above its floor (LRU eviction holding the hot
+set through subscribe/unsubscribe floods), and the oversubscription phase
+must still degrade and reject (otherwise admission control went dark).
+The gauntlet's latencies are simulated from a seeded channel, so unlike
+the timing gates these thresholds are tight -- a trip means behavior
+changed, not that the runner was busy.
+
   PYTHONPATH=src python -m benchmarks.check_regression \
       [--fresh BENCH_characterize.json] \
       [--baseline benchmarks/baseline_characterize.json] \
       [--fleet-fresh BENCH_fleet.json] \
       [--fleet-baseline benchmarks/baseline_fleet.json] \
       [--fig12-fresh BENCH_fig12.json] \
-      [--fig12-baseline benchmarks/baseline_fig12.json]
+      [--fig12-baseline benchmarks/baseline_fig12.json] \
+      [--gauntlet-fresh BENCH_gauntlet.json] \
+      [--gauntlet-baseline benchmarks/baseline_gauntlet.json]
 """
 
 from __future__ import annotations
@@ -71,6 +88,9 @@ DEFAULT_FLEET_BASELINE = os.path.join(_HERE, "baseline_fleet.json")
 DEFAULT_FIG12_FRESH = os.path.join(os.path.dirname(_HERE),
                                    "BENCH_fig12.json")
 DEFAULT_FIG12_BASELINE = os.path.join(_HERE, "baseline_fig12.json")
+DEFAULT_GAUNTLET_FRESH = os.path.join(os.path.dirname(_HERE),
+                                      "BENCH_gauntlet.json")
+DEFAULT_GAUNTLET_BASELINE = os.path.join(_HERE, "baseline_gauntlet.json")
 
 
 def check(fresh: dict, baseline: dict, *, max_speedup_drop: float,
@@ -266,6 +286,79 @@ def check_fig12(fresh: dict, baseline: dict) -> list[str]:
     return failures
 
 
+def check_gauntlet(fresh: dict, baseline: dict) -> list[str]:
+    """Gate BENCH_gauntlet.json (heavy-traffic phase harness) against the
+    committed thresholds.  Returns the violated conditions (empty = pass)."""
+    failures: list[str] = []
+    if fresh.get("seed") != baseline.get("seed"):
+        failures.append(
+            f"gauntlet seed {fresh.get('seed')} != baseline seed "
+            f"{baseline.get('seed')} -- thresholds only hold for the "
+            f"committed seed; regenerate the baseline deliberately")
+        return failures
+    for name, gates in (baseline.get("phases") or {}).items():
+        m = (fresh.get("phases") or {}).get(name)
+        if m is None:
+            failures.append(f"gauntlet phase '{name}': missing from fresh "
+                            f"results")
+            continue
+
+        # unconditional invariants: the credit ledger must conserve after
+        # every phase drains (camera crash/recover cycles must hand back
+        # the credits their in-flight fetches held)
+        cr = m.get("credits") or {}
+        for key in ("leaked", "in_flight"):
+            if cr.get(key, -1) != 0:
+                failures.append(
+                    f"gauntlet[{name}].credits.{key}: {cr.get(key)} != 0 "
+                    f"-- fetch credits are not conserved across the phase "
+                    f"(ledger: {cr})")
+        max_drop = gates.get("max_dropped_credits", 0)
+        if cr.get("dropped", -1) > max_drop:
+            failures.append(
+                f"gauntlet[{name}].credits.dropped: {cr.get('dropped')} "
+                f"exceeds {max_drop} -- crashed cameras' credits were "
+                f"written off instead of returned on reattach")
+
+        ceiling = gates.get("max_p999_ms")
+        got = m.get("p999_ms")
+        if ceiling is not None:
+            if got is None or got != got:            # None or NaN
+                failures.append(f"gauntlet[{name}].p999_ms: missing/NaN "
+                                f"(no frames delivered?)")
+            elif got > ceiling:
+                failures.append(
+                    f"gauntlet[{name}].p999_ms: {got:.1f} ms exceeds the "
+                    f"committed ceiling {ceiling:.1f} ms -- the delivered "
+                    f"latency tail regressed under load")
+        hit_floor = gates.get("min_cache_hit_rate")
+        if hit_floor is not None:
+            hit = (m.get("cache") or {}).get("hit_rate")
+            if hit is None:
+                failures.append(f"gauntlet[{name}].cache.hit_rate: missing")
+            elif hit < hit_floor:
+                failures.append(
+                    f"gauntlet[{name}].cache.hit_rate: {hit:.3f} fell "
+                    f"below the committed floor {hit_floor:.2f} -- LRU "
+                    f"eviction stopped keeping the hot working set "
+                    f"resident under tenant churn")
+        min_frames = gates.get("min_frames_delivered")
+        if (min_frames is not None
+                and m.get("frames_delivered", 0) < min_frames):
+            failures.append(
+                f"gauntlet[{name}].frames_delivered: "
+                f"{m.get('frames_delivered')} fell below {min_frames} -- "
+                f"the phase stopped exercising sustained load")
+        for key in ("tenant_degraded", "admission_rejected"):
+            floor = gates.get(f"min_{key}")
+            if floor is not None and m.get(key, 0) < floor:
+                failures.append(
+                    f"gauntlet[{name}].{key}: {m.get(key, 0)} fell below "
+                    f"{floor} -- admission control stopped reacting to "
+                    f"oversubscription")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh", default=DEFAULT_FRESH,
@@ -284,6 +377,11 @@ def main() -> int:
                     help="fig12 workload-shift json (gated when present)")
     ap.add_argument("--fig12-baseline", default=DEFAULT_FIG12_BASELINE,
                     help="committed fig12 gate thresholds")
+    ap.add_argument("--gauntlet-fresh", default=DEFAULT_GAUNTLET_FRESH,
+                    help="gauntlet phase-harness json (gated when present)")
+    ap.add_argument("--gauntlet-baseline",
+                    default=DEFAULT_GAUNTLET_BASELINE,
+                    help="committed gauntlet gate thresholds")
     args = ap.parse_args()
 
     with open(args.fresh) as fh:
@@ -339,6 +437,23 @@ def main() -> int:
               f"refreshed={fig12_fresh.get('refreshed_cameras')}")
     else:
         print(f"fig12:    {args.fig12_fresh} absent -- fig12 gate skipped")
+    if os.path.exists(args.gauntlet_fresh):
+        with open(args.gauntlet_fresh) as fh:
+            g_fresh = json.load(fh)
+        with open(args.gauntlet_baseline) as fh:
+            g_baseline = json.load(fh)
+        failures += check_gauntlet(g_fresh, g_baseline)
+        for name, m in sorted((g_fresh.get("phases") or {}).items()):
+            cr = m.get("credits") or {}
+            print(f"gauntlet: {name:12s} "
+                  f"p99.9={m.get('p999_ms'):.1f}ms "
+                  f"hit_rate={(m.get('cache') or {}).get('hit_rate'):.3f} "
+                  f"leaked={cr.get('leaked')} dropped={cr.get('dropped')} "
+                  f"degraded={m.get('tenant_degraded')} "
+                  f"rejected={m.get('admission_rejected')}")
+    else:
+        print(f"gauntlet: {args.gauntlet_fresh} absent -- gauntlet gate "
+              f"skipped")
     if failures:
         print(f"\nBENCHMARK REGRESSION GATE FAILED "
               f"({len(failures)} violation(s)):", file=sys.stderr)

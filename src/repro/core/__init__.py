@@ -1,10 +1,10 @@
 """Mez core: the paper's contribution (brokers, log, latency controller) plus
 the TPU-native extension (controller-driven approximate collectives)."""
 
-from repro.core.api import (AdmissionRejected, BrokerDown, CameraQosResult,
-                            DeliveredFrame, EventKind, FrameBatch,
-                            LatencyBreakdown, MessagingSystem, QosBounds,
-                            QosUpdate, RPCTimeout, SessionEvent,
+from repro.core.api import (AdmissionRejected, BoundedEventBuffer, BrokerDown,
+                            CameraQosResult, DeliveredFrame, EventKind,
+                            FrameBatch, LatencyBreakdown, MessagingSystem,
+                            QosBounds, QosUpdate, RPCTimeout, SessionEvent,
                             SessionedMessagingSystem, SloClass, SLO_CLASSES,
                             Status, SubscribeSpec, SubscriptionOptions,
                             SubscriptionState, resolve_slo)
@@ -42,4 +42,7 @@ __all__ = [
     "DriftMonitor", "DriftState", "drift_init", "drift_update",
     "AdmissionRejected", "CameraQosResult", "QosBounds", "SloClass",
     "SLO_CLASSES", "SubscriptionOptions", "resolve_slo",
+    "BoundedEventBuffer", "MqttBridge", "MqttMessage",
 ]
+
+from repro.core.mqtt_bridge import MqttBridge, MqttMessage  # noqa: E402

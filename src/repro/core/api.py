@@ -40,7 +40,7 @@ __all__ = ["DeliveredFrame", "SubscribeSpec", "RPCTimeout", "BrokerDown",
            "SubscriptionState", "SessionEvent", "EventKind",
            "SessionedMessagingSystem", "SloClass", "SLO_CLASSES",
            "resolve_slo", "QosBounds", "SubscriptionOptions",
-           "AdmissionRejected", "CameraQosResult"]
+           "AdmissionRejected", "CameraQosResult", "BoundedEventBuffer"]
 
 
 class RPCTimeout(TimeoutError):
@@ -210,6 +210,9 @@ class EventKind(enum.Enum):
     TENANT_DEGRADED = "tenant_degraded"  # admission control capped this
                                          # subscription's wire budget below
                                          # its nominal demand
+    EVENTS_DROPPED = "events_dropped"  # the bounded event buffer evicted
+                                       # undrained events since the last
+                                       # drain (detail carries the count)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -222,6 +225,62 @@ class SessionEvent:
     subscription_id: str
     timestamp: float               # stream position when the event fired
     detail: str = ""
+
+
+class BoundedEventBuffer:
+    """Bounded event queue for a subscription's / session's out-of-band
+    notifications.
+
+    Mirrors ``HostLog``'s evict-before-overwrite contract: at capacity the
+    OLDEST undrained event is evicted first -- never silently overwritten in
+    place -- and every eviction is counted.  A client that polls forever but
+    never drains ``events()`` therefore costs O(capacity) memory, not O(run
+    length), and the loss is *observable*: the next ``drain()`` call returns
+    one ``EVENTS_DROPPED`` marker event ahead of the surviving events, with
+    the eviction count since the previous drain in ``detail``.
+
+    ``owner`` is the subscription/session id stamped on marker events (set
+    by the broker right after the owning record is created).
+    """
+
+    def __init__(self, capacity: int = 256, owner: str = ""):
+        self.capacity = int(capacity)
+        self.owner = owner
+        self._events: list[SessionEvent] = []
+        self.dropped = 0             # lifetime evictions
+        self._dropped_pending = 0    # evictions since the last drain
+        self._last_evicted_ts = 0.0
+
+    def append(self, event: SessionEvent) -> None:
+        if len(self._events) >= self.capacity:
+            evicted = self._events.pop(0)
+            self._last_evicted_ts = evicted.timestamp
+            self.dropped += 1
+            self._dropped_pending += 1
+        self._events.append(event)
+
+    def drain(self) -> list[SessionEvent]:
+        """Hand over (and clear) the pending events; when evictions happened
+        since the last drain, the first returned event is an
+        ``EVENTS_DROPPED`` marker accounting for them."""
+        out, self._events = self._events, []
+        if self._dropped_pending:
+            out.insert(0, SessionEvent(
+                EventKind.EVENTS_DROPPED, "", self.owner,
+                self._last_evicted_ts,
+                f"{self._dropped_pending} events evicted before drain "
+                f"(buffer capacity {self.capacity})"))
+            self._dropped_pending = 0
+        return out
+
+    def clear(self) -> None:
+        self._events.clear()
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+    def __iter__(self):
+        return iter(self._events)
 
 
 @dataclasses.dataclass(frozen=True)

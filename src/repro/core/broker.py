@@ -27,17 +27,17 @@ import itertools
 import threading
 import time
 import warnings
-from collections import deque
+from collections import OrderedDict
 from typing import Iterator, Sequence
 
 import numpy as np
 
-from repro.core.api import (AdmissionRejected, BrokerDown, CameraQosResult,
-                            DeliveredFrame, EventKind, FrameBatch,
-                            LatencyBreakdown, QosUpdate, RPCTimeout,
-                            SessionEvent, SloClass, Status, SubscribeSpec,
-                            SubscriptionOptions, SubscriptionState,
-                            resolve_slo)
+from repro.core.api import (AdmissionRejected, BoundedEventBuffer, BrokerDown,
+                            CameraQosResult, DeliveredFrame, EventKind,
+                            FrameBatch, LatencyBreakdown, QosUpdate,
+                            RPCTimeout, SessionEvent, SloClass, Status,
+                            SubscribeSpec, SubscriptionOptions,
+                            SubscriptionState, resolve_slo)
 from repro.core.channel import WirelessChannel
 from repro.core.characterization import CharacterizationTable, LatencyRegression
 from repro.core.controller import (ControlDecision, ControllerConfig,
@@ -99,13 +99,20 @@ class SharedFrameCache:
     ``CamBroker`` at ``register()``; a camera invalidates exactly its own
     keys on background change / recovery / re-characterization.  Hit/miss
     counters feed the multi-tenant benchmark's hit-rate gate.
+
+    Eviction is LRU: a ``get`` hit refreshes the entry's recency, so under
+    sustained tenant churn the entries every still-subscribed tenant reuses
+    each poll outlive the one-shot entries of departed tenants.  (Insertion-
+    order eviction here made the hit rate dip during churn floods: the
+    oldest-*inserted* entry is usually the hottest one.)
     """
 
     def __init__(self, capacity: int = 4096):
         self.capacity = int(capacity)
-        self._entries: dict[tuple, list] = {}
+        self._entries: OrderedDict[tuple, list] = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def get(self, key: tuple) -> list | None:
         entry = self._entries.get(key)
@@ -113,11 +120,15 @@ class SharedFrameCache:
             self.misses += 1
         else:
             self.hits += 1
+            self._entries.move_to_end(key)         # LRU: a hit is a use
         return entry
 
     def put(self, key: tuple, entry: list) -> None:
-        if len(self._entries) >= self.capacity:    # bounded: ring-ish evict
-            self._entries.pop(next(iter(self._entries)))
+        if key in self._entries:
+            self._entries.move_to_end(key)
+        elif len(self._entries) >= self.capacity:  # bounded: LRU evict
+            self._entries.popitem(last=False)
+            self.evictions += 1
         self._entries[key] = entry
 
     def invalidate(self, camera_id: str) -> None:
@@ -610,6 +621,10 @@ class _CamCursor:
     failed: bool = False
     drained: bool = False
     detached: bool = False
+    # credits granted to an in-flight fetch and not yet handed back; stays
+    # non-zero across a crash (the dead camera holds them) until
+    # ``reattach_camera`` returns them or teardown writes them off
+    credits_held: int = 0
 
     @property
     def active(self) -> bool:
@@ -627,8 +642,15 @@ class _Subscription:
     feedback_window: int
     credit_limit: int
     rr_offset: int = 0
-    events: deque = dataclasses.field(
-        default_factory=lambda: deque(maxlen=256))
+    # bounded (evict-before-overwrite + dropped counter, surfacing an
+    # EVENTS_DROPPED marker on drain); owner id is stamped at create time
+    events: BoundedEventBuffer = dataclasses.field(
+        default_factory=BoundedEventBuffer)
+    # credit ledger: every fetch credit granted / handed back / written off
+    # over this subscription's lifetime (held credits live on the cursors)
+    credits_granted: int = 0
+    credits_returned: int = 0
+    credits_dropped: int = 0
     # fleet control plane: one vmapped compiled controller step drives all
     # cameras of the subscription (built lazily once every camera has a
     # live controller; None until then / when not requested)
@@ -683,9 +705,9 @@ class _Session:
     slo: SloClass | None = None
     # session-level events (e.g. ADMISSION_REJECTED fires before the
     # subscription exists); drained by session_events alongside the
-    # per-subscription streams
-    events: deque = dataclasses.field(
-        default_factory=lambda: deque(maxlen=256))
+    # per-subscription streams; bounded like the per-subscription buffers
+    events: BoundedEventBuffer = dataclasses.field(
+        default_factory=BoundedEventBuffer)
 
 
 class EdgeBroker:
@@ -727,6 +749,9 @@ class EdgeBroker:
         self.frame_cache = SharedFrameCache()
         self._wire_budget = wire_budget
         self._admission_lock = threading.Lock()
+        # credit ledger of subscriptions already torn down (live ones carry
+        # their own counters); credit_report() folds both together
+        self._credit_totals = {"granted": 0, "returned": 0, "dropped": 0}
 
     # -- Mez API -------------------------------------------------------------------
     def connect(self, url: str) -> str:
@@ -770,6 +795,7 @@ class EdgeBroker:
         sid = f"sess-{next(self._ids)}"
         self._sessions[sid] = _Session(sid, application_id, tenant=tenant,
                                        slo=resolve_slo(slo))
+        self._sessions[sid].events.owner = sid
         return sid
 
     def close_session(self, session_id: str) -> Status:
@@ -890,6 +916,7 @@ class EdgeBroker:
                             opts.credit_limit, want_fleet=opts.fleet,
                             mesh=opts.mesh, tenant=tenant, slo=slo,
                             options=opts, seq=num)
+        rec.events.owner = sub_id
         if opts.auto_recharacterize:
             # lane order is the sorted camera-id order, matching the fleet
             # stack, so drift telemetry and fleet lanes line up.  With no
@@ -1102,6 +1129,27 @@ class EdgeBroker:
             }
         return {"budget_bps": budget, "offered_bps": offered,
                 "subscriptions": subs}
+
+    def credit_report(self) -> dict:
+        """Introspection: the fleet-wide credit ledger (live subscriptions
+        plus everything already torn down).
+
+        ``in_flight`` is what crashed-but-not-reattached cameras currently
+        hold; ``dropped`` is what teardown/detach wrote off; ``leaked`` is
+        the conservation residual ``granted - returned - in_flight -
+        dropped`` and must be 0 -- the gauntlet gates on it."""
+        granted = self._credit_totals["granted"]
+        returned = self._credit_totals["returned"]
+        dropped = self._credit_totals["dropped"]
+        in_flight = 0
+        for r in self._subscriptions.values():
+            granted += r.credits_granted
+            returned += r.credits_returned
+            dropped += r.credits_dropped
+            in_flight += sum(c.credits_held for c in r.cameras.values())
+        return {"granted": granted, "returned": returned,
+                "in_flight": in_flight, "dropped": dropped,
+                "leaked": granted - returned - in_flight - dropped}
 
     def _ensure_fleet(self, rec: _Subscription) -> FleetController | None:
         """Build the subscription's fleet control plane once every camera
@@ -1392,6 +1440,13 @@ class EdgeBroker:
         if decision is None:
             feedback = (float(np.percentile(cur.window, 95))
                         if cur.window else None)
+        # credit ledger: the window is granted to the camera for the
+        # duration of the fetch RPC and handed back when it returns.  A
+        # crash mid-fetch leaves the credits held by the dead camera; they
+        # come back at reattach_camera (or are written off at teardown),
+        # never silently -- credit_report()'s leaked term must stay 0.
+        cur.credits_held += budget
+        rec.credits_granted += budget
         try:
             frames = cam.fetch(cur.cursor, cur.spec.t_stop,
                                latency_feedback=feedback,
@@ -1406,6 +1461,8 @@ class EdgeBroker:
                 EventKind.RPC_TIMEOUT, camera_id, rec.sub_id, cur.cursor,
                 str(e)))
             return
+        cur.credits_held -= budget
+        rec.credits_returned += budget
         if not frames:
             cur.drained = True
             rec.invalidate_active()
@@ -1526,9 +1583,13 @@ class EdgeBroker:
         /operator re-attaches it here.  The cursor resumes exactly where it
         stopped -- frames published while the camera was down are still in
         its log and are delivered late rather than lost (at-most-once is
-        preserved; nothing is re-fetched).  FAIL when the subscription or
-        camera is unknown, or the camera is still crashed; OK (idempotent)
-        when the camera was never failed.
+        preserved; nothing is re-fetched).  Credits held by a fetch that was
+        in flight at crash time are returned here -- the crashed node can
+        never hand them back itself, and leaving them on the cursor leaks
+        the subscription's credit window a little more on every
+        crash/recover cycle.  FAIL when the subscription or camera is
+        unknown, or the camera is still crashed; OK (idempotent) when the
+        camera was never failed.
         """
         if self.crashed:
             raise RPCTimeout("EdgeBroker down")
@@ -1540,6 +1601,9 @@ class EdgeBroker:
         if cur is None or cam is None or cam.crashed:
             return Status.FAIL
         cur.failed = False
+        if cur.credits_held:
+            rec.credits_returned += cur.credits_held
+            cur.credits_held = 0
         rec.invalidate_active()
         return Status.OK
 
@@ -1552,6 +1616,13 @@ class EdgeBroker:
         rec = self._subscriptions.pop(subscription_id, None)
         if rec is None:
             return Status.FAIL
+        # fold the subscription's credit ledger into the broker totals;
+        # credits still held by (dead) cameras can never return now and are
+        # written off as dropped rather than vanishing from the accounting
+        held = sum(c.credits_held for c in rec.cameras.values())
+        self._credit_totals["granted"] += rec.credits_granted
+        self._credit_totals["returned"] += rec.credits_returned
+        self._credit_totals["dropped"] += rec.credits_dropped + held
         for cid in rec.cameras:
             key = (rec.application_id, cid)
             ids = self._sub_index.get(key)
@@ -1584,13 +1655,13 @@ class EdgeBroker:
         return rec.drift if rec is not None else None
 
     def subscription_events(self, subscription_id: str) -> list[SessionEvent]:
-        """Drain pending out-of-band events for a subscription."""
+        """Drain pending out-of-band events for a subscription.  The buffer
+        is bounded; when undrained events were evicted since the last call,
+        the first returned event is an ``EVENTS_DROPPED`` marker."""
         rec = self._subscriptions.get(subscription_id)
         if rec is None:
             return []
-        out = list(rec.events)
-        rec.events.clear()
-        return out
+        return rec.events.drain()
 
     def session_subscription_ids(self, session_id: str) -> list[str]:
         """Live subscription ids of a session (``Session.update_qos`` fans
@@ -1607,8 +1678,7 @@ class EdgeBroker:
         sess = self._sessions.get(session_id)
         if sess is None:
             return []
-        out: list[SessionEvent] = list(sess.events)
-        sess.events.clear()
+        out: list[SessionEvent] = sess.events.drain()
         for sub_id in sess.sub_ids:
             out.extend(self.subscription_events(sub_id))
         return out
@@ -1693,6 +1763,9 @@ class EdgeBroker:
             cur = rec.cameras.get(camera_id)
             if cur is not None and not cur.detached:
                 cur.detached = True
+                if cur.credits_held:     # detached cameras never reattach
+                    rec.credits_dropped += cur.credits_held
+                    cur.credits_held = 0
                 rec.invalidate_active()
                 detached = True
         return Status.OK if detached else Status.FAIL

@@ -357,6 +357,13 @@ class ScenarioResult:
     # timeline contains TenantJoin events): tenant -> {slo, admitted,
     # delivered, dropped, mean_accuracy, min_budget_scale, [f1]}
     tenant_stats: dict | None = None
+    # gauntlet telemetry -- kept OUT of compact() so golden traces are
+    # unaffected: per-tenant delivered-latency samples (seconds), the
+    # edge's credit ledger (EdgeBroker.credit_report, captured before
+    # teardown), and the shared-frame-cache counters
+    tenant_latencies: dict | None = None
+    credit_stats: dict | None = None
+    cache_stats: dict | None = None
 
     # -- trace queries -------------------------------------------------------
     def select(self, t0: float | None = None, t1: float | None = None, *,
@@ -497,6 +504,10 @@ class _Engine:
         self._base_distance = {c.camera_id: c.distance_m
                                for c in spec.cameras}
         self._ghosts: list[str] = []
+        # cameras that recovered while the edge broker was down: their
+        # subscription reattach (which returns any fetch credits the crash
+        # stranded) can only happen once the edge answers RPCs again
+        self._pending_reattach: list[str] = []
 
     def next_oneshot_after(self, t: float) -> float | None:
         for e in self.oneshot[self._fired:]:
@@ -534,6 +545,18 @@ class _Engine:
         while len(self._ghosts) > ghosts_wanted:
             ch.deactivate(self._ghosts.pop())
 
+    def _reattach(self, camera_id: str):
+        """Re-admit one recovered camera into the main subscription and
+        every tenant subscription sharing it (their held fetch credits
+        return; a tenant left failed would leak its lane for the rest of
+        the run)."""
+        status = self.system.edge.reattach_camera(
+            self.sub.subscription_id, camera_id)
+        for st in self.tenants.values():
+            self.system.edge.reattach_camera(
+                st["sub"].subscription_id, camera_id)
+        return status
+
     def _apply_oneshot(self, ev, t: float) -> None:
         entry = {"t": t, "at": ev.at, "kind": type(ev).__name__}
         if isinstance(ev, PeerJoin):
@@ -545,14 +568,23 @@ class _Engine:
             entry["camera_id"] = ev.camera_id
         elif isinstance(ev, CameraRecover):
             self.system.cams[ev.camera_id].recover()
-            status = self.system.edge.reattach_camera(
-                self.sub.subscription_id, ev.camera_id)
             entry["camera_id"] = ev.camera_id
-            entry["reattach"] = status.value
+            if self.system.edge.crashed:
+                # the node is back but no broker can re-admit it yet:
+                # defer to EdgeRecover
+                self._pending_reattach.append(ev.camera_id)
+                entry["reattach"] = "deferred"
+            else:
+                entry["reattach"] = self._reattach(ev.camera_id).value
         elif isinstance(ev, EdgeCrash):
             self.system.edge.crash()
         elif isinstance(ev, EdgeRecover):
             self.system.edge.recover()
+            if self._pending_reattach:
+                for cid in self._pending_reattach:
+                    self._reattach(cid)
+                entry["reattached"] = self._pending_reattach
+                self._pending_reattach = []
         elif isinstance(ev, QosChange):
             q = self.sub.update_qos(latency=ev.latency, accuracy=ev.accuracy,
                                     recharacterize=ev.recharacterize)
@@ -638,6 +670,10 @@ def _poll_tenants(engine: _Engine, system: MezSystem, max_frames: int,
                 stats["dropped"] += 1
             else:
                 stats["delivered"] += 1
+                # per-tenant delivered-latency samples (seconds): the
+                # gauntlet's tail-percentile pool; excluded from
+                # compact()/goldens
+                stats.setdefault("lat", []).append(float(d.latency.total))
             acc = frame_acc(d, cam)
             if acc is not None:
                 stats["acc_sum"] += acc
@@ -833,8 +869,10 @@ def run_scenario(
                                  frame_counts, clock):
                 break
         tenant_stats = None
+        tenant_latencies = None
         if engine.tenant_stats:
             tenant_stats = {}
+            tenant_latencies = {}
             for name, s in sorted(engine.tenant_stats.items()):
                 out = {"slo": s["slo"], "admitted": s["admitted"],
                        "delivered": s["delivered"], "dropped": s["dropped"],
@@ -844,6 +882,15 @@ def run_scenario(
                 if "counts" in s:
                     out["f1"] = det.f1_from_counts(*s["counts"])
                 tenant_stats[name] = out
+                tenant_latencies[name] = s.get("lat", [])
+        # gauntlet telemetry, captured BEFORE teardown: session close
+        # writes still-held credits off as dropped, which would mask the
+        # in_flight signal the crash-wave gate watches
+        credit_stats = system.edge.credit_report()
+        fc = system.edge.frame_cache
+        cache_stats = {"hits": fc.hits, "misses": fc.misses,
+                       "evictions": fc.evictions, "hit_rate": fc.hit_rate(),
+                       "size": len(fc), "capacity": fc.capacity}
         for st in engine.tenants.values():
             try:
                 st["session"].close()
@@ -869,4 +916,7 @@ def run_scenario(
         measured_counts=measured if spec.score_frames else None,
         drift_cache_size=drift_cache,
         drift_fire_counts=drift_fires,
-        tenant_stats=tenant_stats)
+        tenant_stats=tenant_stats,
+        tenant_latencies=tenant_latencies,
+        credit_stats=credit_stats,
+        cache_stats=cache_stats)

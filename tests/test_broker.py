@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core.api import RPCTimeout, Status, SubscribeSpec
-from repro.core.broker import MezSystem, NatsLikeSystem
+from repro.core.broker import MezSystem, NatsLikeSystem, SharedFrameCache
 from repro.core.channel import calibrated_channel
 from repro.core.characterization import characterize, fit_latency_regression
 from repro.core.log import LogSegmentStore
@@ -189,3 +189,48 @@ class TestFaultTolerance:
                 if attempt == 2:
                     sys.edge.recover()      # "kubernetes" restarts it
         assert attempts == 4
+
+
+class TestSharedFrameCacheLRU:
+    """Eviction must be least-recently-USED, not least-recently-inserted:
+    under tenant churn the oldest-inserted entry is usually the hottest
+    one (every still-subscribed tenant re-reads it each poll)."""
+
+    def test_hit_refreshes_recency(self):
+        cache = SharedFrameCache(capacity=3)
+        k = lambda ts: ("cam0", ts, ("t", 0))  # noqa: E731
+        for ts in (0.0, 0.2, 0.4):
+            cache.put(k(ts), [f"p{ts}", None])
+        assert cache.get(k(0.0)) is not None   # touch the oldest-inserted
+        cache.put(k(0.6), ["p0.6", None])      # over capacity: evict LRU
+        assert cache.evictions == 1
+        assert len(cache) == 3
+        # the touched entry survived; the least-recently-used one did not
+        assert cache.get(k(0.0)) is not None
+        assert cache.get(k(0.2)) is None
+
+    def test_eviction_order_without_hits_is_insertion_order(self):
+        cache = SharedFrameCache(capacity=2)
+        cache.put(("cam0", 0.0, "a"), ["p0", None])
+        cache.put(("cam0", 0.2, "a"), ["p1", None])
+        cache.put(("cam0", 0.4, "a"), ["p2", None])
+        assert cache.get(("cam0", 0.0, "a")) is None
+        assert cache.get(("cam0", 0.4, "a")) is not None
+
+    def test_put_existing_key_updates_without_eviction(self):
+        cache = SharedFrameCache(capacity=2)
+        cache.put(("cam0", 0.0, "a"), ["p0", None])
+        cache.put(("cam0", 0.2, "a"), ["p1", None])
+        cache.put(("cam0", 0.0, "a"), ["p0'", None])   # refresh, no evict
+        assert cache.evictions == 0
+        cache.put(("cam0", 0.4, "a"), ["p2", None])    # now 0.2 is LRU
+        assert cache.get(("cam0", 0.2, "a")) is None
+        assert cache.get(("cam0", 0.0, "a")) == ["p0'", None]
+
+    def test_invalidate_scopes_to_one_camera(self):
+        cache = SharedFrameCache(capacity=8)
+        cache.put(("cam0", 0.0, "a"), ["p0", None])
+        cache.put(("cam1", 0.0, "a"), ["p1", None])
+        cache.invalidate("cam0")
+        assert cache.get(("cam0", 0.0, "a")) is None
+        assert cache.get(("cam1", 0.0, "a")) is not None

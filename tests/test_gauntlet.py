@@ -1,0 +1,223 @@
+"""MQTT ingress bridge (topic scheme, QoS 0/1 onto credit backpressure)
+and the gauntlet heavy-traffic harness (seeded determinism, regression
+gate, full soak behind the slow marker)."""
+
+import numpy as np
+import pytest
+
+from benchmarks.check_regression import check_gauntlet
+from benchmarks.common import synthetic_controller_table
+from benchmarks.gauntlet import PHASES, run_gauntlet, run_phase
+from repro.core.broker import MezSystem
+from repro.core.channel import calibrated_channel
+from repro.core.characterization import fit_latency_regression
+from repro.core.mqtt_bridge import (MQTT_ERR_NO_CONN, MQTT_ERR_QUEUE_SIZE,
+                                    MQTT_ERR_SUCCESS, MqttBridge,
+                                    parse_topic, topic_for, topic_matches)
+from repro.data.camera import CameraConfig, SyntheticCamera
+
+
+@pytest.fixture(scope="module")
+def table():
+    return synthetic_controller_table()
+
+
+def bridge_system(table, *, n_cams=2, seed=3):
+    """A fleet with registered (empty-log) cameras: the bridge, not the
+    builder, is the ingress path."""
+    ch = calibrated_channel(seed=seed)
+    sys = MezSystem(ch)
+    sizes = np.linspace(table.sizes_sorted[0], table.sizes_sorted[-1], 12)
+    reg = fit_latency_regression(sizes, ch.regression_points(sizes, n=n_cams))
+    for i in range(n_cams):
+        cam = sys.add_camera(f"cam{i}")
+        src = SyntheticCamera(CameraConfig(camera_id=f"cam{i}",
+                                           dynamics="medium", seed=7))
+        cam.background = src.background
+        cam.set_target(0.100, 0.90, table, reg)
+    return sys
+
+
+def frames_for(camera_id, n, *, seed=7):
+    src = SyntheticCamera(CameraConfig(camera_id=camera_id,
+                                       dynamics="medium", seed=seed))
+    return list(src.stream(n))
+
+
+class TestTopicScheme:
+    def test_topic_round_trip(self):
+        assert topic_for("cam3") == "mez/cam3/frames"
+        assert parse_topic("mez/cam3/frames") == "cam3"
+
+    def test_parse_rejects_non_frame_topics(self):
+        for bad in ("mez/cam0", "mez/cam0/control", "other/cam0/frames",
+                    "mez//frames", "mez/+/frames", "mez/#"):
+            assert parse_topic(bad) is None
+
+    def test_wildcard_matching(self):
+        assert topic_matches("mez/+/frames", "mez/cam0/frames")
+        assert topic_matches("mez/#", "mez/cam0/frames")
+        assert topic_matches("#", "mez/cam0/frames")
+        assert topic_matches("mez/cam0/frames", "mez/cam0/frames")
+        assert not topic_matches("mez/+/frames", "mez/cam0/control")
+        assert not topic_matches("mez/+", "mez/cam0/frames")
+        assert not topic_matches("mez/cam1/frames", "mez/cam0/frames")
+
+
+class TestMqttRoundTrip:
+    def test_publish_subscribe_round_trip(self, table):
+        """The acceptance path: frames in over MQTT topics, FrameBatches
+        back out as topic messages, callbacks in paho shape."""
+        sys = bridge_system(table, n_cams=2)
+        bridge = MqttBridge(sys)
+        seen, acked = [], []
+        bridge.on_publish = lambda c, u, mid: acked.append(mid)
+        rc, _mid = bridge.subscribe("mez/+/frames",
+                                    lambda c, u, m: seen.append(m))
+        assert rc == MQTT_ERR_SUCCESS
+        for cid in ("cam0", "cam1"):
+            for ts, frame, _ in frames_for(cid, 5):
+                info = bridge.publish(topic_for(cid), frame, qos=1,
+                                      timestamp=ts)
+                assert info.rc == MQTT_ERR_SUCCESS and info.is_published()
+        msgs = bridge.pump(max_frames=32)
+        assert len(msgs) == len(seen) == 10
+        assert len(acked) == 10
+        per_cam = {}
+        for m in msgs:
+            cid = parse_topic(m.topic)
+            per_cam.setdefault(cid, []).append(m.timestamp)
+        for cid, stamps in per_cam.items():
+            assert stamps == sorted(stamps) and len(stamps) == 5
+        # frames landed in the broker logs exactly once (at-most-once)
+        assert len(sys.edge.replicas["cam0"]) == 5
+        assert bridge.stats()["delivered"] == 10
+
+    def test_unknown_topic_is_no_conn(self, table):
+        bridge = MqttBridge(bridge_system(table))
+        info = bridge.publish("mez/ghost/frames", None)
+        assert info.rc == MQTT_ERR_NO_CONN and not info.is_published()
+        assert bridge.subscribe("mez/ghost/frames")[0] == MQTT_ERR_NO_CONN
+
+
+class TestQosSemantics:
+    def test_qos0_drops_vs_qos1_retries_under_loss(self, table):
+        """Same seeded lossy hop: at-most-once sheds what the channel
+        eats; at-least-once retransmits (DUPs deduped by the log's
+        ordering rule) and delivers nearly everything."""
+        results = {}
+        for qos in (0, 1):
+            sys = bridge_system(table, n_cams=1)
+            bridge = MqttBridge(sys, loss_rate=0.4, seed=7)
+            for ts, frame, _ in frames_for("cam0", 30):
+                bridge.publish(topic_for("cam0"), frame, qos=qos,
+                               timestamp=ts)
+            results[qos] = (bridge.published, bridge.stats(),
+                            len(sys.cams["cam0"].log))
+        pub0, stats0, log0 = results[0]
+        pub1, stats1, log1 = results[1]
+        assert pub0 < 30 and stats0["dropped_qos0"] == 30 - pub0
+        assert stats0["retries"] == 0          # at most once: never retried
+        assert pub1 > pub0                     # retries recover losses
+        assert stats1["retries"] > 0
+        assert log1 == pub1                    # DUPs deduped: log sees one
+        assert stats1["give_ups"] == 30 - pub1
+
+    def test_qos1_duplicates_are_deduped_by_log_order(self, table):
+        """A lost PUBACK forces a DUP retransmission the log must reject
+        (timestamp <= last) -- the frame is delivered once."""
+        sys = bridge_system(table, n_cams=1)
+        bridge = MqttBridge(sys, loss_rate=0.35, seed=11)
+        for ts, frame, _ in frames_for("cam0", 30):
+            bridge.publish(topic_for("cam0"), frame, qos=1, timestamp=ts)
+        assert bridge.duplicates > 0
+        assert len(sys.cams["cam0"].log) == bridge.published
+
+
+class TestCreditBackpressure:
+    def test_qos0_shed_and_qos1_queued_when_credits_exhausted(self, table):
+        sys = bridge_system(table, n_cams=1)
+        bridge = MqttBridge(sys, ingress_credits=2)
+        bridge.subscribe("mez/cam0/frames")
+        stream = frames_for("cam0", 5)
+        for ts, frame, _ in stream[:2]:
+            assert bridge.publish(topic_for("cam0"), frame,
+                                  timestamp=ts).is_published()
+        assert bridge.credits("cam0") == 0
+        ts2, f2, _ = stream[2]
+        shed = bridge.publish(topic_for("cam0"), f2, qos=0, timestamp=ts2)
+        assert shed.rc == MQTT_ERR_QUEUE_SIZE and not shed.is_published()
+        ts3, f3, _ = stream[3]
+        parked = bridge.publish(topic_for("cam0"), f3, qos=1, timestamp=ts3)
+        assert parked.queued and not parked.is_published()
+        # delivery returns credits, which unpark the QoS 1 publish -- and
+        # the same drain keeps going, so the unparked frame flows too
+        assert len(bridge.pump()) == 3
+        assert parked.is_published()
+        assert bridge.pump() == []
+        assert bridge.stats()["queued_now"] == 0
+
+    def test_crashed_camera_queues_qos1_until_recovery(self, table):
+        sys = bridge_system(table, n_cams=1)
+        bridge = MqttBridge(sys)
+        stream = frames_for("cam0", 3)
+        sys.cams["cam0"].crash()
+        ts0, f0, _ = stream[0]
+        drop = bridge.publish(topic_for("cam0"), f0, qos=0, timestamp=ts0)
+        assert drop.rc == MQTT_ERR_NO_CONN
+        ts1, f1, _ = stream[1]
+        parked = bridge.publish(topic_for("cam0"), f1, qos=1, timestamp=ts1)
+        assert parked.queued
+        assert len(sys.cams["cam0"].log) == 0
+        sys.cams["cam0"].recover()
+        bridge.grant("cam0", 0)                # kick the flush path
+        assert parked.is_published()
+        assert len(sys.cams["cam0"].log) == 1
+
+
+class TestGauntletHarness:
+    def test_smoke_phase_is_seeded_deterministic(self):
+        """Two fresh runs of one phase agree bit-for-bit (minus wall
+        clock): the whole harness is driven by seeded generators."""
+        runs = []
+        for _ in range(2):
+            m = run_phase("qos_storm", PHASES["qos_storm"](7))
+            m.pop("wall_s")
+            runs.append(m)
+        assert runs[0] == runs[1]
+        assert runs[0]["frames_delivered"] > 0
+        assert runs[0]["credits"]["leaked"] == 0
+
+    def test_gate_catches_credit_leak_and_tail_regression(self):
+        baseline = {"seed": 7, "phases": {
+            "crash_wave": {"max_p999_ms": 100.0}}}
+        good = {"seed": 7, "phases": {"crash_wave": {
+            "p999_ms": 90.0, "frames_delivered": 10,
+            "credits": {"leaked": 0, "in_flight": 0, "dropped": 0},
+            "cache": {"hit_rate": 0.9}}}}
+        assert check_gauntlet(good, baseline) == []
+        leaky = {"seed": 7, "phases": {"crash_wave": {
+            "p999_ms": 150.0, "frames_delivered": 10,
+            "credits": {"leaked": 3, "in_flight": 2, "dropped": 1},
+            "cache": {"hit_rate": 0.9}}}}
+        failures = check_gauntlet(leaky, baseline)
+        assert any("leaked" in f for f in failures)
+        assert any("in_flight" in f for f in failures)
+        assert any("dropped" in f for f in failures)
+        assert any("p999_ms" in f for f in failures)
+        assert check_gauntlet({"seed": 8, "phases": {}}, baseline)
+
+    @pytest.mark.slow
+    def test_full_soak_conserves_credits_and_degrades(self):
+        """The long-phase soak (CI: race-guarded slow job): every phase's
+        ledger conserves and admission control still reacts."""
+        payload = run_gauntlet(seed=7, full=True)
+        for name, m in payload["phases"].items():
+            cr = m["credits"]
+            assert cr["leaked"] == 0, (name, cr)
+            assert cr["in_flight"] == 0, (name, cr)
+            assert cr["dropped"] == 0, (name, cr)
+            assert m["frames_delivered"] > 0
+        assert payload["phases"]["oversub"]["admission_rejected"] >= 1
+        assert payload["phases"]["oversub"]["tenant_degraded"] >= 1
+        assert payload["phases"]["churn64"]["cache"]["hit_rate"] >= 0.85

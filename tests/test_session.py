@@ -8,8 +8,9 @@ import numpy as np
 import pytest
 
 from repro.core.api import (AdmissionRejected, EventKind, FrameBatch,
-                            QosBounds, RPCTimeout, Status, SubscribeSpec,
-                            SubscriptionOptions, SubscriptionState)
+                            QosBounds, RPCTimeout, SessionEvent, Status,
+                            SubscribeSpec, SubscriptionOptions,
+                            SubscriptionState)
 from repro.core.broker import MezSystem
 from repro.core.channel import calibrated_channel
 from repro.core.characterization import characterize, fit_latency_regression
@@ -669,3 +670,115 @@ class TestTenantFleetParity:
         assert host_scale == fleet_scale   # f32-quantized identically
         assert host_keys == fleet_keys
         assert cache == 1                  # scale writes never retraced
+
+
+class TestCreditLedger:
+    """Fetch-credit conservation: granted - returned - in_flight - dropped
+    must stay 0, and a camera crash mid-poll must not leak the credits its
+    in-flight fetch held (they return at ``reattach_camera``)."""
+
+    def test_clean_stream_conserves_credits(self, table):
+        sys = build_system(table, n_cams=2, frames=10)
+        sess, sub = open_sub(sys, ["cam0", "cam1"])
+        while sub.poll(max_frames=8):
+            pass
+        sess.close()
+        rep = sys.edge.credit_report()
+        assert rep["granted"] > 0
+        assert rep["leaked"] == 0
+        assert rep["in_flight"] == 0
+        assert rep["dropped"] == 0
+
+    def test_crash_mid_poll_credits_return_on_reattach(self, table):
+        sys = build_system(table, n_cams=2, frames=10)
+        sess, sub = open_sub(sys, ["cam0", "cam1"])
+        assert sub.poll(max_frames=4)
+        # scripted crash mid-poll: the next poll's fetch grants cam0 its
+        # credit window, then the RPC dies -- the crashed node can never
+        # hand the credits back itself
+        sys.cams["cam0"].crash()
+        sub.poll(max_frames=4)
+        rep = sys.edge.credit_report()
+        assert rep["in_flight"] > 0        # held by the dead camera
+        assert rep["leaked"] == 0          # ... but accounted, not lost
+        sys.cams["cam0"].recover()
+        assert sys.edge.reattach_camera(sub.subscription_id,
+                                        "cam0") is Status.OK
+        rep = sys.edge.credit_report()
+        assert rep["in_flight"] == 0       # returned at reattach
+        assert rep["dropped"] == 0
+        assert rep["leaked"] == 0
+        # the stream resumes where it stopped and still conserves
+        while sub.poll(max_frames=8):
+            pass
+        sess.close()
+        rep = sys.edge.credit_report()
+        assert (rep["leaked"], rep["in_flight"], rep["dropped"]) == (0, 0, 0)
+
+    def test_repeated_crash_recover_cycles_do_not_accumulate(self, table):
+        sys = build_system(table, n_cams=2, frames=12)
+        sess, sub = open_sub(sys, ["cam0", "cam1"])
+        for _ in range(3):
+            sub.poll(max_frames=4)
+            sys.cams["cam0"].crash()
+            sub.poll(max_frames=4)         # strands cam0's window
+            sys.cams["cam0"].recover()
+            assert sys.edge.reattach_camera(sub.subscription_id,
+                                            "cam0") is Status.OK
+        rep = sys.edge.credit_report()
+        assert rep["in_flight"] == 0 and rep["leaked"] == 0
+        sess.close()
+
+    def test_unsubscribe_while_crashed_writes_credits_off(self, table):
+        """Detaching a crashed camera can never reattach it: its held
+        credits are written off as dropped, not leaked."""
+        sys = build_system(table, n_cams=2, frames=10)
+        sess, sub = open_sub(sys, ["cam0", "cam1"])
+        sub.poll(max_frames=4)
+        sys.cams["cam0"].crash()
+        sub.poll(max_frames=4)
+        assert sys.edge.credit_report()["in_flight"] > 0
+        assert sys.edge.unsubscribe("app", "cam0") is Status.OK
+        rep = sys.edge.credit_report()
+        assert rep["in_flight"] == 0
+        assert rep["dropped"] > 0
+        assert rep["leaked"] == 0
+        sess.close()
+
+
+class TestBoundedEventBuffer:
+    """Session/subscription event buffers are bounded (HostLog's evict-
+    before-overwrite contract): overflow evicts the oldest events, counts
+    them, and surfaces one EVENTS_DROPPED marker on the next drain."""
+
+    def test_overflow_surfaces_dropped_marker(self, table):
+        sys = build_system(table, n_cams=1, frames=10)
+        sess, sub = open_sub(sys, ["cam0"])
+        rec = sys.edge._subscriptions[sub.subscription_id]
+        rec.events.capacity = 4
+        for i in range(10):
+            rec.events.append(SessionEvent(
+                EventKind.RPC_TIMEOUT, "cam0", sub.subscription_id,
+                float(i), "synthetic overflow"))
+        evs = sub.events()
+        assert evs[0].kind is EventKind.EVENTS_DROPPED
+        assert "6 events" in evs[0].detail
+        assert len(evs) == 5               # marker + the 4 retained
+        assert [e.timestamp for e in evs[1:]] == [6.0, 7.0, 8.0, 9.0]
+        assert rec.events.dropped == 6
+        # the marker is one-shot: a drained buffer doesn't re-emit it
+        assert sub.events() == []
+        sess.close()
+
+    def test_no_marker_without_overflow(self, table):
+        sys = build_system(table, n_cams=1, frames=10)
+        sess, sub = open_sub(sys, ["cam0"])
+        rec = sys.edge._subscriptions[sub.subscription_id]
+        for i in range(3):
+            rec.events.append(SessionEvent(
+                EventKind.RPC_TIMEOUT, "cam0", sub.subscription_id,
+                float(i), "under capacity"))
+        evs = sub.events()
+        assert len(evs) == 3
+        assert all(e.kind is not EventKind.EVENTS_DROPPED for e in evs)
+        sess.close()
