@@ -356,6 +356,14 @@ def check_gauntlet(fresh: dict, baseline: dict) -> list[str]:
                     f"gauntlet[{name}].{key}: {m.get(key, 0)} fell below "
                     f"{floor} -- admission control stopped reacting to "
                     f"oversubscription")
+        for key in ("camera_migrated", "broker_overload"):
+            floor = gates.get(f"min_{key}")
+            if floor is not None and m.get(key, 0) < floor:
+                failures.append(
+                    f"gauntlet[{name}].{key}: {m.get(key, 0)} fell below "
+                    f"{floor} -- the federated herd stopped migrating "
+                    f"cameras / flagging overloaded brokers under the "
+                    f"scripted events")
     return failures
 
 

@@ -29,6 +29,10 @@ phase, so a phase's damage can't leak into the next):
   oversub     the wire budget is capped below aggregate demand while
               tenants of every SLO class pile on: admission control must
               degrade lower classes and reject the infeasible join.
+  federated   a two-broker herd serves the fleet through live camera
+              migrations, a broker-overload shed, and a rolling edge
+              upgrade; the credit ledger is summed herd-wide and the
+              migration blackout must stay inside the p99.9 ceiling.
 
 Tables are the shared deterministic synthetic controller tables (no
 characterization sweep, no detector, no disk cache), and every random
@@ -52,8 +56,9 @@ import numpy as np
 from benchmarks.common import Timer, emit, synthetic_controller_table
 from repro.core.channel import calibrated_channel
 from repro.core.characterization import fit_latency_regression
-from repro.core.scenario import (CameraCrash, CameraRecover, CameraSpec,
-                                 EdgeCrash, EdgeRecover, QosChange,
+from repro.core.scenario import (BrokerOverload, CameraCrash, CameraMigrate,
+                                 CameraRecover, CameraSpec, EdgeCrash,
+                                 EdgeRecover, QosChange, RollingUpgrade,
                                  ScenarioSpec, TenantJoin, TenantLeave,
                                  run_scenario)
 
@@ -191,11 +196,45 @@ def phase_oversub(seed: int, *, full: bool = False) -> ScenarioSpec:
         events=tuple(sorted(events, key=lambda e: e.at)))
 
 
+def phase_federated(seed: int, *, full: bool = False) -> ScenarioSpec:
+    """Federated herd under churn: two brokers split the fleet while 8
+    SLO-classed tenants stream; live ``CameraMigrate``s move cameras
+    between brokers mid-poll (the migration blackout must stay inside the
+    p99.9 ceiling -- no frame loss, no duplicate), a ``BrokerOverload``
+    halves one broker's backhaul so the overload policy sheds the newest
+    best-effort lanes, and a ``RollingUpgrade`` restarts every broker in
+    turn with zero subscriber-visible downtime.  The credit ledger is
+    summed HERD-wide, so conservation here proves the migration drain /
+    re-grant handshake leaks nothing."""
+    frames = 120 if full else 60
+    t_end = frames / FPS
+    events: list = [TenantJoin(at=round(0.2 + 0.1 * i, 3), tenant=f"f{i}",
+                               slo=SLO_CYCLE[i % 3]) for i in range(8)]
+    # live migrations against the default round-robin placement
+    # (cam0,cam2 -> broker 0; cam1,cam3 -> broker 1)
+    events.append(CameraMigrate(at=round(t_end * 0.25, 3),
+                                camera_id="cam0", to_broker=1))
+    events.append(CameraMigrate(at=round(t_end * 0.35, 3),
+                                camera_id="cam3", to_broker=0))
+    # degraded backhaul on broker 0: the overload policy must fire
+    # BROKER_OVERLOAD and shed newest best-effort lanes to broker 1
+    events.append(BrokerOverload(at=round(t_end * 0.5, 3), broker=0,
+                                 factor=0.5))
+    # rolling edge upgrade: migrate-then-restart each broker in turn
+    events.append(RollingUpgrade(at=round(t_end * 0.7, 3)))
+    return ScenarioSpec(
+        name="gauntlet-federated", cameras=_cameras(), frames=frames,
+        seed=seed + 4, workload=WORKLOAD, latency=LATENCY,
+        accuracy=ACCURACY, n_brokers=2,
+        events=tuple(sorted(events, key=lambda e: e.at)))
+
+
 PHASES = {
     "churn64": phase_churn64,
     "qos_storm": phase_qos_storm,
     "crash_wave": phase_crash_wave,
     "oversub": phase_oversub,
+    "federated": phase_federated,
 }
 
 
@@ -238,6 +277,8 @@ def run_phase(name: str, spec: ScenarioSpec) -> dict:
         "events": {k: int(v) for k, v in sorted(ev.items())},
         "tenant_degraded": int(ev.get("tenant_degraded", 0)),
         "admission_rejected": int(ev.get("admission_rejected", 0)),
+        "camera_migrated": int(ev.get("camera_migrated", 0)),
+        "broker_overload": int(ev.get("broker_overload", 0)),
         "rpc_timeouts": int(ev.get("rpc_timeout", 0)),
         "wall_s": round(t.seconds, 3),
     }

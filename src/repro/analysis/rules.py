@@ -1,4 +1,4 @@
-"""mezlint rules MZ01-MZ05 (plus MZ00 for malformed suppressions).
+"""mezlint rules MZ01-MZ08 (plus MZ00 for malformed suppressions).
 
 =====  ========================================================================
 MZ00   ``# mezlint: disable=`` without a ``-- justification``.
@@ -42,6 +42,12 @@ MZ07   Subscription config discipline: ``create_subscription(...)`` call
        ``options=SubscriptionOptions(...)`` -- the per-kwarg spelling
        (``controlled=``, ``fleet=``, ``mesh=``, ...) is deprecated, and
        ``**kwargs`` forwarding hides which spelling is used.
+MZ08   Broker construction discipline: direct ``EdgeBroker(...)``
+       construction outside the broker/federation core bypasses the herd's
+       routing table -- a camera registered on a hand-built broker can never
+       be migrated, rebalanced, or carried through a rolling upgrade.  Build
+       a ``MezSystem`` (single broker) or a ``BrokerHerd`` /
+       ``FederatedMezSystem`` (federated) instead.
 =====  ========================================================================
 """
 
@@ -617,6 +623,43 @@ def check_mz07(idx: Index) -> list[Finding]:
     return out
 
 
+# =============================================================================
+# MZ08 -- direct EdgeBroker construction outside the broker/federation core
+# =============================================================================
+
+# the broker module itself (MezSystem wires its single EdgeBroker) and the
+# federation tier (BrokerHerd owns its N EdgeBrokers) are the only blessed
+# construction sites
+MZ08_ALLOWED_MODULES = frozenset({
+    "repro.core.broker", "repro.core.federation",
+})
+
+
+def check_mz08(idx: Index) -> list[Finding]:
+    out = []
+    for name in sorted(idx.modules):
+        if name in MZ08_ALLOWED_MODULES:
+            continue
+        mod = idx.modules[name]
+        for node, scope in _walk_scoped(mod.tree, "<module>"):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            callee = func.attr if isinstance(func, ast.Attribute) else \
+                func.id if isinstance(func, ast.Name) else None
+            if callee != "EdgeBroker":
+                continue
+            out.append(_mk(
+                "MZ08", mod, node.lineno, scope,
+                "direct EdgeBroker(...) construction bypasses herd "
+                "routing: cameras on a hand-built broker cannot be "
+                "migrated, rebalanced, or rolled through an upgrade -- "
+                "build MezSystem or BrokerHerd/FederatedMezSystem "
+                "instead",
+                f"edge-broker@{node.lineno}"))
+    return out
+
+
 ALL_RULES = {
     "MZ00": check_mz00,
     "MZ01": check_mz01,
@@ -626,6 +669,7 @@ ALL_RULES = {
     "MZ05": check_mz05,
     "MZ06": check_mz06,
     "MZ07": check_mz07,
+    "MZ08": check_mz08,
 }
 
 

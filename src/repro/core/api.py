@@ -213,6 +213,15 @@ class EventKind(enum.Enum):
     EVENTS_DROPPED = "events_dropped"  # the bounded event buffer evicted
                                        # undrained events since the last
                                        # drain (detail carries the count)
+    BROKER_OVERLOAD = "broker_overload"  # a federated broker crossed its
+                                         # wire-budget / poll-latency
+                                         # watermark; the herd is shedding
+                                         # lanes off it (detail names the
+                                         # broker and the trigger)
+    CAMERA_MIGRATED = "camera_migrated"  # the herd moved this camera to
+                                         # another broker (detail carries
+                                         # "broker i -> j"); polling
+                                         # continues transparently
 
 
 @dataclasses.dataclass(frozen=True)

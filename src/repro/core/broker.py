@@ -262,6 +262,11 @@ class CamBroker:
         self.jax_tables = swap_tables(self.jax_tables, fresh)
         with self._version_lock:
             self.table_version += 1
+        # payloads cached under the superseded table are stale: a hot-swap
+        # (set_target / staleness injection / recharacterize) may recalibrate
+        # what a given (camera, ts, setting) key should serve, so a post-swap
+        # hit must never return a pre-swap transform
+        self._clear_payload_cache()
 
     def recharacterize(self, *, clip_len: int = RECHAR_CLIP_LEN,
                        min_accuracy: float | None = None,
@@ -1079,10 +1084,17 @@ class EdgeBroker:
         order = sorted(slo_subs, key=lambda r: (r.slo.priority, -r.seq))
         scales = {r.sub_id: 1.0 for r in slo_subs}
         for r in order:
-            if excess <= 1e-9:
-                break
             d, f = loads[r.sub_id]
             if d <= 0.0:
+                # a dark subscription (every lane failed/crashed/detached)
+                # offers nothing right now, but restoring it to full rate
+                # here would leapfrog the reverse-degradation restore order:
+                # when its cameras reattach it would run at scale 1.0 while
+                # later-degraded higher classes are still cut.  Hold its
+                # current scale; reattach_camera re-runs allocation.
+                scales[r.sub_id] = r.budget_scale
+                continue
+            if excess <= 1e-9:
                 continue
             cut = min(excess, d - f)
             if cut <= 0.0:
@@ -1605,7 +1617,116 @@ class EdgeBroker:
             rec.credits_returned += cur.credits_held
             cur.credits_held = 0
         rec.invalidate_active()
+        # the returning lane re-enters the wire-budget accounting: without
+        # this, a subscription that went dark mid-degradation resumes at a
+        # stale scale while other classes carry its share of the shortfall
+        if self._slo_subs():
+            with self._admission_lock:
+                self._reallocate(at=cur.cursor)
         return Status.OK
+
+    # -- federation support (herd camera migration) --------------------------------
+    def export_camera(self, camera_id: str, *, at: float = 0.0
+                      ) -> tuple[CamBroker, list, dict]:
+        """Detach a camera and everything it owns here, for a herd
+        migration.
+
+        Returns ``(cam, replica_tail, cursors)``: the camera-node broker
+        object itself (its ``HostLog``, live ``CharacterizationTable`` +
+        jitted table twin, and host PI controller all travel with it), the
+        edge replica's frames (the target replays them into a fresh
+        replica; its monotonic-timestamp rule dedupes any overlap), and the
+        per-subscription ``_CamCursor`` records keyed by local sub id (the
+        herd re-creates each as a part on the target and imports the cursor
+        so polling resumes exactly where it stopped).
+
+        Bookkeeping handled here, per the migration contract:
+
+        * in-flight fetch credits are DRAINED -- returned to each
+          subscription's ledger exactly like ``reattach_camera`` does for a
+          recovered crash (the fetch RPC can never complete against the old
+          route), so ``credit_report()`` stays conserved herd-wide;
+        * fleet subscriptions export the camera's lane state back into the
+          host controller (``FleetController.export_lane``) so the PI
+          integral survives the hand-off; the source fleet's lane goes
+          permanently invalid in place (the fused tick holds it, exactly
+          like a crashed camera) -- no rebuild, no retrace;
+        * the camera's entries in the shared frame cache are invalidated
+          (the source must never serve a payload for a camera it no longer
+          routes);
+        * subscriptions left with zero cameras are closed (their ledgers
+          fold into the broker totals) and the wire budget is reallocated.
+        """
+        if self.crashed:
+            raise RPCTimeout("EdgeBroker down")
+        cam = self._cams.get(camera_id)
+        if cam is None:
+            raise RPCTimeout(f"unknown camera {camera_id}")
+        cursors: dict[str, _CamCursor] = {}
+        emptied = []
+        for sub_id, rec in self._subscriptions.items():
+            cur = rec.cameras.get(camera_id)
+            if cur is None:
+                continue
+            if cur.credits_held:
+                rec.credits_returned += cur.credits_held
+                cur.credits_held = 0
+            if rec.fleet is not None and camera_id in rec.fleet.lane_of:
+                rec.fleet.export_lane(camera_id)
+            del rec.cameras[camera_id]
+            rec.invalidate_active()
+            cursors[sub_id] = cur
+            if not rec.cameras:
+                emptied.append(sub_id)
+            key = (rec.application_id, camera_id)
+            ids = self._sub_index.get(key)
+            if ids is not None:
+                if sub_id in ids:
+                    ids.remove(sub_id)
+                if not ids:
+                    del self._sub_index[key]
+        for sub_id in emptied:
+            self.close_subscription(sub_id)
+        replica = self.replicas.pop(camera_id, None)
+        tail = replica.snapshot() if replica is not None else []
+        self.frame_cache.invalidate(camera_id)
+        self.unregister(camera_id)
+        if not emptied and self._slo_subs():
+            # emptied subs already reallocated via close_subscription
+            with self._admission_lock:
+                self._reallocate(at=at)
+        return cam, tail, cursors
+
+    def adopt_camera(self, cam: CamBroker, *, replica_tail=()) -> None:
+        """Attach a migrated camera: register it (re-pointing its shared
+        cache at THIS edge's) and replay the source replica tail into the
+        fresh replica.  The log's ordering rule rejects any frame at or
+        before the replica's last timestamp, so the at-most-one frame both
+        brokers saw during the route flip lands exactly once."""
+        self.register(cam)
+        rep = self.replicas[cam.camera_id]
+        for ts, frame in replica_tail:
+            rep.append(ts, frame)
+
+    def import_camera_cursor(self, subscription_id: str, camera_id: str,
+                             state: _CamCursor) -> None:
+        """Install an exported cursor on a freshly-created part
+        subscription: polling resumes at the migrated cursor position (not
+        the spec's t_start -- nothing is re-fetched), the feedback window
+        carries over so the fleet lane's p95 seed matches the source, and
+        the failed flag survives (a camera that crashed mid-migration still
+        needs reattach_camera after recovery)."""
+        rec = self._subscriptions.get(subscription_id)
+        if rec is None:
+            raise RPCTimeout(f"unknown subscription {subscription_id}")
+        cur = rec.cameras.get(camera_id)
+        if cur is None:
+            raise RPCTimeout(f"camera {camera_id} not in {subscription_id}")
+        cur.cursor = max(cur.cursor, state.cursor)
+        cur.window[:] = list(state.window)
+        cur.failed = state.failed
+        cur.drained = state.drained
+        rec.invalidate_active()
 
     def close_subscription(self, subscription_id: str) -> Status:
         """Explicit teardown: evicts the record and scrubs the legacy

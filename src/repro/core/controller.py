@@ -890,6 +890,25 @@ class FleetController:
     def __len__(self) -> int:
         return len(self._cams)
 
+    def export_lane(self, camera_id: str) -> tuple[float, int]:
+        """Write one lane's live PI state back into the camera's host
+        controller and return it.
+
+        In fleet mode the stacked lanes -- not the host fields -- own the
+        live integral/operating point, so a camera leaving this fleet (herd
+        migration hands it to another broker) must carry its lane state out
+        through the host controller: the receiving fleet's ``_build_stack``
+        seeds from exactly these fields, so the PI integral survives the
+        hand-off with no retrace on either side (this is a host-side array
+        read + two float writes; the compiled tick is untouched)."""
+        i = self.lane_of[camera_id]
+        ctl = self._cams[i].controller
+        integral = float(self.state.integral[i])
+        current = int(self.state.current_idx[i])
+        ctl.integral = integral
+        ctl._current = current
+        return integral, current
+
     # -- live reconfiguration ------------------------------------------------
     def sync(self) -> tuple[list[int], list[int]]:
         """Fold per-camera retargets / table refreshes into the stack.

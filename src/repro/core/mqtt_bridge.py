@@ -237,8 +237,23 @@ class MqttBridge:
         self._queue.setdefault(camera_id, deque()).append(
             (ts, payload, info))
 
+    def _requeue_front(self, camera_id: str, ts: float, payload: np.ndarray,
+                       info: MqttMessageInfo) -> None:
+        """Re-park a message whose transmission found the camera down.
+
+        It goes back to the FRONT of the queue -- it was dequeued first, so
+        on recovery it must flush before anything parked behind it (QoS 1
+        preserves publish order).  ``queued_total`` is not bumped again: the
+        message was already counted when it first parked, and the log's
+        monotonic-timestamp rule would reject the reordered replay a
+        re-count would paper over."""
+        info.queued = True
+        self._queue.setdefault(camera_id, deque()).appendleft(
+            (ts, payload, info))
+
     def _transmit(self, camera_id: str, ts: float, payload: np.ndarray,
-                  qos: int, info: MqttMessageInfo) -> None:
+                  qos: int, info: MqttMessageInfo, *,
+                  from_queue: bool = False) -> None:
         """Run the (lossy) transmission state machine for one publish."""
         cam = self._cam(camera_id)
         attempts = 1 if qos == 0 else 1 + self.max_retries
@@ -256,7 +271,10 @@ class MqttBridge:
                     self.dropped_qos0 += 1
                     info.rc = MQTT_ERR_NO_CONN
                     return
-                self._enqueue(camera_id, ts, payload, info)
+                if from_queue:     # head-of-line again, ahead of newer parks
+                    self._requeue_front(camera_id, ts, payload, info)
+                else:              # fresh publish: parks behind older ones
+                    self._enqueue(camera_id, ts, payload, info)
                 return
             if accepted:
                 appended = True
@@ -293,7 +311,7 @@ class MqttBridge:
         while q and self._credits_of(camera_id) > 0:
             ts, payload, info = q.popleft()
             info.queued = False
-            self._transmit(camera_id, ts, payload, 1, info)
+            self._transmit(camera_id, ts, payload, 1, info, from_queue=True)
             if info.queued:        # camera still down: it re-parked itself
                 break
 

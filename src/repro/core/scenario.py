@@ -49,6 +49,7 @@ from repro.core.api import (AdmissionRejected, QosBounds, RPCTimeout,
                             SubscriptionOptions, resolve_slo)
 from repro.core.broker import MezSystem
 from repro.core.channel import calibrated_channel
+from repro.core.federation import FederatedMezSystem
 from repro.core.characterization import (CharacterizationTable, characterize,
                                          fit_latency_regression)
 from repro.core.drift import DriftConfig
@@ -61,6 +62,7 @@ __all__ = [
     "PeerJoin", "PeerLeave", "CameraCrash", "CameraRecover",
     "EdgeCrash", "EdgeRecover", "QosChange", "TableRefresh",
     "SceneShift", "TableStaleness", "TenantJoin", "TenantLeave",
+    "CameraMigrate", "BrokerOverload", "RollingUpgrade",
     "run_scenario",
 ]
 
@@ -169,13 +171,20 @@ class CameraRecover:
 
 @dataclasses.dataclass(frozen=True)
 class EdgeCrash:
-    """Edge-broker fault: every poll times out until recovery."""
+    """Edge-broker fault: every poll times out until recovery.
+
+    With ``broker`` set (federated scenarios, ``n_brokers > 1``) only that
+    broker of the herd goes down: its cameras' parts time out while the
+    rest of the herd keeps serving -- partial availability is the point of
+    federation."""
     at: float
+    broker: int | None = None
 
 
 @dataclasses.dataclass(frozen=True)
 class EdgeRecover:
     at: float
+    broker: int | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -253,6 +262,38 @@ class TableStaleness:
     factor: float = 0.5
 
 
+@dataclasses.dataclass(frozen=True)
+class CameraMigrate:
+    """Live herd migration (federated scenarios only): move one camera --
+    log tail, live tables, controller lane state -- to another broker
+    mid-stream.  The subscriber keeps polling transparently: no frame
+    loss, no duplicate, a ``CAMERA_MIGRATED`` event on the stream."""
+    at: float
+    camera_id: str
+    to_broker: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BrokerOverload:
+    """Fault injection (federated scenarios only): shrink one broker's
+    wire budget by ``factor`` (a degraded backhaul) and run the herd's
+    overload policy -- ``BROKER_OVERLOAD`` events fire and the newest
+    best-effort lanes migrate off the hot broker first, mirroring
+    admission control's degradation order."""
+    at: float
+    broker: int
+    factor: float = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class RollingUpgrade:
+    """Rolling edge upgrade (federated scenarios only): for each broker in
+    turn, migrate its cameras to the least-loaded peer, then crash +
+    recover the emptied broker.  Zero frame loss, no subscriber-visible
+    downtime."""
+    at: float
+
+
 _CONTINUOUS = (InterferenceSpike, CongestionRamp, DistanceDrift)
 # applied while frames are being published, before the polling loop starts
 # (the virtual clock of a SceneShift is the publish timestamp)
@@ -305,6 +346,11 @@ class ScenarioSpec:
     # tenants (None = the channel's base rate); only consulted once a
     # TenantJoin puts an SLO class on the fleet
     wire_budget: float | None = None
+    # >1 builds a FederatedMezSystem: a BrokerHerd of this many EdgeBrokers
+    # behind one routing table, unlocking CameraMigrate / BrokerOverload /
+    # RollingUpgrade events and broker-scoped EdgeCrash.  1 (default) keeps
+    # the single-broker MezSystem and a byte-identical trace.
+    n_brokers: int = 1
     events: tuple = ()
 
 
@@ -545,6 +591,16 @@ class _Engine:
         while len(self._ghosts) > ghosts_wanted:
             ch.deactivate(self._ghosts.pop())
 
+    def _herd(self, event_name: str):
+        """The BrokerHerd behind a federated system, or a clear error when
+        the scenario forgot ``n_brokers > 1``."""
+        herd = getattr(self.system, "herd", None)
+        if herd is None:
+            raise TypeError(
+                f"{event_name} requires a federated scenario: set "
+                f"n_brokers > 1 on the ScenarioSpec")
+        return herd
+
     def _reattach(self, camera_id: str):
         """Re-admit one recovered camera into the main subscription and
         every tenant subscription sharing it (their held fetch credits
@@ -577,14 +633,41 @@ class _Engine:
             else:
                 entry["reattach"] = self._reattach(ev.camera_id).value
         elif isinstance(ev, EdgeCrash):
-            self.system.edge.crash()
+            if ev.broker is None:
+                self.system.edge.crash()
+            else:
+                self._herd("EdgeCrash").crash(broker=ev.broker)
+                entry["broker"] = ev.broker
         elif isinstance(ev, EdgeRecover):
-            self.system.edge.recover()
-            if self._pending_reattach:
+            if ev.broker is None:
+                self.system.edge.recover()
+            else:
+                self._herd("EdgeRecover").recover(broker=ev.broker)
+                entry["broker"] = ev.broker
+            if self._pending_reattach and not self.system.edge.crashed:
                 for cid in self._pending_reattach:
                     self._reattach(cid)
                 entry["reattached"] = self._pending_reattach
                 self._pending_reattach = []
+        elif isinstance(ev, CameraMigrate):
+            herd = self._herd("CameraMigrate")
+            entry["camera_id"] = ev.camera_id
+            entry["to_broker"] = ev.to_broker
+            entry["moved"] = herd.migrate_camera(ev.camera_id, ev.to_broker,
+                                                 at=ev.at)
+        elif isinstance(ev, BrokerOverload):
+            herd = self._herd("BrokerOverload")
+            budget = herd.brokers[ev.broker]._wire_budget
+            if budget is None:
+                budget = self.system.channel.config.base_rate
+            herd.set_wire_budget(ev.broker, budget * ev.factor)
+            moves = herd.rebalance(at=ev.at)
+            entry["broker"] = ev.broker
+            entry["factor"] = ev.factor
+            entry["moves"] = [(cid, src, dst) for cid, src, dst in moves]
+        elif isinstance(ev, RollingUpgrade):
+            herd = self._herd("RollingUpgrade")
+            entry["upgraded"] = herd.rolling_upgrade(at=ev.at)
         elif isinstance(ev, QosChange):
             q = self.sub.update_qos(latency=ev.latency, accuracy=ev.accuracy,
                                     recharacterize=ev.recharacterize)
@@ -730,7 +813,11 @@ def run_scenario(
         return resolved[dynamics]
 
     ch = calibrated_channel(seed=spec.seed, workload=spec.workload)
-    system = MezSystem(ch, wire_budget=spec.wire_budget)
+    if spec.n_brokers > 1:
+        system = FederatedMezSystem(ch, n_brokers=spec.n_brokers,
+                                    wire_budget=spec.wire_budget)
+    else:
+        system = MezSystem(ch, wire_budget=spec.wire_budget)
     n_cams = len(spec.cameras)
     fps = max(c.fps for c in spec.cameras)
     events_log: list[dict] = []

@@ -1,0 +1,15 @@
+"""mezlint fixture: MZ08 violations -- EdgeBroker built directly (module
+scope, helper function, and via a module alias), bypassing herd routing."""
+
+import repro.core.broker as broker
+from repro.core.broker import EdgeBroker
+
+edge = EdgeBroker(log_capacity=64)
+
+
+def build_benchmark_broker(wire_budget):
+    return EdgeBroker(wire_budget=wire_budget)
+
+
+def build_aliased_broker():
+    return broker.EdgeBroker()

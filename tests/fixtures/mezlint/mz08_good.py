@@ -1,0 +1,22 @@
+"""mezlint fixture: MZ08 clean -- brokers come from MezSystem (single) or
+BrokerHerd / FederatedMezSystem (federated); referencing the EdgeBroker
+*type* (annotations, isinstance) is fine, only construction is flagged."""
+
+from repro.core.broker import EdgeBroker, MezSystem
+from repro.core.federation import BrokerHerd, FederatedMezSystem
+
+
+def build_single(channel):
+    return MezSystem(channel, wire_budget=1e7)
+
+
+def build_federated(channel):
+    return FederatedMezSystem(channel, n_brokers=2)
+
+
+def build_herd():
+    return BrokerHerd(n_brokers=3, wire_budget=1e7)
+
+
+def describe(edge: EdgeBroker) -> bool:
+    return isinstance(edge, EdgeBroker)

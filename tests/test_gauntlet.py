@@ -158,21 +158,45 @@ class TestCreditBackpressure:
         assert bridge.stats()["queued_now"] == 0
 
     def test_crashed_camera_queues_qos1_until_recovery(self, table):
+        """QoS 1 publishes against a crashed camera park; recovery flushes
+        them in ORIGINAL publish order (the log's monotonic-timestamp rule
+        silently rejects a reordered replay), each paying its ingress
+        credit exactly once, with ``queued_total`` counting the park --
+        not the requeue retries."""
         sys = bridge_system(table, n_cams=1)
         bridge = MqttBridge(sys)
-        stream = frames_for("cam0", 3)
+        bridge.subscribe("mez/cam0/frames")
+        stream = frames_for("cam0", 6)
         sys.cams["cam0"].crash()
         ts0, f0, _ = stream[0]
         drop = bridge.publish(topic_for("cam0"), f0, qos=0, timestamp=ts0)
         assert drop.rc == MQTT_ERR_NO_CONN
-        ts1, f1, _ = stream[1]
-        parked = bridge.publish(topic_for("cam0"), f1, qos=1, timestamp=ts1)
-        assert parked.queued
+        parked = [(ts, bridge.publish(topic_for("cam0"), frame, qos=1,
+                                      timestamp=ts))
+                  for ts, frame, _ in stream[1:5]]
+        assert all(info.queued for _, info in parked)
+        assert len(sys.cams["cam0"].log) == 0
+        assert bridge.stats()["queued_total"] == 4  # one count per park
+        assert bridge.credits("cam0") == bridge.ingress_credits
+        # a flush attempt while still down re-parks head-of-line: no
+        # re-count, no credit burned, nothing reordered
+        bridge.grant("cam0", 0)
+        assert bridge.stats()["queued_total"] == 4
+        assert bridge.stats()["queued_now"] == 4
         assert len(sys.cams["cam0"].log) == 0
         sys.cams["cam0"].recover()
         bridge.grant("cam0", 0)                # kick the flush path
-        assert parked.is_published()
-        assert len(sys.cams["cam0"].log) == 1
+        assert all(info.is_published() for _, info in parked)
+        assert bridge.stats()["queued_now"] == 0
+        # flushed in original publish order: the log kept every frame
+        assert [t for t, _ in sys.cams["cam0"].log.tail(8)] == \
+            [t for t, _ in parked]
+        # each flushed frame consumed exactly one credit...
+        assert bridge.credits("cam0") == bridge.ingress_credits - 4
+        # ...returned once on delivery, closing the window exactly
+        assert len(bridge.pump()) == 4
+        assert bridge.credits("cam0") == bridge.ingress_credits
+        assert bridge.stats()["queued_total"] == 4
 
 
 class TestGauntletHarness:

@@ -40,13 +40,14 @@ class TestRuleFixtures:
         ("mz05_bad.py", "MZ05"),
         ("mz06_bad.py", "MZ06"),
         ("mz07_bad.py", "MZ07"),
+        ("mz08_bad.py", "MZ08"),
     ])
     def test_bad_fixture_triggers_rule(self, name, rule):
         assert rule in rules_of(lint(name))
 
     @pytest.mark.parametrize("name", [
         "mz01_good.py", "mz02_good.py", "mz03_good.py", "mz04_good.py",
-        "mz05_good.py", "mz06_good.py", "mz07_good.py",
+        "mz05_good.py", "mz06_good.py", "mz07_good.py", "mz08_good.py",
     ])
     def test_good_fixture_is_clean(self, name):
         assert lint(name) == []
@@ -81,6 +82,15 @@ class TestRuleFixtures:
         assert any(d.startswith("legacy-kwargs:slo,tenant") for d in details)
         assert any(d.startswith("star-kwargs") for d in details)
 
+    def test_mz08_flags_every_construction_spelling(self):
+        findings = [f for f in lint("mz08_bad.py") if f.rule == "MZ08"]
+        # module-scope, helper-function, and module-alias spellings
+        assert len(findings) == 3
+        scopes = {f.scope for f in findings}
+        assert "<module>" in scopes
+        assert "build_benchmark_broker" in scopes
+        assert "build_aliased_broker" in scopes
+
     def test_mz05_flags_closure_and_interpret_and_parity(self):
         details = {f.detail for f in lint("mz05_bad.py")}
         assert "closure:_kernel.scale" in details
@@ -112,7 +122,7 @@ class TestRuleFixtures:
 class TestCli:
     @pytest.mark.parametrize("name", [
         "mz01_bad.py", "mz02_bad.py", "mz03_bad.py", "mz04_bad.py",
-        "mz05_bad.py", "mz06_bad.py", "mz07_bad.py",
+        "mz05_bad.py", "mz06_bad.py", "mz07_bad.py", "mz08_bad.py",
     ])
     def test_bad_fixture_exits_nonzero(self, name):
         assert main([str(FIXDIR / name), "--no-baseline"]) == 1

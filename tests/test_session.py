@@ -12,6 +12,7 @@ from repro.core.api import (AdmissionRejected, EventKind, FrameBatch,
                             SubscribeSpec, SubscriptionOptions,
                             SubscriptionState)
 from repro.core.broker import MezSystem
+from repro.core import knobs as K
 from repro.core.channel import calibrated_channel
 from repro.core.characterization import characterize, fit_latency_regression
 from repro.core import detector as det
@@ -526,6 +527,81 @@ class TestAdmissionControl:
                            options=SubscriptionOptions(admission="maybe"))
         sess.close()
 
+    def test_multi_round_join_leave_restores_gold_first(self, table):
+        """Scripted multi-round join/leave: every leave must land the
+        fleet on exactly the allocation the remaining join-set produced on
+        the way in -- gold lanes return to full rate first while the
+        best_effort lane holds its earlier cut (reverse-degradation
+        restore order)."""
+        d, f = slo_loads(table)
+        sys = build_system(table, n_cams=2, wire_budget=2.4 * d)
+        client = MezClient(sys)
+
+        def snap():
+            return {sid: info["scale"] for sid, info in
+                    sys.edge.wire_report()["subscriptions"].items()}
+
+        be_sess = client.open_session("be", tenant="be", slo="best_effort")
+        be = be_sess.subscribe("cam1", 0.0, 100.0, qos=QosBounds(0.1, 0.9))
+        g1_sess = client.open_session("g1", tenant="g1", slo="gold")
+        g1 = g1_sess.subscribe("cam0", 0.0, 100.0, qos=QosBounds(0.1, 0.9))
+        round1 = snap()
+        assert set(round1.values()) == {1.0}   # both fit whole
+        g2_sess = client.open_session("g2", tenant="g2", slo="gold")
+        g2 = g2_sess.subscribe("cam0", 0.0, 100.0, qos=QosBounds(0.1, 0.9))
+        round2 = snap()
+        assert round2[g1.subscription_id] == 1.0
+        assert round2[g2.subscription_id] == 1.0
+        assert round2[be.subscription_id] < 1.0    # BE absorbed the join
+        g3_sess = client.open_session("g3", tenant="g3", slo="gold")
+        g3 = g3_sess.subscribe("cam0", 0.0, 100.0, qos=QosBounds(0.1, 0.9))
+        round3 = snap()
+        # deeper round: BE cut further, the NEWEST golds absorb the rest,
+        # the oldest gold is the last one standing whole
+        assert round3[be.subscription_id] < round2[be.subscription_id]
+        assert round3[g3.subscription_id] < 1.0
+        assert round3[g1.subscription_id] == 1.0
+        g3_sess.close()
+        # gold back whole FIRST; BE still holds its round-2 cut
+        assert snap() == round2
+        g2_sess.close()
+        assert snap() == round1
+        g1_sess.close()
+        be_sess.close()
+
+    def test_leave_with_crashed_lane_keeps_restore_order(self, table):
+        """A best_effort lane whose camera is down at leave-time offers
+        zero demand, but restoring it to full rate then would leapfrog the
+        reverse-degradation order -- it must hold its degraded scale, and
+        the reattach-triggered reallocation must keep it at or below every
+        still-degraded gold lane."""
+        d, f = slo_loads(table)
+        sys = build_system(table, n_cams=2, wire_budget=1.6 * d)
+        client = MezClient(sys)
+        be_sess = client.open_session("be", tenant="be", slo="best_effort")
+        be = be_sess.subscribe("cam1", 0.0, 100.0, qos=QosBounds(0.1, 0.9))
+        golds = []
+        for name in ("g1", "g2", "g3"):
+            sess = client.open_session(name, tenant=name, slo="gold")
+            golds.append((sess, sess.subscribe(
+                "cam0", 0.0, 100.0, qos=QosBounds(0.1, 0.9))))
+        be_degraded = sub_scale(sys, be)
+        assert be_degraded < 1.0
+        sys.cams["cam1"].crash()
+        golds[2][0].close()                    # newest gold leaves
+        # the dark BE lane holds instead of jumping to 1.0
+        assert sub_scale(sys, be) == be_degraded
+        assert sub_scale(sys, golds[0][1]) == 1.0   # oldest gold whole again
+        sys.cams["cam1"].recover()
+        sys.edge.reattach_camera(be.subscription_id, "cam1")
+        be_scale = sub_scale(sys, be)
+        g2_scale = sub_scale(sys, golds[1][1])
+        assert be_scale < 1.0                  # reallocated, still cut
+        assert be_scale <= g2_scale            # never outruns a cut gold
+        for sess, _ in golds[:2]:
+            sess.close()
+        be_sess.close()
+
 
 class TestSharedFrameCache:
     def test_n_tenants_one_transform(self, table):
@@ -569,6 +645,37 @@ class TestSharedFrameCache:
         sys.cams["cam0"].recharacterize()
         assert len(cache) == n - keys0
         assert all(k[0] != "cam0" for k in cache._entries)
+        sess.close()
+
+    def test_table_swap_drops_stale_cached_payloads(self, table):
+        """A hot table swap (staleness injection / set_target both route
+        through ``_install_jax_tables``) must invalidate the camera's
+        shared-cache entries: a post-swap hit has to be byte-identical to
+        a freshly computed transform, never a pre-swap payload."""
+        sys = build_system(table, n_cams=2, frames=4)
+        sess, sub = open_sub(sys, ["cam0", "cam1"])
+        while sub.poll(max_frames=4):
+            pass
+        cache = sys.edge.frame_cache
+        cam = sys.cams["cam0"]
+        ts, frame = cam.log.tail(1)[0]
+        tbl = cam.controller.table
+        setting = next(tbl.setting_for(i) for i in range(len(tbl.settings))
+                       if tbl.setting_for(i).artifact == 0)
+        entry = cam._transform_cached(ts, frame, setting)
+        np.testing.assert_array_equal(entry[0],
+                                      K.transform_frame(frame, setting))
+        # poison the cached payload in place: it now stands for a
+        # transform calibrated under the superseded table
+        entry[0] = np.zeros_like(entry[0])
+        assert cam._transform_cached(ts, frame, setting)[0] is entry[0]
+        assert cam.inject_table_staleness()
+        post = cam._transform_cached(ts, frame, setting)[0]
+        assert post is not entry[0]
+        np.testing.assert_array_equal(post,
+                                      K.transform_frame(frame, setting))
+        # the swap only touched cam0: the neighbour's entries survived
+        assert any(k[0] == "cam1" for k in cache._entries)
         sess.close()
 
 
